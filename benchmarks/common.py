@@ -1,0 +1,148 @@
+"""Shared infrastructure for the paper-table benchmarks.
+
+Scaled-down but structurally faithful reproduction of §5: three trace sets
+(HPC2N-like real-world, unscaled Lublin synthetic, load-scaled synthetic),
+the Theorem-1 lower bound per trace, and a result cache so Tables 2/3/4 and
+Figures 1/3/4 share simulation runs.
+
+Scale knobs: the paper uses 100-182 traces x 1000 jobs x 128 nodes; the
+default here is QUICK (fewer/smaller traces) so ``python -m benchmarks.run``
+finishes on one CPU core.  Pass ``--full`` for the paper-scale study.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.sched.simulator import SimParams, SimResult, simulate
+from repro.workloads.hpc2n import hpc2n_like_trace
+from repro.workloads.lublin import lublin_trace, scale_to_load
+
+RESULTS_DIR = "experiments/results"
+
+#: Table-2 policy subset (the paper's headline algorithms; all OPT=MIN)
+TABLE2_POLICIES = [
+    "FCFS",
+    "EASY",
+    "Greedy */OPT=MIN",
+    "GreedyP */OPT=MIN",
+    "GreedyPM */OPT=MIN",
+    "Greedy/per/OPT=MIN",
+    "GreedyP/per/OPT=MIN/MINVT=600",
+    "GreedyPM/per/OPT=MIN/MINVT=600",
+    "GreedyP */per/OPT=MIN/MINVT=600",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "MCB8 */OPT=MIN/MINVT=600",
+    "MCB8/per/OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+    "/stretch-per/OPT=MAX",
+]
+
+BEST_POLICIES = [
+    "GreedyP */per/OPT=MIN/MINVT=600",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+]
+
+
+@dataclass
+class Scale:
+    n_traces: int = 3
+    n_jobs: int = 250
+    n_nodes: int = 64
+    loads: Tuple[float, ...] = (0.3, 0.7)
+    fig_loads: Tuple[float, ...] = (0.2, 0.5, 0.8)
+    periods: Tuple[float, ...] = (600.0, 1200.0, 3000.0, 6000.0, 12000.0)
+
+
+QUICK = Scale()
+FULL = Scale(n_traces=10, n_jobs=1000, n_nodes=128,
+             loads=(0.1, 0.3, 0.5, 0.7, 0.9),
+             fig_loads=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9))
+
+
+@dataclass
+class Trace:
+    name: str            # set name: real | unscaled | scaled
+    seed: int
+    load: Optional[float]
+    specs: list
+    n_nodes: int
+    bound: float = 0.0
+
+
+class Bench:
+    """Trace registry + memoized simulation."""
+
+    def __init__(self, scale: Scale):
+        self.scale = scale
+        self._traces: Dict[str, List[Trace]] = {}
+        self._cache: Dict[Tuple[str, float, str], SimResult] = {}
+
+    # ---- trace sets -----------------------------------------------------
+    def traces(self, kind: str) -> List[Trace]:
+        if kind in self._traces:
+            return self._traces[kind]
+        s = self.scale
+        out: List[Trace] = []
+        if kind == "real":
+            for seed in range(s.n_traces):
+                specs = hpc2n_like_trace(n_jobs=s.n_jobs, seed=seed)
+                out.append(Trace("real", seed, None, specs, 128))
+        elif kind == "unscaled":
+            for seed in range(s.n_traces):
+                specs = lublin_trace(n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=seed)
+                out.append(Trace("unscaled", seed, None, specs, s.n_nodes))
+        elif kind == "scaled":
+            for seed in range(s.n_traces):
+                base = lublin_trace(n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=seed)
+                for load in s.loads:
+                    specs = scale_to_load(base, s.n_nodes, load)
+                    out.append(Trace("scaled", seed, load, specs, s.n_nodes))
+        else:
+            raise KeyError(kind)
+        for tr in out:
+            tr.bound = max_stretch_lower_bound(tr.specs, tr.n_nodes)
+        self._traces[kind] = out
+        return out
+
+    # ---- simulation -----------------------------------------------------
+    def run(self, tr: Trace, policy: str,
+            period: float = 600.0) -> SimResult:
+        key = (f"{tr.name}:{tr.seed}:{tr.load}", period, policy)
+        if key not in self._cache:
+            params = SimParams(n_nodes=tr.n_nodes, period=period)
+            self._cache[key] = simulate(tr.specs, policy, params)
+        return self._cache[key]
+
+    def degradations(self, kind: str, policy: str,
+                     period: float = 600.0) -> np.ndarray:
+        return np.array([
+            self.run(tr, policy, period).max_stretch / tr.bound
+            for tr in self.traces(kind)
+        ])
+
+
+def write_csv(name: str, header: Sequence[str], rows: Sequence[Sequence]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path
+
+
+def fmt_table(header: Sequence[str], rows: Sequence[Sequence], title: str) -> str:
+    widths = [max(len(str(h)), *(len(str(r[i])) for r in rows)) if rows else len(str(h))
+              for i, h in enumerate(header)]
+    lines = [f"== {title} =="]
+    lines.append("  ".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    for r in rows:
+        lines.append("  ".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(lines)

@@ -1,0 +1,48 @@
+"""Figure 1: average degradation from bound vs offered load."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.sched.simulator import SimParams, simulate
+from repro.workloads.lublin import lublin_trace, scale_to_load
+
+from .common import Bench, fmt_table, write_csv
+
+POLICIES = [
+    "EASY",
+    "GreedyPM */OPT=MIN",
+    "GreedyPM/per/OPT=MIN/MINVT=600",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+]
+
+
+def run(bench: Bench, verbose: bool = True):
+    s = bench.scale
+    rows = []
+    for load in s.fig_loads:
+        row = [load]
+        for policy in POLICIES:
+            ds = []
+            for seed in range(s.n_traces):
+                base = lublin_trace(n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=seed)
+                specs = scale_to_load(base, s.n_nodes, load)
+                lb = max_stretch_lower_bound(specs, s.n_nodes)
+                r = simulate(specs, policy, SimParams(n_nodes=s.n_nodes))
+                ds.append(r.max_stretch / lb)
+            row.append(round(float(np.mean(ds)), 1))
+        rows.append(row)
+    header = ["load"] + POLICIES
+    write_csv("fig1_degradation_vs_load.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows, "Figure 1: degradation vs load"))
+    hi = rows[-1]
+    claims = {
+        "best policy beats EASY >=10x at high load":
+            hi[4] * 10 <= hi[1],
+    }
+    if verbose:
+        for k, v in claims.items():
+            print(f"  claim: {k}: {'PASS' if v else 'FAIL'}")
+    return rows, claims

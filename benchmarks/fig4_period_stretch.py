@@ -1,0 +1,31 @@
+"""Figure 4: max-stretch degradation vs MCB8 period (robustness claim:
+a 20x period increase costs < ~3x stretch while underutilization improves)."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import BEST_POLICIES, Bench, fmt_table, write_csv
+
+
+def run(bench: Bench, verbose: bool = True):
+    pol = BEST_POLICIES[1]
+    rows = []
+    for period in bench.scale.periods:
+        row = [int(period)]
+        for kind in ("real", "unscaled", "scaled"):
+            d = bench.degradations(kind, pol, period=period)
+            row.append(round(float(d.mean()), 1))
+        rows.append(row)
+    header = ["period_s", "real", "unscaled", "scaled"]
+    write_csv("fig4_stretch_vs_period.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows, f"Figure 4: stretch vs period ({pol})"))
+    growth = rows[-1][3] / max(rows[0][3], 1e-9)
+    claims = {
+        f"{bench.scale.periods[-1]/600:.0f}x period costs <=4x stretch (scaled)":
+            growth <= 4.0,
+    }
+    if verbose:
+        for k, v in claims.items():
+            print(f"  claim: {k}: {'PASS' if v else 'FAIL'} (growth {growth:.2f}x)")
+    return rows, claims

@@ -1,0 +1,52 @@
+"""SS6.2: MCB8 execution time vs number of jobs (the 'can it run online'
+check: the paper reports <=4.5 s at 102 jobs on 2008 hardware; typical job
+inter-arrivals are orders of magnitude larger)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.job import JobSpec, JobState
+from repro.core.mcb8 import mcb8
+
+from .common import Bench, fmt_table, write_csv
+
+
+def _jobs(n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    out = []
+    for j in range(n):
+        spec = JobSpec(
+            jid=j, release=0.0, proc_time=1000.0,
+            n_tasks=int(rng.integers(1, 17)),
+            cpu_need=float(rng.choice([0.25, 1.0])),
+            mem_req=float(rng.choice([0.1] * 11 + [0.2, 0.4, 0.6, 0.8, 1.0])),
+        )
+        js = JobState(spec=spec)
+        js.vt = float(rng.uniform(1.0, 1000.0))
+        out.append(js)
+    return out
+
+
+def run(bench: Bench, verbose: bool = True, n_nodes: int = 128):
+    rows = []
+    for n in (10, 25, 50, 100, 200, 400):
+        ts = []
+        for seed in range(3):
+            jobs = _jobs(n, seed)
+            t0 = time.perf_counter()
+            mcb8(jobs, n_nodes, now=2000.0)
+            ts.append(time.perf_counter() - t0)
+        rows.append([n, round(float(np.mean(ts)) * 1e3, 1),
+                     round(float(np.max(ts)) * 1e3, 1)])
+    header = ["n_jobs", "avg_ms", "max_ms"]
+    write_csv("mcb8_runtime.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows, "SS6.2: MCB8 runtime vs #jobs"))
+    claims = {"MCB8 <= 4.5s at ~100 jobs (paper SS6.2)":
+              rows[3][2] <= 4500.0}
+    if verbose:
+        for k, v in claims.items():
+            print(f"  claim: {k}: {'PASS' if v else 'FAIL'}")
+    return rows, claims

@@ -1,0 +1,91 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and prints
+per (arch x shape x mesh): the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPs, and HBM bytes/chip."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.workloads.jobgen import HBM_BYTES
+
+from .common import fmt_table, write_csv
+
+DRYRUN_DIR = "experiments/dryrun"
+
+
+def load_records(mesh: str = "single") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def bytes_per_chip(rec: dict) -> float:
+    m = rec.get("memory_analysis", {})
+    return (m.get("argument_size_in_bytes", 0.0)
+            + m.get("temp_size_in_bytes", 0.0)
+            + m.get("output_size_in_bytes", 0.0)
+            - m.get("alias_size_in_bytes", 0.0))
+
+
+def jobgen_records(mesh: str = "single") -> List[dict]:
+    """Adapter: dry-run artifacts -> repro.workloads.jobgen record format."""
+    out = []
+    for rec in load_records(mesh):
+        if rec.get("status") != "ok":
+            continue
+        r = rec["roofline"]
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "compute_s": r["compute_s"], "memory_s": r["memory_s"],
+            "collective_s": r["collective_s"],
+            "bytes_per_device": bytes_per_chip(rec),
+            "n_chips": rec["chips"],
+        })
+    return out
+
+
+def run(bench=None, verbose: bool = True, mesh: str = "single"):
+    rows = _run_mesh(verbose, mesh)
+    # multi-pod pass: compile-only artifacts (no extrapolation; the roofline
+    # table proper is single-pod) — emitted as a coverage/fit report
+    _run_mesh(verbose, "multi")
+    return rows
+
+
+def _run_mesh(verbose: bool, mesh: str):
+    rows = []
+    n_ok = n_skip = 0
+    for rec in load_records(mesh):
+        if rec.get("status") == "skipped":
+            n_skip += 1
+            rows.append([rec["arch"], rec["shape"], "SKIP", "-", "-", "-", "-",
+                         "-", rec.get("reason", "")[:38]])
+            continue
+        if rec.get("status") != "ok":
+            rows.append([rec["arch"], rec["shape"], "FAIL", "-", "-", "-", "-",
+                         "-", ""])
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        bpc = bytes_per_chip(rec)
+        rows.append([
+            rec["arch"], rec["shape"], r["bottleneck"],
+            f"{r['compute_s']:.3g}", f"{r['memory_s']:.3g}",
+            f"{r['collective_s']:.3g}",
+            f"{rec.get('model_vs_hlo_flops', 0.0):.2f}",
+            f"{bpc/2**30:.1f}", "fits" if bpc <= HBM_BYTES else "OVER",
+        ])
+    header = ["arch", "shape", "bottleneck", "compute_s", "memory_s",
+              "collective_s", "model/hlo", "GiB/chip", "hbm"]
+    write_csv(f"roofline_{mesh}.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows, f"Roofline ({mesh}-pod)"))
+        print(f"  {n_ok} ok, {n_skip} skipped (documented), "
+              f"{len(rows)-n_ok-n_skip} missing/failed of {len(rows)}")
+    return rows

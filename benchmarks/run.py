@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure + the roofline and
+TPU-cluster benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick scale
+    PYTHONPATH=src python -m benchmarks.run --full     # paper scale
+    PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (fig1_load, fig4_period_stretch, mcb8_runtime, roofline,
+               table2_stretch, table3_costs, table4_underutilization,
+               tpu_cluster)
+from .common import FULL, QUICK, Bench
+
+BENCHES = {
+    "table2": table2_stretch.run,
+    "table3": table3_costs.run,
+    "table4": table4_underutilization.run,
+    "fig1": fig1_load.run,
+    "fig4": fig4_period_stretch.run,
+    "mcb8_runtime": mcb8_runtime.run,
+    "roofline": roofline.run,
+    "tpu_cluster": tpu_cluster.run,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale study")
+    ap.add_argument("--only", default="", help="comma-separated bench names")
+    args = ap.parse_args()
+
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
+    bench = Bench(FULL if args.full else QUICK)
+    failed = []
+    t_all = time.time()
+    for name in names:
+        print(f"\n### bench: {name} " + "#" * 40)
+        t0 = time.time()
+        try:
+            BENCHES[name](bench)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            failed.append(name)
+            print(f"  BENCH FAILED: {e!r}")
+        print(f"  ({time.time()-t0:.1f}s)")
+    print(f"\n[benchmarks] {len(names)-len(failed)}/{len(names)} benches ok "
+          f"in {time.time()-t_all:.1f}s"
+          + (f"; FAILED: {failed}" if failed else ""))
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

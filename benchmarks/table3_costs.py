@@ -1,0 +1,43 @@
+"""Table 3: preemption/migration costs (bandwidth, events/hour, events/job)
+over scaled traces with load >= 0.7."""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import Bench, TABLE2_POLICIES, fmt_table, write_csv
+
+
+def run(bench: Bench, verbose: bool = True):
+    traces = [t for t in bench.traces("scaled") if (t.load or 0) >= 0.7]
+    if not traces:       # quick scale may not include >=0.7; use max load
+        max_load = max(t.load or 0 for t in bench.traces("scaled"))
+        traces = [t for t in bench.traces("scaled") if t.load == max_load]
+    rows = []
+    for policy in TABLE2_POLICIES:
+        rs = [bench.run(t, policy) for t in traces]
+        bw = [r.bandwidth_gbps for r in rs]
+        rows.append([
+            policy,
+            round(float(np.mean(bw)), 3), round(float(np.max(bw)), 3),
+            round(float(np.mean([r.pmtn_per_hour for r in rs])), 2),
+            round(float(np.mean([r.mig_per_hour for r in rs])), 2),
+            round(float(np.mean([r.pmtn_per_job for r in rs])), 2),
+            round(float(np.mean([r.mig_per_job for r in rs])), 2),
+        ])
+    header = ["policy", "bw_gbps_avg", "bw_gbps_max",
+              "pmtn_per_hour", "mig_per_hour", "pmtn_per_job", "mig_per_job"]
+    write_csv("table3_costs.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows, "Table 3: preemption/migration costs (load>=0.7)"))
+    by = {r[0]: r for r in rows}
+    best = by["GreedyPM */per/OPT=MIN/MINVT=600"]
+    claims = {
+        "batch schedulers never preempt": by["FCFS"][3] == by["EASY"][3] == 0.0,
+        "best-policy bandwidth < 2 GB/s max (paper SS6.3)": best[2] < 2.0,
+        "MCB8-on-submit migrates most":
+            by["MCB8 */OPT=MIN/MINVT=600"][4] >= best[4],
+    }
+    if verbose:
+        for k, v in claims.items():
+            print(f"  claim: {k}: {'PASS' if v else 'FAIL'}")
+    return rows, claims

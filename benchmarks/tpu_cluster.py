@@ -1,0 +1,57 @@
+"""The adaptation experiment: DFRS scheduling a TPU-pod job mix.
+
+Job types are derived from the dry-run roofline artifacts (a bandwidth-bound
+decode job cannot use the MXU fraction a trainer can — the paper's
+fractional-use phenomenon, measured rather than assumed).  DFRS is compared
+against EASY on max bounded stretch and underutilization, closing the loop
+between the paper's claim and this framework's own workloads."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.sched.simulator import SimParams, simulate
+from repro.workloads.jobgen import tpu_job_types, tpu_trace
+
+from .common import BEST_POLICIES, Bench, fmt_table, write_csv
+from .roofline import jobgen_records
+
+
+def run(bench: Bench, verbose: bool = True):
+    recs = jobgen_records("single")
+    if not recs:
+        if verbose:
+            print("== TPU cluster bench: no dry-run artifacts yet; run "
+                  "`python -m repro.launch.dryrun --all` first ==")
+        return [], {}
+    types = tpu_job_types(recs, chips_per_task=16)
+    rows = []
+    pols = ["FCFS", "EASY"] + BEST_POLICIES
+    stats = {p: [] for p in pols}
+    for seed in range(bench.scale.n_traces):
+        specs = tpu_trace(types, n_jobs=bench.scale.n_jobs // 2,
+                          n_nodes=64, seed=seed, target_load=0.6)
+        lb = max_stretch_lower_bound(specs, 64)
+        for p in pols:
+            r = simulate(specs, p, SimParams(n_nodes=64))
+            stats[p].append((r.max_stretch / lb, r.underutilization))
+    for p in pols:
+        a = np.array(stats[p])
+        rows.append([p, round(float(a[:, 0].mean()), 1),
+                     round(float(a[:, 0].max()), 1),
+                     round(float(a[:, 1].mean()), 3)])
+    header = ["policy", "degr_avg", "degr_max", "underut_avg"]
+    write_csv("tpu_cluster.csv", header, rows)
+    if verbose:
+        print(fmt_table(header, rows,
+                        f"TPU job mix ({len(types)} job types from dry-run)"))
+    by = {r[0]: r for r in rows}
+    best = min(BEST_POLICIES, key=lambda p: by[p][1])
+    claims = {
+        "DFRS >= 5x better stretch than EASY on the TPU mix":
+            by[best][1] * 5 <= by["EASY"][1],
+    }
+    if verbose:
+        for k, v in claims.items():
+            print(f"  claim: {k}: {'PASS' if v else 'FAIL'}")
+    return rows, claims

@@ -1,0 +1,45 @@
+"""DFRS scheduling the framework's own TPU workloads.
+
+    PYTHONPATH=src python examples/cluster_sim.py
+
+Job types come from the multi-pod dry-run artifacts: each (arch x shape)
+cell's roofline terms give its chip-fraction "CPU need" (a bandwidth-bound
+decode cannot saturate the MXU) and HBM footprint.  DFRS then packs trainers
+and decoders onto the same pod slices — the paper's fractional-sharing idea,
+applied to this repo's own models.
+"""
+import sys
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.sched.simulator import SimParams, simulate
+from repro.workloads.jobgen import tpu_job_types, tpu_trace
+
+sys.path.insert(0, ".")
+from benchmarks.roofline import jobgen_records  # noqa: E402
+
+
+def main() -> int:
+    recs = jobgen_records("single")
+    if not recs:
+        print("no dry-run artifacts found; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return 1
+    types = tpu_job_types(recs, chips_per_task=16)
+    print(f"{len(types)} TPU job types from {len(recs)} dry-run cells; e.g.:")
+    for t in types[:6]:
+        print(f"  {t.name:38s} chip-frac {t.cpu_need:.2f} "
+              f"hbm {t.mem_req:.2f} slices {t.n_tasks}")
+
+    specs = tpu_trace(types, n_jobs=150, n_nodes=64, seed=7, target_load=0.6)
+    bound = max_stretch_lower_bound(specs, 64)
+    print(f"\n150 jobs on 64 pod-slices (load 0.6); bound {bound:.2f}")
+    for pol in ("FCFS", "EASY", "GreedyPM */per/OPT=MIN/MINVT=600"):
+        r = simulate(specs, pol, SimParams(n_nodes=64))
+        print(f"{pol:40s} max-stretch {r.max_stretch:9.1f} "
+              f"(x{r.max_stretch/bound:6.1f} bound)  underut "
+              f"{r.underutilization:.3f}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

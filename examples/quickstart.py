@@ -1,0 +1,42 @@
+"""Quickstart: schedule one synthetic workload with DFRS vs batch scheduling.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Generates a Lublin-Feitelson trace at load 0.7, computes the Theorem-1 lower
+bound, runs FCFS / EASY / the paper's best DFRS policy, and prints the
+max-bounded-stretch comparison — the paper's headline result in one screen.
+"""
+import sys
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.sched.simulator import SimParams, simulate
+from repro.workloads.lublin import lublin_trace, scale_to_load
+
+
+def main() -> int:
+    n_nodes, n_jobs, load = 64, 300, 0.7
+    print(f"cluster: {n_nodes} nodes; workload: {n_jobs} jobs at load {load}")
+    specs = scale_to_load(lublin_trace(n_jobs, n_nodes, seed=42), n_nodes, load)
+    bound = max_stretch_lower_bound(specs, n_nodes)
+    print(f"Theorem-1 lower bound on optimal max stretch: {bound:.2f}\n")
+
+    policies = [
+        "FCFS",
+        "EASY",
+        "GreedyP */OPT=MIN",
+        "GreedyPM */per/OPT=MIN/MINVT=600",
+    ]
+    print(f"{'policy':40s} {'max stretch':>12s} {'vs bound':>9s} "
+          f"{'pmtn/job':>9s} {'mig/job':>8s} {'underut':>8s}")
+    for pol in policies:
+        r = simulate(specs, pol, SimParams(n_nodes=n_nodes))
+        print(f"{pol:40s} {r.max_stretch:12.1f} {r.max_stretch/bound:9.1f} "
+              f"{r.pmtn_per_job:9.2f} {r.mig_per_job:8.2f} "
+              f"{r.underutilization:8.3f}")
+    print("\nDFRS (fractional, migratable allocations driven by max-min yield)"
+          "\nbeats batch scheduling on stretch by orders of magnitude.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,62 @@
+"""End-to-end LM training: a smollm-family model for a few hundred steps.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+Uses the reduced smollm config on this CPU container (pass --full-arch on a
+real TPU slice to train the published config under the production mesh via
+repro.launch.train).  Demonstrates the full substrate: deterministic data,
+AdamW + schedule, grad accumulation, async checkpointing, loss curve.
+"""
+import argparse
+import sys
+import time
+
+import jax
+
+from repro.configs import get_reduced
+from repro.train import checkpoint as ckpt
+from repro.train.data import data_for
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import init_train_state, make_train_step
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--microbatches", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = get_reduced("smollm-360m")
+    print(f"arch: {cfg.name} (reduced: {cfg.n_layers}L d={cfg.d_model}, "
+          f"{cfg.param_count()/1e6:.1f}M params)")
+    opt = OptConfig(lr=1e-3, warmup_steps=args.steps // 10,
+                    total_steps=args.steps)
+    data = data_for(cfg, args.batch, args.seq, seed=0)
+    step_fn = jax.jit(make_train_step(cfg, opt, microbatches=args.microbatches))
+    state = init_train_state(cfg, jax.random.PRNGKey(0))
+
+    t0, first = time.time(), None
+    for i in range(args.steps):
+        state, m = step_fn(state, data.batch_for_step(i))
+        loss = float(m["loss"])
+        first = first if first is not None else loss
+        if i % 25 == 0 or i == args.steps - 1:
+            print(f"step {i:4d}  loss {loss:.4f}  lr {float(m['lr']):.2e}  "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+        if (i + 1) % 100 == 0:
+            ckpt.save_async(args.ckpt_dir, i + 1, state)
+    ckpt.wait_pending()
+    dt = time.time() - t0
+    print(f"\n{args.steps} steps in {dt:.0f}s "
+          f"({dt/args.steps*1e3:.0f} ms/step); "
+          f"loss {first:.3f} -> {loss:.3f}; "
+          f"checkpoint at step {ckpt.latest_step(args.ckpt_dir)}")
+    assert loss < first, "training must reduce the loss"
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

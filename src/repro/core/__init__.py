@@ -1,0 +1,26 @@
+"""repro.core — the paper's contribution: DFRS scheduling algorithms.
+
+Dynamic Fractional Resource Scheduling (Casanova, Stillwell, Vivien, 2011):
+yield-driven fractional allocation of node resources with preemption and
+migration, plus the offline max-stretch lower bound used for evaluation.
+"""
+from .job import JobSpec, JobState, NodePool, PENDING, RUNNING, PAUSED, COMPLETED
+from .yield_alloc import allocate, maxmin_yields, avg_yields, min_yield
+from .greedy import greedy_place, greedy_p, greedy_pm, GreedyAdmission
+from .mcb8 import mcb8, mcb8_pack, MCB8Result
+from .stretch_opt import mcb8_stretch, improve_max_stretch, improve_avg_stretch, StretchResult
+from .equipartition import equipartition_schedule, max_stretch, thm4_instance
+from .bound import max_stretch_lower_bound, stretch_feasible
+from .policies import PolicySpec, parse_policy, TABLE1_POLICIES, all_paper_policies
+
+__all__ = [
+    "JobSpec", "JobState", "NodePool",
+    "PENDING", "RUNNING", "PAUSED", "COMPLETED",
+    "allocate", "maxmin_yields", "avg_yields", "min_yield",
+    "greedy_place", "greedy_p", "greedy_pm", "GreedyAdmission",
+    "mcb8", "mcb8_pack", "MCB8Result",
+    "mcb8_stretch", "improve_max_stretch", "improve_avg_stretch", "StretchResult",
+    "equipartition_schedule", "max_stretch", "thm4_instance",
+    "max_stretch_lower_bound", "stretch_feasible",
+    "PolicySpec", "parse_policy", "TABLE1_POLICIES", "all_paper_policies",
+]

@@ -1,0 +1,223 @@
+"""MCB8 — two-dimensional vector-packing resource allocation (paper §4.3).
+
+Fixing a target yield Y turns fluid CPU needs into CPU *requirements*
+(c_j * Y); the mapping problem then becomes 2-D vector packing (CPU, memory)
+which we solve with the Leinberger-style multi-capacity heuristic the paper
+calls MCB8: two lists (CPU-intensive / memory-intensive), each sorted by
+non-increasing largest requirement, packing always drawing from the list
+that goes against the current node imbalance.
+
+A binary search (accuracy 0.01) finds the largest feasible Y.  If no Y is
+feasible (memory-infeasible), the lowest-priority job is removed from
+consideration and the search restarts (§4.3).
+
+``pinned`` mappings support the MINVT/MINFT grace parameters: a pinned job,
+if it keeps running, must keep its current node mapping — it is pre-placed
+before the two-list packing fills the remainder.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .job import JobSpec, JobState
+
+__all__ = ["MCB8Result", "mcb8_pack", "mcb8"]
+
+_EPS = 1e-9
+Y_FLOOR = 0.01  # smallest yield probed; also the binary-search accuracy
+
+
+@dataclass
+class MCB8Result:
+    mappings: Dict[int, List[int]]   # jid -> node per task (scheduled jobs)
+    yld: float                       # achieved uniform target yield
+    removed: List[int]               # jids dropped from consideration
+
+
+@dataclass
+class _Item:
+    jid: int
+    cpu: float
+    mem: float
+    left: int                        # unassigned task count
+
+
+def mcb8_pack(
+    n_nodes: int,
+    jobs: Sequence[Tuple[int, float, float, int]],  # (jid, cpu_req, mem_req, n_tasks)
+) -> Optional[Dict[int, List[int]]]:
+    """One shot of the MCB8 packing heuristic.  Returns jid->mapping or None."""
+    cpu_free = np.ones(n_nodes)
+    mem_free = np.ones(n_nodes)
+    return _pack_core(n_nodes, jobs, {}, cpu_free, mem_free, {})
+
+
+def _sorted_arrays(entries):
+    """entries: list of (jid, cpu, mem, n_tasks) -> numpy columns sorted by
+    (-max requirement, jid).  Deterministic tie-break on jid: the paper's
+    MCB8 "always considers the tasks and the nodes in the same order" (§4.4
+    footnote), which is what keeps successive mappings stable and avoids
+    remapping churn; sorting only by the max requirement would break ties by
+    the caller's (time-varying, priority-sorted) order."""
+    entries = sorted(entries, key=lambda e: (-max(e[1], e[2]), e[0]))
+    jid = np.array([e[0] for e in entries], dtype=np.int64)
+    cpu = np.array([e[1] for e in entries])
+    mem = np.array([e[2] for e in entries])
+    left = np.array([e[3] for e in entries], dtype=np.int64)
+    return jid, cpu, mem, left
+
+
+def _pack_core(n_nodes, jobs, pre_placed, cpu_free, mem_free, out):
+    # Split + sort (§4.3): list 1 = CPU-intensive, list 2 = memory-intensive,
+    # each by non-increasing max requirement.
+    lists = [
+        _sorted_arrays([e for e in jobs if e[1] > e[2]]),    # CPU-intensive
+        _sorted_arrays([e for e in jobs if e[1] <= e[2]]),   # memory-intensive
+    ]
+    for e in jobs:
+        out.setdefault(int(e[0]), [])
+
+    def take_from(li: int, node: int, prefer_mem: bool) -> int:
+        """Place as many tasks of the first feasible item of list ``li`` as
+        the per-task heuristic would have placed consecutively — i.e. until
+        the node's (memory>CPU) imbalance preference flips, capacity runs
+        out, or the item's tasks are exhausted.  Exactly equivalent to the
+        one-task-at-a-time reference loop (capacity only shrinks, so the
+        first-feasible item cannot change while the preference holds)."""
+        jid, cpu, mem, left = lists[li]
+        if jid.size == 0:
+            return 0
+        cf, mf = cpu_free[node], mem_free[node]
+        ok = (left > 0) & (cpu <= cf + _EPS) & (mem <= mf + _EPS)
+        i = int(np.argmax(ok))
+        if not ok[i]:
+            return 0
+        # capacity caps (per-task feasibility after t prior placements)
+        k = int(left[i])
+        if cpu[i] > _EPS:
+            k = min(k, int((cf + _EPS) / cpu[i]))
+        if mem[i] > _EPS:
+            k = min(k, int((mf + _EPS) / mem[i]))
+        # preference-flip cap: preference is evaluated before each placement;
+        # d_s = (mf - cf) - s*(mem_i - cpu_i) must keep its sign for s<k.
+        d0 = mf - cf
+        delta = mem[i] - cpu[i]
+        if prefer_mem and delta > _EPS:          # d must stay > 0
+            k = min(k, max(1, int(np.ceil((d0 - _EPS) / delta))))
+        elif not prefer_mem and delta < -_EPS:   # d must stay <= 0
+            k = min(k, max(1, int(np.ceil((d0 + _EPS) / delta))))
+        k = max(k, 1)
+        left[i] -= k
+        cpu_free[node] -= k * cpu[i]
+        mem_free[node] -= k * mem[i]
+        out[int(jid[i])].extend([node] * k)
+        return k
+
+    remaining = int(lists[0][3].sum() + lists[1][3].sum())
+    for node in range(n_nodes):
+        while remaining > 0:
+            # Go against the imbalance: if available memory exceeds available
+            # CPU, consume memory first (pick a memory-intensive job).
+            prefer_mem = bool(mem_free[node] > cpu_free[node])
+            first, second = (1, 0) if prefer_mem else (0, 1)
+            placed = take_from(first, node, prefer_mem) or take_from(second, node, prefer_mem)
+            if placed:
+                remaining -= placed
+            else:
+                break
+        if remaining == 0:
+            break
+    if remaining > 0:
+        return None
+    out.update(pre_placed)
+    return out
+
+
+def _try_pack(
+    n_nodes: int,
+    items: Sequence[Tuple[int, float, float, int]],
+    pinned_full: Dict[int, Tuple[float, float, List[int]]],
+    alive: Optional[np.ndarray] = None,
+) -> Optional[Dict[int, List[int]]]:
+    """Pack with pinned jobs pre-placed.  pinned_full: jid -> (cpu_req,
+    mem_req, mapping)."""
+    cpu_free = np.ones(n_nodes)
+    mem_free = np.ones(n_nodes)
+    if alive is not None:
+        cpu_free[~alive] = -1.0
+        mem_free[~alive] = -1.0
+    pre: Dict[int, List[int]] = {}
+    for jid, (cpu_req, mem_req, mapping) in pinned_full.items():
+        for node in mapping:
+            cpu_free[node] -= cpu_req
+            mem_free[node] -= mem_req
+        pre[jid] = list(mapping)
+    if (cpu_free < -_EPS).any() or (mem_free < -_EPS).any():
+        return None
+    return _pack_core(n_nodes, items, pre, cpu_free, mem_free, {})
+
+
+def mcb8(
+    candidates: Sequence[JobState],
+    n_nodes: int,
+    now: float,
+    pinned: Optional[Dict[int, List[int]]] = None,
+    accuracy: float = Y_FLOOR,
+    alive: Optional[np.ndarray] = None,
+) -> MCB8Result:
+    """Full MCB8 allocation: binary search on yield + low-priority removal."""
+    pinned = dict(pinned or {})
+    active = sorted(candidates, key=lambda js: js.priority_key(now))  # incr prio
+    removed: List[int] = []
+
+    def feasible(y: float, jobs: Sequence[JobState]):
+        items = []
+        pins: Dict[int, Tuple[float, float, List[int]]] = {}
+        for js in jobs:
+            s = js.spec
+            if s.jid in pinned:
+                pins[s.jid] = (min(1.0, s.cpu_need * y), s.mem_req, pinned[s.jid])
+            else:
+                items.append((s.jid, min(1.0, s.cpu_need * y), s.mem_req, s.n_tasks))
+        return _try_pack(n_nodes, items, pins, alive)
+
+    # Removal loop (§4.3): drop the lowest-priority job and retry until the
+    # remainder fits at the smallest probed yield.  Feasibility is monotone
+    # in the number of removals, so the smallest feasible removal count is
+    # found by bisection — identical outcome to one-at-a-time removal.
+    base = feasible(accuracy, active)
+    if base is None:
+        lo_r, hi_r = 0, len(active)          # lo_r infeasible; hi_r feasible
+        if feasible(accuracy, []) is None:   # not even the pinned jobs fit
+            return MCB8Result({}, 0.0, [js.spec.jid for js in active])
+        while hi_r - lo_r > 1:
+            mid = (lo_r + hi_r) // 2
+            if feasible(accuracy, active[mid:]) is None:
+                lo_r = mid
+            else:
+                hi_r = mid
+        removed = [js.spec.jid for js in active[:hi_r]]
+        active = active[hi_r:]
+        base = feasible(accuracy, active)
+        assert base is not None
+
+    while True:
+        jobs = list(active)
+        if not jobs:
+            return MCB8Result({}, 0.0, removed)
+        best_map, best_y = base, accuracy
+        full = feasible(1.0, jobs)
+        if full is not None:
+            return MCB8Result(full, 1.0, removed)
+        lo, hi = accuracy, 1.0
+        while hi - lo > accuracy:
+            mid = 0.5 * (lo + hi)
+            pack = feasible(mid, jobs)
+            if pack is not None:
+                best_map, best_y, lo = pack, mid, mid
+            else:
+                hi = mid
+        return MCB8Result(best_map, best_y, removed)

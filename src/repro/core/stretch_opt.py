@@ -1,0 +1,192 @@
+"""MCB8-stretch — direct (estimated-)stretch minimization (paper §4.7).
+
+Runs only periodically (needs the scheduling period T).  At a scheduling
+event, the best non-clairvoyant estimate of job j's stretch one period ahead
+is  Ŝ_j = (ft_j + T) / (vt_j + y_j·T).  Given a target Ŝ, the required yield
+is  y_j = ((ft_j + T)/Ŝ - vt_j) / T  (clamped to [0, 1]; > 1 ⇒ infeasible).
+A binary search over 1/Ŝ ∈ (0, 1] finds the smallest feasible target, with
+MCB8 packing checking feasibility; if no target is feasible the lowest
+priority job is removed (as in §4.3).
+
+Post-passes: OPT=MAX iteratively lowers the maximum estimated stretch using
+left-over node capacity (water-filling in stretch space); OPT=AVG maximizes
+the total projected progress Σ y_j·T/(ft_j+T) (linear proxy for average
+stretch minimization) with HiGHS.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .job import JobState
+from .mcb8 import _try_pack
+
+__all__ = ["StretchResult", "mcb8_stretch", "improve_max_stretch", "improve_avg_stretch"]
+
+_EPS = 1e-9
+
+
+@dataclass
+class StretchResult:
+    mappings: Dict[int, List[int]]
+    yields: Dict[int, float]       # initial per-job yields for the target
+    target: float                  # achieved estimated max stretch
+    removed: List[int]
+
+
+def _required_yield(js: JobState, now: float, period: float, target: float) -> float:
+    ft = js.flow_time(now)
+    return ((ft + period) / target - js.vt) / period
+
+
+def mcb8_stretch(
+    candidates: Sequence[JobState],
+    n_nodes: int,
+    now: float,
+    period: float,
+    pinned: Optional[Dict[int, List[int]]] = None,
+    accuracy: float = 0.01,
+    alive: Optional[np.ndarray] = None,
+) -> StretchResult:
+    pinned = dict(pinned or {})
+    active = sorted(candidates, key=lambda js: js.priority_key(now))  # incr prio
+    removed: List[int] = []
+
+    def feasible(inv_s: float, jobs: Sequence[JobState]):
+        target = 1.0 / inv_s
+        items = []
+        pins: Dict[int, Tuple[float, float, List[int]]] = {}
+        ylds: Dict[int, float] = {}
+        for js in jobs:
+            y = _required_yield(js, now, period, target)
+            if y > 1.0 + _EPS:
+                return None
+            y = float(np.clip(y, 0.0, 1.0))
+            ylds[js.spec.jid] = y
+            cpu_req = y * js.spec.cpu_need
+            if js.spec.jid in pinned:
+                pins[js.spec.jid] = (cpu_req, js.spec.mem_req, pinned[js.spec.jid])
+            else:
+                items.append((js.spec.jid, cpu_req, js.spec.mem_req, js.spec.n_tasks))
+        pack = _try_pack(n_nodes, items, pins, alive)
+        if pack is None:
+            return None
+        return pack, ylds
+
+    while True:
+        jobs = [js for js in active if js.spec.jid not in removed]
+        if not jobs:
+            return StretchResult({}, {}, np.inf, removed)
+        base = feasible(accuracy, jobs)  # very lax target (stretch 100)
+        if base is None:
+            removed.append(jobs[0].spec.jid)
+            continue
+        best, best_inv = base, accuracy
+        top = feasible(1.0, jobs)        # stretch-1 target
+        if top is not None:
+            return StretchResult(top[0], top[1], 1.0, removed)
+        lo, hi = accuracy, 1.0
+        while hi - lo > accuracy:
+            mid = 0.5 * (lo + hi)
+            r = feasible(mid, jobs)
+            if r is not None:
+                best, best_inv, lo = r, mid, mid
+            else:
+                hi = mid
+        return StretchResult(best[0], best[1], 1.0 / best_inv, removed)
+
+
+def _node_usage(jobs, mappings, yields, n_nodes):
+    use = np.zeros(n_nodes)
+    for js in jobs:
+        for node in mappings[js.spec.jid]:
+            use[node] += yields[js.spec.jid] * js.spec.cpu_need
+    return use
+
+
+def improve_max_stretch(
+    jobs: Sequence[JobState],
+    mappings: Dict[int, List[int]],
+    yields: Dict[int, float],
+    n_nodes: int,
+    now: float,
+    period: float,
+    max_rounds: int = 200,
+) -> Dict[int, float]:
+    """OPT=MAX (§4.7): iteratively reduce the max estimated stretch using
+    slack — raise the worst job's yield until slack, cap, or the next-worst
+    stretch level is reached."""
+    jobs = [js for js in jobs if js.spec.jid in mappings]
+    if not jobs:
+        return yields
+    yields = dict(yields)
+    frozen: set = set()
+
+    def est(js):
+        return (js.flow_time(now) + period) / max(_EPS, js.vt + yields[js.spec.jid] * period)
+
+    for _ in range(max_rounds):
+        live = [js for js in jobs if js.spec.jid not in frozen and yields[js.spec.jid] < 1.0 - _EPS]
+        if not live:
+            break
+        worst = max(live, key=est)
+        s_worst = est(worst)
+        others = [est(js) for js in jobs if js is not worst]
+        s_next = max([s for s in others if s < s_worst - 1e-12], default=1.0)
+        target = max(s_next, 1.0)
+        y_target = _required_yield(worst, now, period, target)
+        use = _node_usage(jobs, mappings, yields, n_nodes)
+        jid = worst.spec.jid
+        mult: Dict[int, int] = {}
+        for node in mappings[jid]:
+            mult[node] = mult.get(node, 0) + 1
+        dy_slack = min(
+            (1.0 - use[node]) / (worst.spec.cpu_need * k) for node, k in mult.items()
+        )
+        dy = min(max(0.0, y_target - yields[jid]), max(0.0, dy_slack), 1.0 - yields[jid])
+        if dy <= 1e-6:
+            frozen.add(jid)
+            continue
+        yields[jid] += dy
+    return yields
+
+
+def improve_avg_stretch(
+    jobs: Sequence[JobState],
+    mappings: Dict[int, List[int]],
+    yields: Dict[int, float],
+    n_nodes: int,
+    now: float,
+    period: float,
+) -> Dict[int, float]:
+    """OPT=AVG (§4.7): maximize Σ projected progress (linear proxy) with the
+    achieved target as per-job floor."""
+    from scipy.optimize import linprog
+    from scipy.sparse import lil_matrix
+
+    jobs = [js for js in jobs if js.spec.jid in mappings]
+    if not jobs:
+        return yields
+    m = len(jobs)
+    a = lil_matrix((n_nodes, m))
+    lo = np.zeros(m)
+    w = np.zeros(m)
+    for i, js in enumerate(jobs):
+        for node in mappings[js.spec.jid]:
+            a[node, i] += js.spec.cpu_need
+        lo[i] = yields[js.spec.jid]
+        w[i] = period / (js.flow_time(now) + period)
+    res = linprog(
+        c=-w,
+        A_ub=a.tocsr(),
+        b_ub=np.ones(n_nodes),
+        bounds=list(zip(lo, np.ones(m))),
+        method="highs",
+    )
+    out = dict(yields)
+    if res.success:
+        for i, js in enumerate(jobs):
+            out[js.spec.jid] = float(np.clip(res.x[i], 0.0, 1.0))
+    return out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the workload substrate's compute hot-spots.
+
+The paper's contribution is a *scheduler* (no kernel-level contribution), so
+``kernels/`` serves the model substrate: flash attention (train/prefill +
+decode), the RWKV6 chunked WKV scan, and the RG-LRU linear recurrence.
+``ops`` is the backend-switching entry point; ``ref`` holds the pure-jnp
+oracles every kernel is validated against (interpret mode on CPU).
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

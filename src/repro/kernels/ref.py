@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (and the CPU execution path).
+
+These are the ground truth the kernel sweep tests assert against, and what
+models execute on CPU / lower in the dry-run (bounded-memory formulations).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from ..models.layers import chunked_attention, decode_attention
+
+__all__ = [
+    "flash_attention_ref", "flash_decode_ref", "wkv6_ref",
+    "linear_recurrence_ref",
+]
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                        scale=None, chunk=1024):
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, scale=scale, chunk=chunk)
+
+
+def flash_decode_ref(q, k_cache, v_cache, cur_len, *, scale=None):
+    return decode_attention(q, k_cache, v_cache, cur_len, scale=scale)
+
+
+def wkv6_ref(r, k, v, w, u, s0):
+    """Exact sequential RWKV6 WKV recurrence (the oracle).
+
+    r, k, w: (B, T, H, dk); v: (B, T, H, dv); u: (H, dk);
+    s0: (B, H, dk, dv) fp32.  Returns (y: (B,T,H,dv) fp32, sT).
+
+        y_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+        S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    """
+    rf, kf, vf, wf = (x.astype(jnp.float32) for x in (r, k, v, w))
+    uf = u.astype(jnp.float32)
+
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                          # (B,H,dk/dv)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,dk,dv)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, s + uf[None, :, :, None] * kv)
+        s_new = w_t[..., None] * s + kv
+        return s_new, y
+
+    xs = tuple(x.transpose(1, 0, 2, 3) for x in (rf, kf, vf, wf))
+    sT, ys = lax.scan(step, s0.astype(jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3), sT
+
+
+def linear_recurrence_ref(a, b, h0):
+    """h_t = a_t * h_{t-1} + b_t (elementwise), h_0 from carry.
+
+    a, b: (B, T, W); h0: (B, W).  Returns (h: (B,T,W), hT: (B,W)) in fp32.
+    Uses an associative scan (parallel depth log T).
+    """
+    af = a.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    bf = bf.at[:, 0].add(af[:, 0] * h0.astype(jnp.float32))
+
+    def comb(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(comb, (af, bf), axis=1)
+    return h, h[:, -1]

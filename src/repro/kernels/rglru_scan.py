@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: blocked RG-LRU linear recurrence (Griffin).
+
+h_t = a_t * h_{t-1} + b_t, elementwise over the LRU width.  The width is
+tiled into VPU-lane-aligned blocks (block_w), time into chunks (block_t)
+swept by the sequential innermost grid dimension with the (block_w,) state
+in VMEM scratch.  Inside a chunk the recurrence runs as an unrolled
+log-depth prefix combine over the time axis (Blelloch-style), so the kernel
+issues O(log block_t) fused elementwise ops instead of block_t dependent
+steps — the VPU-friendly formulation of a diagonal linear RNN.
+
+Oracle: ``ref.linear_recurrence_ref`` (associative scan).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scratch(shape, dtype):
+        return pltpu.VMEM(shape, dtype)
+except Exception:  # pragma: no cover
+    def _scratch(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _rglru_kernel(a_ref, b_ref, h0_ref, y_ref, hT_ref, h_ref,
+                  *, block_t: int, nt: int):
+    it = pl.program_id(1)
+
+    @pl.when(it == 0)
+    def _init():
+        h_ref[...] = h0_ref[0].astype(jnp.float32)
+
+    a = a_ref[0].astype(jnp.float32)          # (bt, bw)
+    b = b_ref[0].astype(jnp.float32)
+    h = h_ref[...]                            # (bw,)
+
+    # fold carry into the first step, then log-depth inclusive scan
+    b = b.at[0].add(a[0] * h)
+    aa, bb = a, b
+    shift = 1
+    while shift < block_t:
+        aa_s = jnp.concatenate([jnp.ones_like(aa[:shift]), aa[:-shift]], axis=0)
+        bb_s = jnp.concatenate([jnp.zeros_like(bb[:shift]), bb[:-shift]], axis=0)
+        bb = aa * bb_s + bb
+        aa = aa * aa_s
+        shift *= 2
+
+    y_ref[0] = bb.astype(y_ref.dtype)
+    h_ref[...] = bb[-1]
+
+    @pl.when(it == nt - 1)
+    def _done():
+        hT_ref[0] = bb[-1].astype(hT_ref.dtype)
+
+
+def rglru_scan(a, b, h0, *, block_t: int = 128, block_w: int = 512,
+               interpret: bool = True):
+    """a, b: (B, T, W); h0: (B, W).  Returns (h: (B,T,W) fp32, hT)."""
+    B, T, W = a.shape
+    block_t = min(block_t, T)
+    while T % block_t:
+        block_t //= 2
+    block_w = min(block_w, W)
+    while W % block_w:
+        block_w //= 2
+    nt, nw = T // block_t, W // block_w
+
+    kernel = functools.partial(_rglru_kernel, block_t=block_t, nt=nt)
+    grid = (B * nw, nt)
+
+    def idx_tw(g, it):
+        return (g // nw, it, g % nw)
+
+    def idx_w(g, it):
+        return (g // nw, g % nw)
+
+    y, hT = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_w), idx_tw),
+            pl.BlockSpec((1, block_t, block_w), idx_tw),
+            pl.BlockSpec((1, block_w), idx_w),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_w), idx_tw),
+            pl.BlockSpec((1, block_w), idx_w),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, W), jnp.float32),
+            jax.ShapeDtypeStruct((B, W), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((block_w,), jnp.float32)],
+        interpret=interpret,
+    )(a, b, h0)
+    return y, hT

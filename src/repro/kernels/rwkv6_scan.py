@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: chunked RWKV6 (Finch) WKV scan.
+
+TPU adaptation of the data-dependent-decay recurrence: instead of a
+length-T sequential scan (latency-bound on the VPU), time is split into
+chunks of ``block_t``; within a chunk the contribution is computed with two
+MXU matmuls (intra-chunk "attention" with decay-scaled r'/k' and the
+carry-in state product), and the (dk x dv) state is carried across chunks in
+VMEM scratch over the sequential innermost grid dimension.
+
+    la_i   = cumsum(log w)_i          (per channel, fp32)
+    r'_i   = r_i * exp(la_{i-1}),  k'_j = k_j * exp(-la_j)
+    att    = tril(r' k'^T, -1) + diag(sum r_i u k_i)
+    y      = att @ v + r' @ S_in
+    S_out  = diag(exp(la_T)) S_in + (k * exp(la_T - la))^T @ v
+
+Bounded exp arguments require modest block_t (default 32); validated against
+the exact sequential oracle ``ref.wkv6_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+try:
+    from jax.experimental.pallas import tpu as pltpu
+
+    def _scratch(shape, dtype):
+        return pltpu.VMEM(shape, dtype)
+except Exception:  # pragma: no cover
+    def _scratch(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref,
+                y_ref, sT_ref, s_ref, *, block_t: int, nt: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, 0].astype(jnp.float32)        # (bt, dk)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)        # (bt, dv)
+    w = w_ref[0, 0].astype(jnp.float32)        # (bt, dk) decay in (0,1)
+    u = u_ref[0].astype(jnp.float32)           # (dk,)
+    s = s_ref[...]                             # (dk, dv)
+
+    la = jnp.cumsum(jnp.log(jnp.maximum(w, 1e-30)), axis=0)   # (bt, dk)
+    la_prev = la - jnp.log(jnp.maximum(w, 1e-30))             # exclusive
+    r_s = r * jnp.exp(la_prev)
+    k_s = k * jnp.exp(-la)
+
+    att = r_s @ k_s.T                                          # (bt, bt)
+    bt = att.shape[0]
+    row = lax.broadcasted_iota(jnp.int32, (bt, bt), 0)
+    col = lax.broadcasted_iota(jnp.int32, (bt, bt), 1)
+    att = jnp.where(col < row, att, 0.0)
+    att = att + jnp.diag(jnp.sum(r * u[None] * k, axis=-1))
+
+    y = att @ v + r_s @ s                                      # (bt, dv)
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+    la_T = la[-1]
+    s_new = jnp.exp(la_T)[:, None] * s + (k * jnp.exp(la_T[None] - la)).T @ v
+    s_ref[...] = s_new
+
+    @pl.when(it == nt - 1)
+    def _done():
+        sT_ref[0, 0] = s_new.astype(sT_ref.dtype)
+
+
+def wkv6(r, k, v, w, u, s0, *, block_t: int = 32, interpret: bool = True):
+    """r,k,w: (B,T,H,dk); v: (B,T,H,dv); u: (H,dk); s0: (B,H,dk,dv) fp32.
+
+    Returns (y: (B,T,H,dv) fp32, sT: (B,H,dk,dv) fp32).
+    """
+    B, T, H, dk = r.shape
+    dv = v.shape[-1]
+    block_t = min(block_t, T)
+    while T % block_t:
+        block_t //= 2
+    nt = T // block_t
+
+    tr = lambda x: x.transpose(0, 2, 1, 3)        # (B,H,T,d)
+    kernel = functools.partial(_wkv_kernel, block_t=block_t, nt=nt)
+    y, sT = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_t, dk), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, block_t, dk), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, block_t, dv), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, block_t, dk), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, dk), lambda b, h, it: (h, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_t, dv), lambda b, h, it: (b, h, it, 0)),
+            pl.BlockSpec((1, 1, dk, dv), lambda b, h, it: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, dv), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, dk, dv), jnp.float32),
+        ],
+        scratch_shapes=[_scratch((dk, dv), jnp.float32)],
+        interpret=interpret,
+    )(tr(r), tr(k), tr(v), tr(w), u, s0)
+    return y.transpose(0, 2, 1, 3), sT

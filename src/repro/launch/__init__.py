@@ -1,0 +1,7 @@
+"""Launchers: production mesh, sharding plans, dry-run, train/serve CLIs.
+
+NOTE: ``dryrun`` sets XLA_FLAGS at import; do not import it from code that
+wants the real device count (tests, benches).  ``mesh``/``shardings`` are
+safe to import anywhere.
+"""
+from . import mesh, roofline, shardings  # noqa: F401

@@ -1,0 +1,443 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any jax-touching import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the step program (train_step / prefill / decode) is jit-ed
+with the full production sharding plan, ``.lower().compile()`` is run on the
+512-virtual-device CPU backend, and the artifact — memory analysis, HLO
+cost analysis, and the collective-op byte ledger — is written to
+``experiments/dryrun/<arch>__<shape>__<mesh>.json`` for the roofline tables
+(benchmarks/roofline.py) and the DFRS TPU job generator
+(repro.workloads.jobgen).
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES, ShapeSpec, get_config, shape_applicable
+from ..models import backbone
+from ..models.config import ModelConfig
+from ..train.optimizer import OptConfig
+from ..train.trainer import init_train_state, make_train_step
+from . import mesh as meshmod
+from . import roofline
+from .shardings import Plan, make_plan
+
+DEFAULT_OUT = "experiments/dryrun"
+
+# Per-cell knobs (microbatches for train; compute dtype).  Tuned in the
+# EXPERIMENTS.md SSPerf loop; defaults are the paper-faithful baseline.
+PRESETS: Dict[Tuple[str, str], Dict[str, Any]] = {}
+
+
+def preset(arch: str, shape: str) -> Dict[str, Any]:
+    base = {"microbatches": 1, "dtype": jnp.bfloat16, "sp": True,
+            "fsdp": None, "ep": None, "ep2": None, "remat": True,
+            "factored": None, "kv_int8": False}
+    base.update(PRESETS.get(("*", "*"), {}))
+    base.update(PRESETS.get((arch, shape), {}))
+    return base
+
+
+# --------------------------------------------------------------------------- #
+# input specs                                                                  #
+# --------------------------------------------------------------------------- #
+def batch_shapes(cfg: ModelConfig, B: int, T: int) -> Dict[str, jax.ShapeDtypeStruct]:
+    out = {"tokens": jax.ShapeDtypeStruct((B, T), jnp.int32)}
+    if cfg.is_encdec:
+        out["enc_embeds"] = jax.ShapeDtypeStruct((B, 1500, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "vision":
+        nv = min(cfg.n_frontend_tokens or 256, T // 2)
+        out["vision_embeds"] = jax.ShapeDtypeStruct((B, nv, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def auto_factored(cfg: ModelConfig) -> bool:
+    """Adafactor moments for >=100B-param models (HBM fit; DESIGN.md SS7)."""
+    return cfg.param_count() > 1e11
+
+
+def input_specs(arch: str, shape_name: str, *, dtype=jnp.bfloat16,
+                factored: Optional[bool] = None):
+    """ShapeDtypeStruct stand-ins for every model input of one cell —
+    weak-type-correct, shardable, zero device allocation."""
+    return input_specs_for(get_config(arch), shape_name, dtype=dtype,
+                           factored=factored)
+
+
+def input_specs_for(cfg: ModelConfig, shape_name: str, *, dtype=jnp.bfloat16,
+                    factored: Optional[bool] = None, kv_int8: bool = False):
+    shape = SHAPES[shape_name]
+    B, T = shape.global_batch, shape.seq_len
+    cache_dtype = jnp.int8 if kv_int8 else dtype
+    if shape.kind == "train":
+        fact = auto_factored(cfg) if factored is None else factored
+        state = jax.eval_shape(
+            lambda: init_train_state(cfg, jax.random.PRNGKey(0), dtype=dtype,
+                                     factored=fact))
+        return {"state": state, "batch": batch_shapes(cfg, B, T)}
+    if shape.kind == "prefill":
+        params = jax.eval_shape(
+            lambda: backbone.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)[0])
+        caches = jax.eval_shape(
+            lambda: backbone.init_cache(cfg, B, T,
+                                        S_enc=1500 if cfg.is_encdec else 0,
+                                        dtype=cache_dtype))
+        return {"params": params, "batch": batch_shapes(cfg, B, T), "caches": caches}
+    # decode: one new token against a T-long cache
+    params = jax.eval_shape(
+        lambda: backbone.init_params(cfg, jax.random.PRNGKey(0), dtype=dtype)[0])
+    caches = jax.eval_shape(
+        lambda: backbone.init_cache(cfg, B, T,
+                                    S_enc=1500 if cfg.is_encdec else 0,
+                                    dtype=cache_dtype))
+    return {
+        "params": params,
+        "tokens": jax.ShapeDtypeStruct((B,), jnp.int32),
+        "caches": caches,
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# step builders                                                                #
+# --------------------------------------------------------------------------- #
+def build_step(cfg: ModelConfig, shape: ShapeSpec, plan: Plan, knobs):
+    """(fn, in_specs, in_shardings, donate) for the cell."""
+    # resolve ``factored`` against the FULL config once so the shallow
+    # extrapolation points build the same optimizer-state structure
+    fact = knobs.get("factored")
+    if fact is None:
+        fact = auto_factored(get_config(cfg.name))
+    specs = input_specs_for(cfg, shape.name, dtype=knobs["dtype"],
+                            factored=fact, kv_int8=knobs.get("kv_int8", False))
+    backbone.set_act_spec(plan.act_spec())
+    backbone.set_ep_spec(plan.ep_spec())
+    from ..models import moe
+    moe.set_groups(plan.moe_groups())
+
+    pspecs = plan.param_specs()
+    if shape.kind == "train":
+        opt_cfg = OptConfig(factored=fact)
+        fn = make_train_step(cfg, opt_cfg, microbatches=knobs["microbatches"],
+                             remat=knobs["remat"])
+        state = specs["state"]
+        state_sh = plan.train_state_specs(state, fact)
+        in_sh = (state_sh, plan.batch_specs(specs["batch"]))
+        args = (state, specs["batch"])
+        return fn, args, in_sh, (state_sh, None), (0,)
+    if shape.kind == "prefill":
+        def fn(params, batch, caches):
+            return backbone.prefill(cfg, params, batch, caches)
+        csh = plan.cache_specs(specs["caches"])
+        in_sh = (pspecs, plan.batch_specs(specs["batch"]), csh)
+        args = (specs["params"], specs["batch"], specs["caches"])
+        return fn, args, in_sh, (None, csh), (2,)
+    # decode
+    def fn(params, tokens, caches, pos):
+        return backbone.decode_step(cfg, params, tokens, caches, pos)
+    csh = plan.cache_specs(specs["caches"])
+    tok_sh = list(plan.batch_specs(
+        {"tokens": jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)}).values())[0]
+    in_sh = (pspecs, tok_sh, csh, P())
+    args = (specs["params"], specs["tokens"], specs["caches"], specs["pos"])
+    return fn, args, in_sh, (None, csh), (2,)
+
+
+# --------------------------------------------------------------------------- #
+# depth extrapolation                                                          #
+#                                                                              #
+# XLA's cost_analysis counts a while-loop (lax.scan) body ONCE regardless of   #
+# trip count, so the scanned production program under-reports FLOPs / bytes /  #
+# collectives by ~depth x.  Per-layer costs are affine in the layer count, so  #
+# we lower *unrolled* shallow variants (1 and 2 periods of the layer pattern,  #
+# prefix layers kept) and extrapolate:  F(k) = c0 + c1*k (+ c2*enc_layers).    #
+# The full-depth scanned program is still compiled — that is the deliverable   #
+# (sharding coherence + memory_analysis); only the cost numbers come from      #
+# the extrapolation.                                                           #
+# --------------------------------------------------------------------------- #
+def _measure_point(cfg: ModelConfig, shape: ShapeSpec, plan: Plan, knobs) -> Dict:
+    """Lower+compile one unrolled shallow variant; return per-device costs.
+
+    Everything (state, caches, shardings) is built for the *shallow* config —
+    optimizer/param cost is affine in depth too, so the slope/intercept solve
+    still recovers the exact full-depth totals."""
+    plan = make_plan(cfg, plan.mesh, fsdp=plan.fsdp, ep=plan.ep, sp=plan.sp,
+                     ep2=plan.ep2)
+    backbone.set_unroll(True)
+    try:
+        fn, args, in_sh, out_sh, _ = build_step(cfg, shape, plan, knobs)
+        jitted = jax.jit(fn, in_shardings=plan.shard(in_sh),
+                         out_shardings=plan.shard(out_sh) if out_sh else None)
+        compiled = jitted.lower(*_treeify(args)).compile()
+    finally:
+        backbone.set_unroll(False)
+    cost = compiled.cost_analysis()
+    chips = int(np.prod(list(plan.mesh.shape.values())))
+    coll = roofline.parse_collectives(compiled.as_text(), chips)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_payload": coll.payload_bytes,
+        "coll_raw": coll.raw_bytes,
+        "coll_ops": coll.op_bytes,
+    }
+
+
+def _combine(points: List[Dict], weights: List[float]) -> Dict:
+    """Linear combination of measurement dicts."""
+    out: Dict[str, Any] = {}
+    for key in ("flops", "bytes", "coll_payload", "coll_raw"):
+        out[key] = max(0.0, sum(w * p[key] for p, w in zip(points, weights)))
+    ops: Dict[str, float] = {}
+    for p, w in zip(points, weights):
+        for k, v in p["coll_ops"].items():
+            ops[k] = ops.get(k, 0.0) + w * v
+    out["coll_ops"] = {k: max(0.0, v) for k, v in ops.items()}
+    return out
+
+
+def extrapolate_costs(cfg: ModelConfig, shape: ShapeSpec, plan: Plan, knobs) -> Dict:
+    """True per-device cost estimates for the full-depth model."""
+    p = len(cfg.attn_pattern) or 1
+    prefix = cfg.first_dense
+    k_full = (cfg.n_layers - prefix) / p
+    mk = lambda nl, ne: dataclasses.replace(
+        cfg, n_layers=nl, encoder_layers=ne)
+    knobs = dict(knobs, microbatches=1)   # grad-accum scan has the same bug
+
+    ne0 = 1 if cfg.encoder_layers else 0
+    f1 = _measure_point(mk(prefix + p, ne0), shape, plan, knobs)
+    f2 = _measure_point(mk(prefix + 2 * p, ne0), shape, plan, knobs)
+    # F = c0 + c1*k (+ c2*ne):  c1 = F2-F1;  c0 = F1 - c1 - c2*ne0
+    if cfg.encoder_layers:
+        f3 = _measure_point(mk(prefix + p, 2), shape, plan, knobs)
+        # c2 = F3-F1; F_full = F1 + c1*(k_full-1) + c2*(ne_full-1)
+        est = _combine(
+            [f1, f2, f3],
+            [1.0 - (k_full - 1.0) - (cfg.encoder_layers - 1.0),
+             (k_full - 1.0), (cfg.encoder_layers - 1.0)])
+    else:
+        est = _combine([f1, f2], [1.0 - (k_full - 1.0), (k_full - 1.0)])
+    est["k_full"] = k_full
+    est["period"] = p
+    return est
+
+
+# --------------------------------------------------------------------------- #
+# one cell                                                                     #
+# --------------------------------------------------------------------------- #
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: Optional[str] = DEFAULT_OUT, verbose: bool = True,
+             extrap: bool = True) -> Dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "multi" if multi_pod else "single"
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+    }
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        record["status"] = "skipped"
+        record["reason"] = why
+        _dump(record, out_dir)
+        if verbose:
+            print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: SKIP ({why})")
+        return record
+
+    knobs = preset(arch, shape_name)
+    if knobs.get("ep_pad"):
+        cfg = dataclasses.replace(cfg, n_experts_pad=int(knobs["ep_pad"]))
+    mesh = meshmod.make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    plan = make_plan(cfg, mesh, fsdp=knobs["fsdp"], ep=knobs["ep"],
+                     sp=knobs["sp"], ep2=knobs["ep2"])
+    record["plan"] = {"fsdp": plan.fsdp, "ep": plan.ep, "sp": plan.sp,
+                      "ep2": plan.ep2,
+                      "rules": {k: v for k, v in plan.rules.items() if v}}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args, in_sh, out_sh, donate = build_step(cfg, shape, plan, knobs)
+            jitted = jax.jit(fn, in_shardings=plan.shard(in_sh),
+                             out_shardings=plan.shard(out_sh) if out_sh else None,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*_treeify(args))
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    finally:
+        backbone.set_act_spec(None)
+        backbone.set_ep_spec(None)
+        __import__("repro.models.moe", fromlist=["moe"]).set_groups(1)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = roofline.parse_collectives(hlo, chips)
+
+    # exact per-device costs via unrolled shallow extrapolation (the scanned
+    # program's cost_analysis under-counts loop bodies)
+    t1 = time.time()
+    if extrap:
+        with mesh:
+            try:
+                est = extrapolate_costs(cfg, shape, plan, knobs)
+            finally:
+                backbone.set_act_spec(None)
+                backbone.set_ep_spec(None)
+                from ..models import moe
+                moe.set_groups(1)
+    else:        # multi-pod pass: compile-only (roofline table is single-pod)
+        est = {"flops": float(cost.get("flops", 0.0)),
+               "bytes": float(cost.get("bytes accessed", 0.0)),
+               "coll_payload": coll.payload_bytes, "coll_raw": coll.raw_bytes,
+               "coll_ops": coll.op_bytes}
+    t_extrap = time.time() - t1
+
+    hw = roofline.HW(chips=chips)
+    flops_global = est["flops"] * chips
+    bytes_global = est["bytes"] * chips
+    est_coll = roofline.CollectiveStats(
+        op_bytes=est["coll_ops"], payload_bytes=est["coll_payload"],
+        raw_bytes=est["coll_raw"])
+    terms = roofline.roofline_terms(flops_global, bytes_global, est_coll, hw)
+    mflops = model_flops(cfg, shape)
+
+    record.update({
+        "status": "ok",
+        "chips": chips,
+        "extrapolated": extrap,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "extrapolate_s": round(t_extrap, 2),
+        "flops": flops_global,
+        "bytes_accessed": bytes_global,
+        "flops_scanned_raw": float(cost.get("flops", 0.0)) * chips,
+        "memory_analysis": _mem_dict(mem),
+        "collectives": {
+            "per_op_bytes": est["coll_ops"],
+            "per_op_counts_scanned": coll.op_counts,
+            "raw_bytes": est["coll_raw"],
+            "payload_bytes_per_chip": est["coll_payload"],
+        },
+        "roofline": terms,
+        "model_flops": mflops,
+        "model_vs_hlo_flops": mflops / flops_global if flops_global else 0.0,
+        "knobs": {k: str(v) for k, v in knobs.items()},
+    })
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} x {mesh_name}: OK "
+              f"(lower {t_lower:.1f}s compile {t_compile:.1f}s extrap {t_extrap:.1f}s)")
+        print(f"  memory_analysis: {record['memory_analysis']}")
+        print(f"  cost_analysis (extrapolated, global): flops={flops_global:.3e} "
+              f"bytes={bytes_global:.3e} model/hlo={record['model_vs_hlo_flops']:.3f}")
+        print(f"  collectives: {coll.op_counts} payload/chip={est['coll_payload']:.3e}B")
+        print(f"  roofline: { {k: (f'{v:.4g}' if isinstance(v, float) else v) for k, v in terms.items()} }")
+    _dump(record, out_dir)
+    return record
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS: 6*N*D for training (N = active params), 2*N*D for a
+    forward-only step (prefill/decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch            # one token / request
+
+
+def _mem_dict(mem) -> Dict[str, float]:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = float(v)
+    if not out and isinstance(mem, dict):
+        out = {k: float(v) for k, v in mem.items()}
+    return out
+
+
+def _treeify(args):
+    return args if isinstance(args, tuple) else (args,)
+
+
+def _dump(record: Dict, out_dir: Optional[str]) -> None:
+    if out_dir is None:
+        return
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{record['arch']}__{record['shape']}__{record['mesh']}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=DEFAULT_OUT)
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-extrap", action="store_true",
+                    help="compile-only (no shallow cost extrapolation)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="knob override k=v (microbatches=8, ep2=1, sp=0...)"
+                         " applied to every cell in this invocation")
+    args = ap.parse_args()
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cast = {"microbatches": int, "ep_pad": int}.get(
+            k, lambda x: bool(int(x)))
+        PRESETS.setdefault(("*", "*"), {})[k] = cast(v)
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    from ..configs import ALIASES
+    norm = lambda a: ALIASES.get(a, a.replace("-", "_"))
+    cells = ([(a, s) for a in ARCHS for s in SHAPES] if args.all
+             else [(norm(args.arch), args.shape)])
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "multi" if mp else "single"
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}.json")
+            if args.skip_existing and os.path.exists(path):
+                try:
+                    if json.load(open(path)).get("status") in ("ok", "skipped"):
+                        print(f"[dryrun] {arch} x {shape} x {mesh_name}: cached")
+                        continue
+                except Exception:
+                    pass
+            try:
+                run_cell(arch, shape, mp, out_dir=args.out,
+                         extrap=not args.no_extrap)
+            except Exception as e:  # noqa: BLE001 — report, continue sweep
+                failures += 1
+                print(f"[dryrun] {arch} x {shape} x {mesh_name}: FAIL {e!r}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module must never
+touch jax device state (the dry-run sets XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "dp_axes", "DP_SINGLE", "DP_MULTI"]
+
+DP_SINGLE = ("data",)
+DP_MULTI = ("pod", "data")
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single pod (256 chips) or 2x16x16 two-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def dp_axes(mesh) -> tuple:
+    """The data-parallel axes of a production mesh ('pod' included)."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_size(mesh) -> int:
+    out = 1
+    for a in dp_axes(mesh):
+        out *= mesh.shape[a]
+    return out

@@ -1,0 +1,136 @@
+"""Roofline terms from a compiled dry-run artifact.
+
+Hardware model (TPU v5e target):
+    peak bf16 compute   197 TFLOP/s / chip
+    HBM bandwidth       819 GB/s / chip
+    ICI link bandwidth  ~50 GB/s / link / chip
+
+Terms (seconds, lower bound per step):
+    compute    = HLO_FLOPs / (chips * PEAK_FLOPS)
+    memory     = HLO_bytes / (chips * HBM_BW)
+    collective = per-chip collective payload / ICI_BW
+
+``cost_analysis`` supplies FLOPs and bytes.  Collective bytes are NOT in
+cost_analysis: we parse the post-optimization HLO and, for every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+model the per-chip payload from the op's result shape, its replica-group
+size and the standard ring-algorithm factor.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+
+
+@dataclass
+class HW:
+    chips: int
+    peak_flops: float = PEAK_FLOPS
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# "bf16[2,16,128]{2,1,0} all-gather(" etc.  Result type precedes the op name.
+_COLL_RE = re.compile(
+    r"=\s*(?:\(([^)]*)\)|(\w+)\[([\d,]*)\][^ ]*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[^}]*\})")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, total: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))                   # [n_groups, group_size]
+    m = _GROUPS_RE.search(line)
+    if m:
+        first = m.group(1).strip("{}")
+        return len([x for x in first.split(",") if x.strip()]) or total
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    """Byte accounting for one compiled program (per chip)."""
+
+    op_bytes: Dict[str, float] = field(default_factory=dict)   # raw result bytes
+    op_counts: Dict[str, int] = field(default_factory=dict)
+    payload_bytes: float = 0.0      # ring-modeled per-chip traffic
+    raw_bytes: float = 0.0          # plain sum of result-shape bytes
+
+    def add(self, kind: str, nbytes: float, group: int) -> None:
+        self.op_bytes[kind] = self.op_bytes.get(kind, 0.0) + nbytes
+        self.op_counts[kind] = self.op_counts.get(kind, 0) + 1
+        self.raw_bytes += nbytes
+        g = max(group, 1)
+        ring = (g - 1) / g
+        if kind == "all-reduce":
+            self.payload_bytes += 2.0 * ring * nbytes
+        elif kind == "all-gather":
+            self.payload_bytes += ring * nbytes            # result = gathered
+        elif kind == "reduce-scatter":
+            self.payload_bytes += ring * nbytes * g        # result = scattered
+        elif kind == "all-to-all":
+            self.payload_bytes += ring * nbytes
+        else:                                               # collective-permute
+            self.payload_bytes += nbytes
+
+
+def parse_collectives(hlo_text: str, total_devices: int) -> CollectiveStats:
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        tuple_body, dtype, dims, kind = m.groups()
+        if tuple_body is not None:
+            nbytes = sum(_shape_bytes(dt, dd)
+                         for dt, dd in _SHAPE_RE.findall(tuple_body))
+        else:
+            nbytes = _shape_bytes(dtype, dims)
+        stats.add(kind, float(nbytes), _group_size(line, total_devices))
+    return stats
+
+
+def roofline_terms(
+    flops: float,
+    bytes_accessed: float,
+    coll: CollectiveStats,
+    hw: HW,
+) -> Dict[str, float]:
+    """All three terms in seconds + bottleneck id.
+
+    ``flops``/``bytes_accessed`` are whole-program totals (cost_analysis);
+    collective payload is already per-chip.
+    """
+    compute = flops / (hw.chips * hw.peak_flops)
+    memory = bytes_accessed / (hw.chips * hw.hbm_bw)
+    collective = coll.payload_bytes / hw.ici_bw
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    terms["bottleneck"] = max(terms, key=lambda k: terms[k]).replace("_s", "")
+    terms["step_s"] = max(compute, memory, collective)
+    return terms

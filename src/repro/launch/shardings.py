@@ -1,0 +1,241 @@
+"""Logical-axis -> PartitionSpec rules for the production meshes.
+
+The models annotate every parameter with logical axis names
+(``backbone.param_axes``); this module maps those names onto the physical
+mesh.  The same rules drive params, optimizer state (ZeRO-1), gradients,
+batches and KV caches, so the whole (arch x shape x mesh) matrix is one
+table instead of 40 hand-written sharding sets.
+
+Baseline layout (paper-faithful "job shard" = Megatron-style TP + DP):
+
+* ``model`` axis: tensor parallelism — vocab / heads / d_ff / d_expert /
+  lru sharded when divisible, replicated otherwise (smollm's 15 heads,
+  whisper's 20 heads, 49155/51866 vocabs);
+* ``data`` (+ ``pod``) axes: batch;
+* FSDP (``fsdp=True``, default for >=20B params): ``d_model`` additionally
+  sharded over ``data`` — ZeRO-3-style weight gathering, required to fit
+  deepseek-v3-671b / internvl2-76b;
+* ZeRO-1 otherwise: optimizer moments get an extra ``data`` sharding on
+  their first divisible replicated dim;
+* EP (``n_experts % model == 0``): experts go on ``model`` (the all-to-all
+  layout); TP over ``d_expert`` otherwise;
+* SP: the residual stream between layers is sequence-sharded over ``model``
+  (``with_sharding_constraint`` hook in the backbone) — activation memory
+  / model_size per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import backbone
+from ..models.config import ModelConfig
+from . import mesh as meshmod
+
+__all__ = ["ShardingPlan", "make_plan"]
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved layout decisions for one (arch, mesh)."""
+
+    cfg: ModelConfig
+    mesh: Mesh
+    dp: Tuple[str, ...]
+    fsdp: bool
+    ep: bool
+    sp: bool
+    rules: Dict[str, Optional[str]]
+    # EP over BOTH mesh axes (DeepSeek-style EP-256): expert weights become
+    # fully chip-local — no FSDP all-gathers for the expert slab; the only
+    # expert collective left is the dispatch/combine all-to-all.
+    ep2: bool = False
+
+    # ---- pytree spec builders -------------------------------------------
+    def param_specs(self) -> Pytree:
+        axes = backbone.param_axes(self.cfg)
+        return jax.tree.map(self._axes_to_spec, axes,
+                            is_leaf=_is_axes_leaf)
+
+    def opt_moment_specs(self, param_shapes: Pytree, param_specs: Pytree) -> Pytree:
+        """ZeRO-1: moments inherit the param spec + an extra dp sharding on
+        the first divisible, unsharded dim (no-op under FSDP, where d_model
+        already carries ``data``)."""
+        dsize = meshmod.dp_size(self.mesh)
+
+        def f(shape, spec):
+            dims = list(spec) + [None] * (len(shape.shape) - len(spec))
+            if self.fsdp or dsize == 1:
+                return P(*dims)
+            used = {a for d in dims for a in ((d,) if isinstance(d, str) else (d or ()))}
+            if "data" in used:
+                return P(*dims)
+            for i, d in enumerate(dims):
+                if d is None and shape.shape[i] % dsize == 0 and shape.shape[i] > 0:
+                    dims[i] = "data"
+                    break
+            return P(*dims)
+
+        return jax.tree.map(f, param_shapes, param_specs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    def train_state_specs(self, state, factored: bool):
+        """Specs for a whole TrainState (params + optimizer moments)."""
+        from ..train.optimizer import opt_axes
+        pspecs = self.param_specs()
+        oax = opt_axes(backbone.param_axes(self.cfg), state.params, factored)
+        mu_specs = jax.tree.map(self._axes_to_spec, oax.mu, is_leaf=_is_axes_leaf)
+        nu_specs = jax.tree.map(self._axes_to_spec, oax.nu, is_leaf=_is_axes_leaf)
+        mu_specs = self.opt_moment_specs(state.opt.mu, mu_specs)
+        nu_specs = self.opt_moment_specs(state.opt.nu, nu_specs)
+        return type(state)(
+            params=pspecs,
+            opt=type(state.opt)(step=P(), mu=mu_specs, nu=nu_specs),
+            err=None)
+
+    def batch_specs(self, batch_shapes: Dict[str, Any]) -> Dict[str, Any]:
+        dp = self.dp if len(self.dp) > 1 else self.dp[0]
+
+        def f(s):
+            nd = len(s.shape)
+            if s.shape[0] % max(1, meshmod.dp_size(self.mesh)) != 0:
+                return P(*([None] * nd))           # e.g. batch 1 (long_500k)
+            return P(dp, *([None] * (nd - 1)))
+
+        return {k: f(v) for k, v in batch_shapes.items()}
+
+    def cache_specs(self, cache_shapes: Pytree) -> Pytree:
+        """KV/state cache layout: batch on dp, long axes on ``model``.
+
+        Leaves are keyed dicts inside the group list; shapes are
+        (layer_count, B, ...).  Sequence axes are model-sharded (flash-
+        decode style partial-softmax reduction over ``model``), so a 550 GB
+        llama3 decode_32k cache lands at ~2 GB/chip.
+        """
+        dp = self.dp if len(self.dp) > 1 else self.dp[0]
+        msize = self.mesh.shape["model"]
+
+        def leaf(path, s):
+            key = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            nd = len(s.shape)
+            batch_ok = s.shape[1] % max(1, meshmod.dp_size(self.mesh)) == 0
+            b = dp if batch_ok else None
+            if key in ("k", "v", "ks", "vs", "ckv", "kr", "ck", "cv"):
+                # (L, B, S, ...): shard S over model when divisible
+                seq = "model" if s.shape[2] % msize == 0 else None
+                return P(None, b, seq, *([None] * (nd - 3)))
+            if key == "s":          # rwkv state (L, B, H, dk, dv)
+                h = "model" if s.shape[2] % msize == 0 else None
+                return P(None, b, h, *([None] * (nd - 3)))
+            if key == "h":          # rglru state (L, B, W)
+                w = "model" if s.shape[2] % msize == 0 else None
+                return P(None, b, w)
+            if key == "conv":       # (L, B, 3, W)
+                w = "model" if s.shape[3] % msize == 0 else None
+                return P(None, b, None, w)
+            return P(None, b, *([None] * (nd - 2)))
+
+        return jax.tree.map_with_path(leaf, cache_shapes)
+
+    def act_spec(self):
+        """Residual-stream constraint (B, T, D) for the SP toggle."""
+        if not self.sp:
+            return None
+        dp = self.dp if len(self.dp) > 1 else self.dp[0]
+        return P(dp, "model", None)
+
+    def ep_spec(self):
+        """MoE dispatch-buffer constraint (G, E, C, D): routing groups ride
+        the data axes (rank-local dispatch); experts ride ``model`` under EP
+        (GSPMD inserts the dispatch/combine all-to-all at this boundary).
+        Under ep2 the experts take BOTH axes and G stays unsharded."""
+        if not self.cfg.n_experts:
+            return None
+        if self.ep2:
+            return P(None, tuple(self.dp) + ("model",), None, None)
+        dp = self.dp if len(self.dp) > 1 else self.dp[0]
+        return P(dp, "model" if self.ep else None, None, None)
+
+    def moe_groups(self) -> int:
+        """Routing groups = DP ranks (per-rank dispatch, as in real EP)."""
+        from . import mesh as meshmod
+        return meshmod.dp_size(self.mesh) if self.cfg.n_experts else 1
+
+    # ---- helpers ----------------------------------------------------------
+    def _axes_to_spec(self, axes: Tuple[Optional[str], ...]) -> P:
+        dims = [self.rules.get(a) if a else None for a in axes]
+        if self.ep2 and "experts" in axes:
+            # expert tensors: E takes every mesh axis, other dims local
+            # (a mesh axis may appear only once per spec)
+            dims = [tuple(self.dp) + ("model",) if a == "experts" else None
+                    for a in axes]
+        return P(*dims)
+
+    def shard(self, spec_tree: Pytree) -> Pytree:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), spec_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def make_plan(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    *,
+    fsdp: Optional[bool] = None,
+    ep: Optional[bool] = None,
+    sp: bool = True,
+    ep2: Optional[bool] = None,
+) -> Plan:
+    """Resolve the layout for (arch, mesh).  ``None`` flags = auto."""
+    msize = mesh.shape["model"]
+    dsize = meshmod.dp_size(mesh)
+    nparams = cfg.param_count()
+    if fsdp is None:
+        fsdp = nparams > 2e10
+    e_alloc = cfg.n_experts + cfg.n_experts_pad
+    if ep is None:
+        ep = cfg.n_experts > 0 and e_alloc % msize == 0
+    if ep2 is None:
+        ep2 = False       # beyond-paper hillclimb toggle (see EXPERIMENTS.md)
+    if ep2 and e_alloc % (msize * dsize) != 0:
+        ep2 = False
+    if ep2:
+        ep = True
+
+    div = lambda n: (n % msize == 0 and n > 0)
+    rules: Dict[str, Optional[str]] = {
+        "vocab": "model" if div(cfg.vocab) else None,
+        "heads": "model" if div(cfg.n_heads) else None,
+        "kv_heads": "model" if div(cfg.n_kv_heads) else None,
+        "d_ff": "model" if div(cfg.d_ff) else None,
+        "d_shared": "model" if div(cfg.d_shared) else None,
+        "lru": "model" if div(cfg.lru_width) else None,
+        "head_dim": None,
+        "layers": None,
+        "q_lora": None,
+        "kv_lora": None,
+        "d_model": "data" if (fsdp and cfg.d_model % dsize == 0) else None,
+    }
+    if cfg.n_experts:
+        if ep:
+            rules["experts"] = "model"
+            rules["d_expert"] = None
+        else:
+            rules["experts"] = None
+            rules["d_expert"] = "model" if div(cfg.d_expert) else None
+    else:
+        rules["experts"] = rules["d_expert"] = None
+
+    return Plan(cfg=cfg, mesh=mesh, dp=meshmod.dp_axes(mesh),
+                fsdp=fsdp, ep=ep, sp=sp, rules=rules, ep2=ep2)

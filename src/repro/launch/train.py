@@ -1,0 +1,87 @@
+"""Training launcher.
+
+On real hardware this runs under the production mesh; on this CPU container
+it runs reduced configs on the single local device (the full configs are
+exercised via the dry-run).  The launcher is the DFRS *job* side: it
+checkpoints on schedule and restarts from the newest checkpoint, which is
+exactly the pause/resume contract the scheduler (repro.sched) relies on.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+        --reduced --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, get_reduced
+from ..models.config import reduce_config
+from ..train import checkpoint as ckpt
+from ..train.data import data_for
+from ..train.ft import FailureInjector, run_restartable
+from ..train.optimizer import OptConfig
+from ..train.trainer import init_train_state, make_train_step
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale config (CPU container)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--factored", action="store_true")
+    ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--inject-failures", default="",
+                    help="comma-separated steps at which to fail (FT demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    opt_cfg = OptConfig(lr=args.lr, warmup_steps=max(5, args.steps // 20),
+                        total_steps=args.steps, factored=args.factored)
+    data = data_for(cfg, args.batch, args.seq, seed=args.seed,
+                    n_enc=64 if args.reduced else None)
+    step_fn = jax.jit(make_train_step(
+        cfg, opt_cfg, microbatches=args.microbatches,
+        compress_grads=args.compress_grads))
+
+    def new_state():
+        return init_train_state(cfg, jax.random.PRNGKey(args.seed),
+                                compress=args.compress_grads,
+                                factored=args.factored)
+
+    if args.ckpt_dir:
+        fails = tuple(int(x) for x in args.inject_failures.split(",") if x)
+        rep = run_restartable(
+            train_step=step_fn, init_state=new_state,
+            batch_for_step=data.batch_for_step, total_steps=args.steps,
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            injector=FailureInjector(at_steps=fails) if fails else None)
+        print(f"[train] done: step {rep.final_step}, {rep.n_restarts} restarts, "
+              f"loss {rep.losses[0]:.4f} -> {rep.losses[-1]:.4f}, "
+              f"stragglers {rep.straggler.n_stragglers}")
+        return 0
+
+    state = new_state()
+    t0 = time.time()
+    for i in range(args.steps):
+        state, m = step_fn(state, data.batch_for_step(i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"[train] step {i:5d} loss {float(m['loss']):.4f} "
+                  f"gnorm {float(m['grad_norm']):.3f} "
+                  f"({(time.time()-t0)/(i+1)*1e3:.0f} ms/step)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,8 @@
+"""Model definitions for the assigned architectures.
+
+``backbone`` provides the family-agnostic stack (init / lm_loss / prefill /
+decode_step); ``config.ModelConfig`` describes every family; per-arch configs
+live in ``repro.configs``.
+"""
+from . import backbone, blocks, config, layers, moe  # noqa: F401
+from .config import ModelConfig, reduce_config        # noqa: F401

@@ -1,0 +1,448 @@
+"""Model backbone: parameter init, scanned layer stacks, train/prefill/decode.
+
+The layer stack is organized as *groups* of consecutive identical layers
+(``config.layer_groups``); each group's parameters are stacked with a
+leading ``count`` axis and the group is executed with ``jax.lax.scan`` —
+HLO size (and XLA compile time at 512 partitioned devices) stays O(#groups),
+not O(depth).  Heterogeneous patterns (RecurrentGemma's rec/rec/attn,
+DeepSeek's 3-dense prefix) simply produce a few more groups.
+
+Caches mirror the group structure: ``caches["groups"][i]`` is the stacked
+per-layer cache pytree for group i, threaded through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import blocks
+from .config import (
+    ATTN, DENSE, LOCAL_ATTN, MLA, MOE, RGLRU, RWKV6, BlockSpec, ModelConfig,
+    layer_groups,
+)
+from .layers import norm, split_tree, uinit
+from .moe import moe_apply, moe_init
+
+Params = Dict[str, Any]
+
+# A (logical-name) sharding hint for EP mode, set by repro.launch.shardings.
+_EP_SPEC = None
+# Residual-stream sharding constraint (sequence parallelism), ditto.
+_ACT_SPEC = None
+
+
+def set_ep_spec(spec) -> None:
+    """Expert-parallel sharding constraint for the MoE dispatch buffer."""
+    global _EP_SPEC
+    _EP_SPEC = spec
+
+
+def set_act_spec(spec) -> None:
+    """Sharding constraint applied to the (B, T, D) residual stream between
+    layers (sequence parallelism when the spec shards T over 'model')."""
+    global _ACT_SPEC
+    _ACT_SPEC = spec
+
+
+# True layer unrolling (Python loop instead of lax.scan).  Only used by the
+# dry-run's shallow cost-extrapolation lowerings: XLA's cost_analysis counts
+# a while-loop body ONCE regardless of trip count, so exact per-layer
+# FLOPs/bytes/collective costs are only visible in unrolled HLO.
+_UNROLL = False
+
+
+def set_unroll(flag: bool) -> None:
+    global _UNROLL
+    _UNROLL = bool(flag)
+
+
+def _constrain_act(h):
+    if _ACT_SPEC is not None and h.ndim == len(_ACT_SPEC) and h.shape[1] > 1:
+        h = jax.lax.with_sharding_constraint(h, _ACT_SPEC)
+    return h
+
+
+# =========================================================================== #
+# init                                                                         #
+# =========================================================================== #
+def _block_init(rng, cfg: ModelConfig, spec: BlockSpec):
+    """Params+axes for ONE layer of this spec."""
+    p: Params = {}
+    a: Params = {}
+    if spec.kind in (ATTN, LOCAL_ATTN):
+        p["mix"], a["mix"] = blocks.attn_init(rng, cfg)
+    elif spec.kind == MLA:
+        p["mix"], a["mix"] = blocks.mla_init(rng, cfg)
+    elif spec.kind == RWKV6:
+        p["mix"], a["mix"] = blocks.rwkv6_init(rng, cfg)
+    elif spec.kind == RGLRU:
+        p["mix"], a["mix"] = blocks.rglru_init(rng, cfg)
+    else:
+        raise ValueError(spec.kind)
+    r2, r3 = jax.random.split(jax.random.fold_in(rng, 7))
+    if spec.cross_attn:
+        p["cross"], a["cross"] = blocks.attn_init(r2, cfg, cross=True)
+    if spec.kind != RWKV6:  # RWKV6 owns its channel mix
+        if spec.mlp == MOE:
+            p["mlp"], a["mlp"] = moe_init(r3, cfg)
+        else:
+            p["mlp"], a["mlp"] = blocks.mlp_block_init(r3, cfg)
+    return p, a
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def _block_axes(cfg: ModelConfig, spec: BlockSpec):
+    """Axes tree for one layer WITHOUT allocating parameters (the axes tree
+    is static python; capture it from an abstract trace)."""
+    box = {}
+
+    def f(r):
+        p, a = _block_init(r, cfg, spec)
+        box["a"] = a
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["a"]
+
+
+def _group_init(rng, cfg: ModelConfig, spec: BlockSpec, count: int):
+    """Stacked params for a group (leading ``count`` axis)."""
+    axes_one = _block_axes(cfg, spec)
+    keys = jax.random.split(rng, count)
+    params = jax.vmap(lambda r: _block_init(r, cfg, spec)[0])(keys)
+    axes = jax.tree.map(lambda ax: ("layers",) + tuple(ax), axes_one,
+                        is_leaf=_is_axes_leaf)
+    return params, axes
+
+
+def init_params(cfg: ModelConfig, rng, dtype=jnp.float32):
+    """Full parameter pytree + logical-axes pytree."""
+    r = split_tree(rng, 8)
+    params: Params = {}
+    axes: Params = {}
+    params["embed"] = uinit(r[0], (cfg.vocab, cfg.d_model), scale=0.02)
+    axes["embed"] = ("vocab", "d_model")
+
+    groups = layer_groups(cfg)
+    gp, ga = [], []
+    for i, (spec, count) in enumerate(groups):
+        p, a = _group_init(jax.random.fold_in(r[1], i), cfg, spec, count)
+        gp.append(p)
+        ga.append(a)
+    params["groups"] = gp
+    axes["groups"] = ga
+    params["final_norm"] = jnp.zeros((cfg.d_model,))
+    axes["final_norm"] = ("d_model",)
+
+    if not cfg.tie_embeddings:
+        params["head"] = uinit(r[2], (cfg.d_model, cfg.vocab), scale=0.02)
+        axes["head"] = ("d_model", "vocab")
+
+    if cfg.is_encdec:
+        spec = BlockSpec(ATTN, DENSE)
+        p, a = _group_init(r[3], cfg, spec, cfg.encoder_layers)
+        params["enc"] = {"groups": [p], "final_norm": jnp.zeros((cfg.d_model,))}
+        axes["enc"] = {"groups": [a], "final_norm": ("d_model",)}
+
+    if cfg.mtp:
+        rr = split_tree(r[4], 4)
+        blk_p, blk_a = _block_init(rr[0], cfg, BlockSpec(ATTN, DENSE))
+        params["mtp"] = {
+            "proj": uinit(rr[1], (2 * cfg.d_model, cfg.d_model)),
+            "ln_h": jnp.zeros((cfg.d_model,)),
+            "ln_e": jnp.zeros((cfg.d_model,)),
+            "block": blk_p,
+        }
+        axes["mtp"] = {
+            "proj": (None, "d_model"), "ln_h": ("d_model",),
+            "ln_e": ("d_model",), "block": blk_a,
+        }
+    params = jax.tree.map(lambda x: x.astype(dtype) if x.dtype == jnp.float32 else x, params)
+    return params, axes
+
+
+def param_axes(cfg: ModelConfig):
+    """Logical axes without materializing parameters."""
+    box = {}
+
+    def f(r):
+        p, a = init_params(cfg, r)
+        box["a"] = a
+        return p
+
+    jax.eval_shape(f, jax.random.PRNGKey(0))
+    return box["a"]
+
+
+def param_shapes(cfg: ModelConfig, dtype=jnp.float32):
+    return jax.eval_shape(
+        lambda r: init_params(cfg, r, dtype=dtype)[0], jax.random.PRNGKey(0))
+
+
+# =========================================================================== #
+# caches                                                                       #
+# =========================================================================== #
+def _block_cache(cfg: ModelConfig, spec: BlockSpec, B: int, S: int,
+                 S_enc: int, dtype):
+    c: Params = {}
+    # int8 (quantized) layout exists for plain attention KV only; recurrent
+    # state / MLA latents / cross-KV stay bf16 under an int8 request.
+    alt = jnp.bfloat16 if dtype == jnp.int8 else dtype
+    if spec.kind == ATTN:
+        c["mix"] = blocks.attn_cache(cfg, B, S, dtype)
+    elif spec.kind == LOCAL_ATTN:
+        c["mix"] = blocks.attn_cache(cfg, B, min(S, cfg.window), dtype)
+    elif spec.kind == MLA:
+        c["mix"] = blocks.mla_cache(cfg, B, S, alt)
+    elif spec.kind == RWKV6:
+        c["mix"] = blocks.rwkv6_cache(cfg, B, S, alt)
+    elif spec.kind == RGLRU:
+        c["mix"] = blocks.rglru_cache(cfg, B, S, alt)
+    if spec.cross_attn:
+        c["cross"] = blocks.cross_cache(cfg, B, S_enc, alt)
+    return c
+
+
+def init_cache(cfg: ModelConfig, B: int, S: int, S_enc: int = 0,
+               dtype=jnp.bfloat16):
+    """Decode caches, group-structured (stacked leading ``count`` axis)."""
+    out = []
+    for spec, count in layer_groups(cfg):
+        one = _block_cache(cfg, spec, B, S, S_enc, dtype)
+        out.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (count,) + x.shape), one))
+    return {"groups": out}
+
+
+def cache_shapes(cfg: ModelConfig, B: int, S: int, S_enc: int = 0,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, B, S, S_enc=S_enc, dtype=dtype))
+
+
+# =========================================================================== #
+# forward                                                                      #
+# =========================================================================== #
+def _apply_block(cfg: ModelConfig, spec: BlockSpec, p, h, mode, cache, pos,
+                 enc_out):
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+    mix_c = cache.get("mix") if cache is not None else None
+    if spec.kind == ATTN:
+        h, c = blocks.attn_apply(cfg, p["mix"], h, mode, mix_c, pos,
+                                 causal=cfg.causal)
+    elif spec.kind == LOCAL_ATTN:
+        h, c = blocks.attn_apply(cfg, p["mix"], h, mode, mix_c, pos,
+                                 window=cfg.window)
+    elif spec.kind == MLA:
+        h, c = blocks.mla_apply(cfg, p["mix"], h, mode, mix_c, pos)
+    elif spec.kind == RWKV6:
+        h, c = blocks.rwkv6_apply(cfg, p["mix"], h, mode, mix_c, pos)
+    elif spec.kind == RGLRU:
+        h, c = blocks.rglru_apply(cfg, p["mix"], h, mode, mix_c, pos)
+    else:
+        raise ValueError(spec.kind)
+    if new_cache is not None:
+        new_cache["mix"] = c
+    if spec.cross_attn:
+        cc = cache.get("cross") if cache is not None else None
+        h, c2 = blocks.cross_apply(cfg, p["cross"], h, mode, cc, enc_out)
+        if new_cache is not None:
+            new_cache["cross"] = c2
+    if spec.kind != RWKV6:
+        if spec.mlp == MOE:
+            h, a = moe_apply(cfg, p["mlp"], h, ep_spec=_EP_SPEC)
+            aux = aux + a
+        else:
+            h = blocks.mlp_block_apply(cfg, p["mlp"], h)
+    return h, new_cache, aux
+
+
+def _run_groups(cfg: ModelConfig, groups_p, h, mode, caches, pos, enc_out,
+                specs, remat: bool = False):
+    total_aux = jnp.zeros((), jnp.float32)
+    new_caches = []
+    for gi, ((spec, count), gp) in enumerate(zip(specs, groups_p)):
+        gcache = caches[gi] if caches is not None else None
+
+        if count == 1:
+            p1 = jax.tree.map(lambda x: x[0], gp)
+            c1 = jax.tree.map(lambda x: x[0], gcache) if gcache is not None else None
+            fn = functools.partial(_apply_block, cfg, spec, mode=mode, pos=pos,
+                                   enc_out=enc_out)
+            if remat:
+                fn = jax.checkpoint(
+                    lambda p_, h_, c_: _apply_block(cfg, spec, p_, h_, mode, c_, pos, enc_out))
+                h, c_new, aux = fn(p1, h, c1)
+            else:
+                h, c_new, aux = _apply_block(cfg, spec, p1, h, mode, c1, pos, enc_out)
+            h = _constrain_act(h)
+            total_aux = total_aux + aux
+            if gcache is not None:
+                new_caches.append(jax.tree.map(lambda x: x[None], c_new))
+            continue
+
+        has_cache = gcache is not None
+
+        if _UNROLL:
+            cs = []
+            for li in range(count):
+                lp = jax.tree.map(lambda x: x[li], gp)
+                lc = (jax.tree.map(lambda x: x[li], gcache) if has_cache else None)
+                h, c_new, aux = _apply_block(cfg, spec, lp, h, mode, lc, pos, enc_out)
+                h = _constrain_act(h)
+                total_aux = total_aux + aux
+                if has_cache:
+                    cs.append(c_new)
+            if has_cache:
+                new_caches.append(
+                    jax.tree.map(lambda *xs: jnp.stack(xs), *cs))
+            continue
+
+        def body(carry, xs):
+            hh, aux_acc = carry
+            lp, lc = xs
+            lc = lc if has_cache else None
+            hh, c_new, aux = _apply_block(cfg, spec, lp, hh, mode, lc, pos, enc_out)
+            hh = _constrain_act(hh)
+            return (hh, aux_acc + aux), (c_new if has_cache else 0.0)
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        # lax.scan needs a concrete xs pytree; use a dummy zeros array when
+        # there is no cache so the structure stays static.
+        xs = (gp, gcache if has_cache else jnp.zeros((count,), jnp.float32))
+        (h, total_aux), ys = lax.scan(body, (h, total_aux), xs)
+        if gcache is not None:
+            new_caches.append(ys)
+    return h, (new_caches if caches is not None else None), total_aux
+
+
+def encode(cfg: ModelConfig, params, enc_embeds, remat: bool = False):
+    """Whisper-style encoder over stub frame embeddings (B, S, D)."""
+    from .layers import sinusoid_pos
+
+    h = enc_embeds + sinusoid_pos(enc_embeds.shape[1], cfg.d_model).astype(
+        enc_embeds.dtype)
+    specs = [(BlockSpec(ATTN, DENSE), cfg.encoder_layers)]
+    cfg_enc = cfg
+    # encoder attention is bidirectional
+    object.__setattr__ if False else None
+    import dataclasses as _dc
+    cfg_enc = _dc.replace(cfg, causal=False)
+    h, _, _ = _run_groups(cfg_enc, params["enc"]["groups"], h, "train", None,
+                          0, None, specs, remat=remat)
+    return norm(h, params["enc"]["final_norm"], cfg.norm_kind, cfg.norm_eps)
+
+
+def forward(cfg: ModelConfig, params, h, mode: str, caches=None, pos=0,
+            enc_out=None, remat: bool = False):
+    """Backbone over input embeddings h (B, T, D).  Returns (h, caches, aux)."""
+    specs = layer_groups(cfg)
+    g_caches = caches["groups"] if caches is not None else None
+    h, new_g, aux = _run_groups(cfg, params["groups"], h, mode, g_caches, pos,
+                                enc_out, specs, remat=remat)
+    h = norm(h, params["final_norm"], cfg.norm_kind, cfg.norm_eps)
+    new_caches = {"groups": new_g} if caches is not None else None
+    return h, new_caches, aux
+
+
+def embed_tokens(cfg: ModelConfig, params, tokens):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def logits_fn(cfg: ModelConfig, params, h):
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return h @ w
+
+
+# =========================================================================== #
+# losses                                                                       #
+# =========================================================================== #
+def _xent(logits, labels, mask=None):
+    """Mean next-token cross-entropy in fp32.  logits: (B,T,V)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+def _mtp_loss(cfg: ModelConfig, params, h, tokens):
+    """DeepSeek MTP: one extra depth predicting token t+2 from
+    [norm(h_t); norm(emb(tok_{t+1}))]."""
+    m = params["mtp"]
+    B, T, D = h.shape
+    h_in = norm(h[:, : T - 2], m["ln_h"], cfg.norm_kind, cfg.norm_eps)
+    e_in = norm(embed_tokens(cfg, params, tokens[:, 1: T - 1]), m["ln_e"],
+                cfg.norm_kind, cfg.norm_eps)
+    hm = jnp.concatenate([h_in, e_in], axis=-1) @ m["proj"]
+    hm, _, _ = _apply_block(cfg, BlockSpec(ATTN, DENSE), m["block"], hm,
+                            "train", None, 0, None)
+    logits = logits_fn(cfg, params, hm)
+    return _xent(logits, tokens[:, 2:])
+
+
+def lm_loss(cfg: ModelConfig, params, batch, remat: bool = True):
+    """Causal-LM training loss for every family.
+
+    batch: {"tokens": (B,T) int32} (+ "enc_embeds" for enc-dec,
+    "vision_embeds" for VLM — stub frontends).  Returns (loss, metrics).
+    """
+    tokens = batch["tokens"]
+    h = embed_tokens(cfg, params, tokens)
+    enc_out = None
+    mask = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["enc_embeds"], remat=remat)
+    if cfg.frontend == "vision":
+        ve = batch["vision_embeds"].astype(h.dtype)     # (B, Nv, D)
+        nv = ve.shape[1]
+        h = jnp.concatenate([ve, h[:, nv:]], axis=1)
+        mask = jnp.concatenate(
+            [jnp.zeros((h.shape[0], nv - 1)), jnp.ones((h.shape[0], h.shape[1] - nv))],
+            axis=1)
+    h, _, aux = forward(cfg, params, h, "train", enc_out=enc_out, remat=remat)
+    logits = logits_fn(cfg, params, h[:, :-1])
+    loss = _xent(logits, tokens[:, 1:], mask)
+    metrics = {"xent": loss, "aux": aux}
+    loss = loss + aux
+    if cfg.mtp:
+        mtp = _mtp_loss(cfg, params, h, tokens)
+        metrics["mtp"] = mtp
+        loss = loss + cfg.mtp_coef * mtp
+    return loss, metrics
+
+
+# =========================================================================== #
+# serving                                                                      #
+# =========================================================================== #
+def prefill(cfg: ModelConfig, params, batch, caches):
+    """Process the full prompt, fill caches, return last-token logits."""
+    tokens = batch["tokens"]
+    h = embed_tokens(cfg, params, tokens)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = encode(cfg, params, batch["enc_embeds"])
+    if cfg.frontend == "vision":
+        ve = batch["vision_embeds"].astype(h.dtype)
+        h = jnp.concatenate([ve, h[:, ve.shape[1]:]], axis=1)
+    h, caches, _ = forward(cfg, params, h, "prefill", caches=caches,
+                           enc_out=enc_out)
+    return logits_fn(cfg, params, h[:, -1]), caches
+
+
+def decode_step(cfg: ModelConfig, params, tokens, caches, pos):
+    """One decode step.  tokens: (B,) int32; pos: scalar int32."""
+    h = embed_tokens(cfg, params, tokens[:, None])
+    h, caches, _ = forward(cfg, params, h, "decode", caches=caches, pos=pos)
+    return logits_fn(cfg, params, h[:, 0]), caches

@@ -1,0 +1,520 @@
+"""Per-kind sequence-mixing blocks: init / apply / cache for one layer.
+
+Block contract
+--------------
+``<kind>_init(rng, cfg) -> (params, axes)`` — parameters for ONE layer and a
+mirror tree of logical-axis name tuples (used to derive PartitionSpecs).
+
+``<kind>_apply(cfg, p, x, mode, cache, pos, enc_out) -> (y, new_cache)`` —
+``mode`` is "train" | "prefill" | "decode"; x is (B, T, D) ((B, 1, D) for
+decode).  ``pos`` is a scalar int32: tokens already in context.
+
+``<kind>_cache(cfg, B, S, dtype)`` — zeroed per-layer cache structs.
+
+RWKV6 blocks also own their channel-mix (the RWKV "FFN" needs its own
+token-shift state), so the backbone skips the generic MLP for them.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (
+    chunked_attention, decode_attention, mlp_apply, mlp_init, norm, rope,
+    split_tree, uinit,
+)
+from ..kernels import ops as kops
+
+Axes = Tuple[str, ...]
+
+
+# =========================================================================== #
+# softmax attention (full + local window)                                      #
+# =========================================================================== #
+def attn_init(rng, cfg: ModelConfig, cross: bool = False):
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    r = split_tree(rng, 6)
+    p = {
+        "ln": jnp.zeros((D,)),
+        "wq": uinit(r[0], (D, H, hd), scale=1 / math.sqrt(D)),
+        "wk": uinit(r[1], (D, Hkv, hd), scale=1 / math.sqrt(D)),
+        "wv": uinit(r[2], (D, Hkv, hd), scale=1 / math.sqrt(D)),
+        "wo": uinit(r[3], (H, hd, D), scale=1 / math.sqrt(H * hd)),
+    }
+    a = {
+        "ln": ("d_model",),
+        "wq": ("d_model", "heads", "head_dim"),
+        "wk": ("d_model", "kv_heads", "head_dim"),
+        "wv": ("d_model", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "d_model"),
+    }
+    if cfg.qk_norm and not cross:
+        p["qn"] = jnp.zeros((hd,))
+        p["kn"] = jnp.zeros((hd,))
+        a["qn"] = ("head_dim",)
+        a["kn"] = ("head_dim",)
+    return p, a
+
+
+def attn_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    """KV cache.  dtype int8 selects the quantized layout (per-token,
+    per-head symmetric scales) — halves the HBM stream a decode step is
+    bound by (EXPERIMENTS.md SSPerf cell C)."""
+    Hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    cache = {
+        "k": jnp.zeros((B, S, Hkv, hd), dtype),
+        "v": jnp.zeros((B, S, Hkv, hd), dtype),
+    }
+    if dtype == jnp.int8:
+        cache["ks"] = jnp.zeros((B, S, Hkv), jnp.float32)
+        cache["vs"] = jnp.zeros((B, S, Hkv), jnp.float32)
+    return cache
+
+
+def _kv_quant(x):
+    """x: (B, T, H, hd) -> (int8 values, (B, T, H) scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q, scale, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _qkv(cfg: ModelConfig, p, x, positions, *, use_rope=True):
+    q = jnp.einsum("btd,dhk->bthk", x, p["wq"])
+    k = jnp.einsum("btd,dhk->bthk", x, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", x, p["wv"])
+    if cfg.qk_norm and "qn" in p:
+        q = norm(q, p["qn"], "rmsnorm", cfg.norm_eps)
+        k = norm(k, p["kn"], "rmsnorm", cfg.norm_eps)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_apply(cfg: ModelConfig, p, x, mode: str, cache, pos,
+               *, window: int = 0, causal: bool = True, use_rope: bool = True):
+    h = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    B, T, D = h.shape
+    if mode == "decode":
+        pos = jnp.asarray(pos, jnp.int32)
+        batched_pos = pos.ndim == 1        # per-request positions (serving)
+        positions = pos[:, None] if batched_pos else jnp.full((1,), pos)
+        q, k, v = _qkv(cfg, p, h, positions, use_rope=use_rope)
+        quant = "ks" in cache              # int8 KV layout
+        S = cache["k"].shape[1]
+        slot = jnp.where(window > 0, pos % S, jnp.minimum(pos, S - 1))
+        new_cache = {}
+        if quant:
+            kq, ks1 = _kv_quant(k)
+            vq, vs1 = _kv_quant(v)
+            writes = [("k", kq, 1), ("ks", ks1, 1), ("v", vq, 1), ("vs", vs1, 1)]
+        else:
+            writes = [("k", k, 1), ("v", v, 1)]
+        for name, val, ax in writes:
+            buf = cache[name]
+            val = val.astype(buf.dtype)
+            if batched_pos:
+                new_cache[name] = buf.at[jnp.arange(B), slot].set(val[:, 0])
+            else:
+                new_cache[name] = lax.dynamic_update_slice_in_dim(
+                    buf, val, slot, axis=ax)
+        if quant:
+            k_c = _kv_dequant(new_cache["k"], new_cache["ks"], h.dtype)
+            v_c = _kv_dequant(new_cache["v"], new_cache["vs"], h.dtype)
+        else:
+            k_c, v_c = new_cache["k"], new_cache["v"]
+        o = kops.flash_decode(q[:, 0], k_c, v_c, pos)
+        y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+        return x + y, new_cache
+
+    positions = pos + jnp.arange(T)
+    q, k, v = _qkv(cfg, p, h, positions, use_rope=use_rope)
+    o = kops.flash_attention(q, k, v, causal=causal, window=window, q_offset=0)
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    new_cache = cache
+    if mode == "prefill" and cache is not None:
+        S = cache["k"].shape[1]
+        quant = "ks" in cache
+        if quant:
+            (k, ks1), (v, vs1) = _kv_quant(k), _kv_quant(v)
+        pairs = [("k", k), ("v", v)] + ([("ks", ks1), ("vs", vs1)] if quant else [])
+        new_cache = {}
+        for name, val in pairs:
+            buf = cache[name]
+            if T >= S:      # keep the last S tokens (ring window fully filled)
+                new_cache[name] = val[:, T - S:].astype(buf.dtype)
+            else:
+                new_cache[name] = lax.dynamic_update_slice_in_dim(
+                    buf, val.astype(buf.dtype), 0, axis=1)
+    return x + y, new_cache
+
+
+# --------------------------------------------------------------------------- #
+# cross-attention (whisper decoder): KV comes from the encoder output,         #
+# cached once at prefill.                                                      #
+# --------------------------------------------------------------------------- #
+def cross_cache(cfg: ModelConfig, B: int, S_enc: int, dtype):
+    return {
+        "ck": jnp.zeros((B, S_enc, cfg.n_heads, cfg.head_dim), dtype),
+        "cv": jnp.zeros((B, S_enc, cfg.n_heads, cfg.head_dim), dtype),
+    }
+
+
+def cross_apply(cfg: ModelConfig, p, x, mode: str, cache, enc_out):
+    """p: attn-style params (no qk_norm).  enc_out: (B, S_enc, D) or None
+    (decode mode reads cached cross-KV)."""
+    h = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    q = jnp.einsum("btd,dhk->bthk", h, p["wq"])
+    if mode == "decode":
+        ck, cv = cache["ck"], cache["cv"]
+        o = decode_attention(q[:, 0], ck, cv, jnp.asarray(ck.shape[1], jnp.int32))
+        y = jnp.einsum("bhk,hkd->bd", o, p["wo"])[:, None]
+        return x + y, cache
+    ck = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    cv = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    o = chunked_attention(q, ck, cv, causal=False)
+    y = jnp.einsum("bthk,hkd->btd", o, p["wo"])
+    new_cache = cache
+    if mode == "prefill" and cache is not None:
+        new_cache = {"ck": ck.astype(cache["ck"].dtype), "cv": cv.astype(cache["cv"].dtype)}
+    return x + y, new_cache
+
+
+# =========================================================================== #
+# MLA — DeepSeek multi-head latent attention                                   #
+# =========================================================================== #
+def mla_init(rng, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = split_tree(rng, 8)
+    p = {
+        "ln": jnp.zeros((D,)),
+        "wdq": uinit(r[0], (D, qr)),
+        "qn": jnp.zeros((qr,)),
+        "wuq": uinit(r[1], (qr, H, nd + rd)),
+        "wdkv": uinit(r[2], (D, kvr + rd)),
+        "kvn": jnp.zeros((kvr,)),
+        "wuk": uinit(r[3], (kvr, H, nd)),
+        "wuv": uinit(r[4], (kvr, H, vd)),
+        "wo": uinit(r[5], (H, vd, D), scale=1 / math.sqrt(H * vd)),
+    }
+    a = {
+        "ln": ("d_model",), "wdq": ("d_model", "q_lora"), "qn": ("q_lora",),
+        "wuq": ("q_lora", "heads", "head_dim"),
+        "wdkv": ("d_model", "kv_lora"), "kvn": ("kv_lora",),
+        "wuk": ("kv_lora", "heads", "head_dim"),
+        "wuv": ("kv_lora", "heads", "head_dim"),
+        "wo": ("heads", "head_dim", "d_model"),
+    }
+    return p, a
+
+
+def mla_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    return {
+        "ckv": jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((B, S, cfg.qk_rope_head_dim), dtype),
+    }
+
+
+def _mla_qkv_latent(cfg, p, h, positions):
+    nd, rd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = norm(h @ p["wdq"], p["qn"], "rmsnorm", cfg.norm_eps)
+    q = jnp.einsum("btr,rhk->bthk", cq, p["wuq"])          # (B,T,H,nd+rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    dkv = h @ p["wdkv"]                                     # (B,T,kvr+rd)
+    ckv = norm(dkv[..., : cfg.kv_lora_rank], p["kvn"], "rmsnorm", cfg.norm_eps)
+    k_rope = rope(dkv[..., cfg.kv_lora_rank:], positions, cfg.rope_theta,
+                  heads=False)
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_apply(cfg: ModelConfig, p, x, mode: str, cache, pos):
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    scale = 1.0 / math.sqrt(nd + rd)
+    h = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    B, T, D = h.shape
+
+    if mode == "decode":
+        pos = jnp.asarray(pos, jnp.int32)
+        batched_pos = pos.ndim == 1        # per-request positions (serving)
+        positions = pos[:, None] if batched_pos else jnp.full((1,), pos)
+        q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(cfg, p, h, positions)
+        S = cache["ckv"].shape[1]
+        slot = jnp.minimum(pos, S - 1)
+        if batched_pos:
+            bidx = jnp.arange(B)
+            ckv_c = cache["ckv"].at[bidx, slot].set(ckv[:, 0].astype(cache["ckv"].dtype))
+            kr_c = cache["kr"].at[bidx, slot].set(k_rope[:, 0].astype(cache["kr"].dtype))
+        else:
+            ckv_c = lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), slot, axis=1)
+            kr_c = lax.dynamic_update_slice_in_dim(cache["kr"], k_rope.astype(cache["kr"].dtype), slot, axis=1)
+        # absorbed decode: score in latent space (cache stays rank-kvr)
+        q_lat = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["wuk"])   # (B,H,kvr)
+        s = jnp.einsum("bhr,bsr->bhs", q_lat, ckv_c, preferred_element_type=jnp.float32)
+        s = s + jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], kr_c, preferred_element_type=jnp.float32)
+        pos_b = jnp.broadcast_to(pos, (B,))
+        valid = jnp.arange(S)[None, :] < jnp.minimum(pos_b + 1, S)[:, None]
+        s = jnp.where(valid[:, None, :], s * scale, -1e30)
+        w = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhs,bsr->bhr", w.astype(ckv_c.dtype), ckv_c)
+        o = jnp.einsum("bhr,rhv->bhv", o_lat, p["wuv"])              # (B,H,vd)
+        y = jnp.einsum("bhv,hvd->bd", o, p["wo"])[:, None]
+        return x + y, {"ckv": ckv_c, "kr": kr_c}
+
+    positions = pos + jnp.arange(T)
+    q_nope, q_rope, ckv, k_rope = _mla_qkv_latent(cfg, p, h, positions)
+    k_nope = jnp.einsum("btr,rhk->bthk", ckv, p["wuk"])
+    v = jnp.einsum("btr,rhv->bthv", ckv, p["wuv"])
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, T, cfg.n_heads, rd))],
+        axis=-1,
+    )
+    o = kops.flash_attention(q, k, v, causal=True, scale=scale)
+    y = jnp.einsum("bthv,hvd->btd", o, p["wo"])
+    new_cache = cache
+    if mode == "prefill" and cache is not None:
+        S = cache["ckv"].shape[1]
+        ckv_c = lax.dynamic_update_slice_in_dim(cache["ckv"], ckv.astype(cache["ckv"].dtype), 0, axis=1)
+        kr_c = lax.dynamic_update_slice_in_dim(cache["kr"], k_rope.astype(cache["kr"].dtype), 0, axis=1)
+        new_cache = {"ckv": ckv_c, "kr": kr_c}
+    return x + y, new_cache
+
+
+# =========================================================================== #
+# RWKV6 (Finch) — time-mix + channel-mix                                       #
+# =========================================================================== #
+_LORA_R = 32
+_DECAY_R = 64
+
+
+def rwkv6_init(rng, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    H = cfg.n_heads
+    dk = cfg.rwkv_head_dim
+    r = split_tree(rng, 14)
+    p = {
+        "ln_t": jnp.zeros((D,)),
+        "mu_x": jnp.zeros((D,)),                 # ddlerp base mix
+        "mu": jnp.zeros((5, D)),                 # per-target lerp (w,k,v,r,g)
+        "lora_a": uinit(r[0], (D, 5 * _LORA_R)),
+        "lora_b": uinit(r[1], (5, _LORA_R, D), scale=0.01),
+        "w0": jnp.full((D,), -3.0),              # decay base (soft init)
+        "wa": uinit(r[2], (D, _DECAY_R)),
+        "wb": uinit(r[3], (_DECAY_R, D), scale=0.01),
+        "u": uinit(r[4], (H, dk), scale=0.5),    # bonus
+        "wr": uinit(r[5], (D, D)),
+        "wk": uinit(r[6], (D, D)),
+        "wv": uinit(r[7], (D, D)),
+        "wg": uinit(r[8], (D, D)),
+        "wo": uinit(r[9], (D, D)),
+        "gn": jnp.zeros((H, dk)),                # per-head groupnorm scale
+        # channel mix
+        "ln_c": jnp.zeros((D,)),
+        "cmu_k": jnp.zeros((D,)),
+        "cmu_r": jnp.zeros((D,)),
+        "cwk": uinit(r[10], (D, F)),
+        "cwv": uinit(r[11], (F, D)),
+        "cwr": uinit(r[12], (D, D)),
+    }
+    a = {
+        "ln_t": ("d_model",), "mu_x": ("d_model",), "mu": (None, "d_model"),
+        "lora_a": ("d_model", None), "lora_b": (None, None, "d_model"),
+        "w0": ("d_model",), "wa": ("d_model", None), "wb": (None, "d_model"),
+        "u": ("heads", None),
+        "wr": ("d_model", "rwkv_d2"), "wk": ("d_model", "rwkv_d2"),
+        "wv": ("d_model", "rwkv_d2"), "wg": ("d_model", "rwkv_d2"),
+        "wo": ("rwkv_d2", "d_model"), "gn": ("heads", None),
+        "ln_c": ("d_model",), "cmu_k": ("d_model",), "cmu_r": ("d_model",),
+        "cwk": ("d_model", "d_ff"), "cwv": ("d_ff", "d_model"),
+        "cwr": ("d_model", "rwkv_d2"),
+    }
+    return p, a
+
+
+def rwkv6_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    H, dk = cfg.n_heads, cfg.rwkv_head_dim
+    return {
+        "x_tm": jnp.zeros((B, cfg.d_model), dtype),
+        "x_cm": jnp.zeros((B, cfg.d_model), dtype),
+        "s": jnp.zeros((B, H, dk, dk), jnp.float32),
+    }
+
+
+def _token_shift(x, x_prev):
+    """x: (B,T,D); x_prev: (B,D) last token of the previous segment."""
+    return jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+
+
+def _headify(x, H, d):
+    B, T = x.shape[:2]
+    return x.reshape(B, T, H, d)
+
+
+def rwkv6_apply(cfg: ModelConfig, p, x, mode: str, cache, pos):
+    B, T, D = x.shape
+    H, dk = cfg.n_heads, cfg.rwkv_head_dim
+    dtype = x.dtype
+    zeros_prev = jnp.zeros((B, D), dtype)
+    x_tm_prev = cache["x_tm"].astype(dtype) if cache is not None else zeros_prev
+    x_cm_prev = cache["x_cm"].astype(dtype) if cache is not None else zeros_prev
+    s0 = cache["s"] if cache is not None else jnp.zeros((B, H, dk, dk), jnp.float32)
+
+    # ---- time mix ----------------------------------------------------------
+    h = norm(x, p["ln_t"], cfg.norm_kind, cfg.norm_eps)
+    h_shift = _token_shift(h, x_tm_prev)
+    dx = h_shift - h
+    xxx = h + dx * p["mu_x"]
+    mix = jnp.tanh(xxx @ p["lora_a"]).reshape(B, T, 5, _LORA_R)
+    mix = jnp.einsum("btfr,frd->btfd", mix, p["lora_b"])
+    tgt = h[:, :, None] + dx[:, :, None] * (p["mu"][None, None] + mix)  # (B,T,5,D)
+    x_w, x_k, x_v, x_r, x_g = [tgt[:, :, i] for i in range(5)]
+    w_log = p["w0"] + jnp.tanh(x_w @ p["wa"]) @ p["wb"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32)))           # decay in (0,1)
+    r = _headify(x_r @ p["wr"], H, dk)
+    k = _headify(x_k @ p["wk"], H, dk)
+    v = _headify(x_v @ p["wv"], H, dk)
+    g = jax.nn.silu(x_g @ p["wg"])
+    w = _headify(w, H, dk)
+
+    y, sT = kops.wkv6(r, k, v, w, p["u"], s0)                  # (B,T,H,dk)
+    # per-head group norm
+    yf = y.astype(jnp.float32)
+    mu_ = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu_) * lax.rsqrt(var + 64e-5) * (1.0 + p["gn"][None, None])
+    out_t = (yn.reshape(B, T, D).astype(dtype) * g) @ p["wo"]
+    x = x + out_t
+
+    # ---- channel mix --------------------------------------------------------
+    hc = norm(x, p["ln_c"], cfg.norm_kind, cfg.norm_eps)
+    hc_shift = _token_shift(hc, x_cm_prev)
+    dxc = hc_shift - hc
+    xk = hc + dxc * p["cmu_k"]
+    xr = hc + dxc * p["cmu_r"]
+    kk = jnp.square(jax.nn.relu(xk @ p["cwk"]))
+    out_c = jax.nn.sigmoid(xr @ p["cwr"]) * (kk @ p["cwv"])
+    x = x + out_c
+
+    new_cache = cache
+    if cache is not None and mode in ("prefill", "decode"):
+        new_cache = {
+            "x_tm": h[:, -1].astype(cache["x_tm"].dtype),
+            "x_cm": hc[:, -1].astype(cache["x_cm"].dtype),
+            "s": sT,
+        }
+    return x, new_cache
+
+
+# =========================================================================== #
+# RG-LRU (Griffin / RecurrentGemma recurrent block)                            #
+# =========================================================================== #
+_CONV_W = 4
+_LRU_C = 8.0
+
+
+def rglru_init(rng, cfg: ModelConfig):
+    D, W, H = cfg.d_model, cfg.lru_width, cfg.n_heads
+    bw = W // H
+    r = split_tree(rng, 7)
+    p = {
+        "ln": jnp.zeros((D,)),
+        "w_x": uinit(r[0], (D, W)),
+        "w_g": uinit(r[1], (D, W)),
+        "conv_w": uinit(r[2], (_CONV_W, W), scale=0.5),
+        "conv_b": jnp.zeros((W,)),
+        "rg_a": uinit(r[3], (H, bw, bw)),        # recurrence gate (block diag)
+        "rg_x": uinit(r[4], (H, bw, bw)),        # input gate (block diag)
+        "rg_a_b": jnp.zeros((W,)),
+        "rg_x_b": jnp.zeros((W,)),
+        "lam": jnp.linspace(0.2, 0.9, W),        # softplus^-1-ish spread init
+        "w_out": uinit(r[5], (W, D)),
+    }
+    a = {
+        "ln": ("d_model",), "w_x": ("d_model", "lru"), "w_g": ("d_model", "lru"),
+        "conv_w": (None, "lru"), "conv_b": ("lru",),
+        "rg_a": ("heads", None, None), "rg_x": ("heads", None, None),
+        "rg_a_b": ("lru",), "rg_x_b": ("lru",), "lam": ("lru",),
+        "w_out": ("lru", "d_model"),
+    }
+    return p, a
+
+
+def rglru_cache(cfg: ModelConfig, B: int, S: int, dtype):
+    W = cfg.lru_width
+    return {
+        "conv": jnp.zeros((B, _CONV_W - 1, W), dtype),
+        "h": jnp.zeros((B, W), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, x_prev):
+    """Depthwise causal conv, width 4.  x: (B,T,W); x_prev: (B,3,W)."""
+    xx = jnp.concatenate([x_prev.astype(x.dtype), x], axis=1)
+    T = x.shape[1]
+    out = b + sum(w[i] * lax.dynamic_slice_in_dim(xx, (_CONV_W - 1 - i), T, axis=1)
+                  for i in range(_CONV_W))
+    return out
+
+
+def _block_diag(x, w, b, H):
+    """x: (B,T,W) -> block-diagonal linear with H blocks."""
+    B, T, W = x.shape
+    bw = W // H
+    xh = x.reshape(B, T, H, bw)
+    return (jnp.einsum("bthi,hij->bthj", xh, w).reshape(B, T, W) + b)
+
+
+def rglru_apply(cfg: ModelConfig, p, x, mode: str, cache, pos):
+    B, T, D = x.shape
+    W, H = cfg.lru_width, cfg.n_heads
+    h_in = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    xb = h_in @ p["w_x"]                                     # recurrent branch
+    gb = jax.nn.gelu(h_in @ p["w_g"])                        # gate branch
+    conv_prev = (cache["conv"].astype(xb.dtype) if cache is not None
+                 else jnp.zeros((B, _CONV_W - 1, W), xb.dtype))
+    xc = _causal_conv(xb, p["conv_w"], p["conv_b"], conv_prev)
+    rg = jax.nn.sigmoid(_block_diag(xc, p["rg_a"], p["rg_a_b"], H))
+    ig = jax.nn.sigmoid(_block_diag(xc, p["rg_x"], p["rg_x_b"], H))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * rg.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_x = (ig * xc).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = beta * gated_x
+    h0 = cache["h"] if cache is not None else jnp.zeros((B, W), jnp.float32)
+
+    h_seq, hT = kops.linear_recurrence(a, bt, h0)            # (B,T,W) fp32
+    y = (gb * h_seq.astype(gb.dtype)) @ p["w_out"]
+    new_cache = cache
+    if cache is not None and mode in ("prefill", "decode"):
+        tail = jnp.concatenate([conv_prev, xb], axis=1)[:, -(_CONV_W - 1):]
+        new_cache = {"conv": tail.astype(cache["conv"].dtype), "h": hT}
+    return x + y, new_cache
+
+
+# =========================================================================== #
+# dispatch tables                                                              #
+# =========================================================================== #
+def mlp_block_init(rng, cfg: ModelConfig):
+    p, a = mlp_init(rng, cfg.d_model, cfg.d_ff, cfg.mlp_act)
+    p = {"ln": jnp.zeros((cfg.d_model,)), **p}
+    a = {"ln": ("d_model",), **a}
+    return p, a
+
+
+def mlp_block_apply(cfg: ModelConfig, p, x):
+    h = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    return x + mlp_apply(p, h, cfg.mlp_act)

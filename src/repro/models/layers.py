@@ -1,0 +1,214 @@
+"""Primitive layers shared by every architecture (pure-jnp, shard-friendly).
+
+Attention here is the *chunked* formulation (bounded memory: each query chunk
+attends to the full — or windowed — key range with fp32 softmax).  It is both
+the CPU/dry-run execution path and the jnp oracle for the Pallas flash
+kernels in ``repro.kernels``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "rmsnorm", "layernorm", "norm", "rope", "rope_angles", "sinusoid_pos",
+    "mlp_apply", "mlp_init", "chunked_attention", "decode_attention",
+    "uinit", "split_tree",
+]
+
+_NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# init helpers                                                                 #
+# --------------------------------------------------------------------------- #
+def uinit(rng, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Scaled-uniform (LeCun-ish) initializer; scale defaults to 1/sqrt(fan_in)."""
+    if scale is None:
+        fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+        scale = 1.0 / math.sqrt(max(1, fan_in))
+    return jax.random.uniform(rng, shape, dtype, -scale, scale)
+
+
+def split_tree(rng, n: int):
+    return list(jax.random.split(rng, n))
+
+
+# --------------------------------------------------------------------------- #
+# norms                                                                        #
+# --------------------------------------------------------------------------- #
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, w, b=None, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(x, w, kind: str = "rmsnorm", eps: float = 1e-6):
+    return layernorm(x, w, eps=eps) if kind == "layernorm" else rmsnorm(x, w, eps)
+
+
+# --------------------------------------------------------------------------- #
+# positions                                                                    #
+# --------------------------------------------------------------------------- #
+def rope_angles(positions, head_dim: int, theta: float):
+    """(..., hd/2) angles for the given integer positions."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    return positions.astype(jnp.float32)[..., None] * freqs  # (..., hd/2)
+
+
+def rope(x, positions, theta: float = 1e4, *, heads: bool = True):
+    """Rotary embedding.  x: (..., T, H, hd) when ``heads`` (default) else
+    (..., T, hd); positions: (T,) (or (1,) during decode)."""
+    hd = x.shape[-1]
+    ang = rope_angles(positions, hd, theta)            # (T, hd/2)
+    if heads:
+        ang = ang[..., None, :]                        # (T, 1, hd/2)
+    while ang.ndim < x.ndim:
+        ang = ang[None, ...]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoid_pos(T: int, d: int, offset: int = 0):
+    pos = jnp.arange(offset, offset + T, dtype=jnp.float32)
+    ang = rope_angles(pos, d, 1e4)                     # (T, d/2)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)  # (T, d)
+
+
+# --------------------------------------------------------------------------- #
+# MLP                                                                          #
+# --------------------------------------------------------------------------- #
+def mlp_init(rng, d: int, f: int, act: str):
+    r = split_tree(rng, 3)
+    if act in ("swiglu", "gelu_gated"):
+        p = {"wg": uinit(r[0], (d, f)), "wu": uinit(r[1], (d, f)),
+             "wd": uinit(r[2], (f, d))}
+        a = {"wg": ("d_model", "d_ff"), "wu": ("d_model", "d_ff"),
+             "wd": ("d_ff", "d_model")}
+    else:  # plain gelu (whisper)
+        p = {"wi": uinit(r[0], (d, f)), "wo": uinit(r[1], (f, d)),
+             "bi": jnp.zeros((f,)), "bo": jnp.zeros((d,))}
+        a = {"wi": ("d_model", "d_ff"), "wo": ("d_ff", "d_model"),
+             "bi": ("d_ff",), "bo": ("d_model",)}
+    return p, a
+
+
+def mlp_apply(p, x, act: str):
+    if act in ("swiglu", "gelu_gated"):
+        g = x @ p["wg"]
+        g = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return (g * (x @ p["wu"])) @ p["wd"]
+    h = jax.nn.gelu(x @ p["wi"] + p["bi"])
+    return h @ p["wo"] + p["bo"]
+
+
+# --------------------------------------------------------------------------- #
+# attention (chunked oracle)                                                   #
+# --------------------------------------------------------------------------- #
+def _pick_chunk(T: int, target: int = 1024) -> int:
+    c = min(T, target)
+    while T % c:
+        c //= 2
+    return max(c, 1)
+
+
+def chunked_attention(
+    q, k, v, *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    scale: Optional[float] = None,
+    chunk: int = 1024,
+):
+    """Chunked multi-head attention with GQA.
+
+    q: (B, Tq, H, hd); k, v: (B, Tk, Hkv, hd_k/hd_v).  Each query chunk
+    attends to the full key range (or the sliding window for local
+    attention), with fp32 softmax.  Memory: O(chunk x window-or-Tk).
+    """
+    B, Tq, H, hd = q.shape
+    Tk, Hkv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    G = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    c = _pick_chunk(Tq, chunk)
+    nq = Tq // c
+
+    qc = q.reshape(B, nq, c, Hkv, G, hd).transpose(1, 0, 2, 3, 4, 5)
+
+    use_window = window > 0 and window < Tk
+    kv_span = min(Tk, window + c) if use_window else Tk
+
+    def one_chunk(ci, q_blk):
+        # q_blk: (B, c, Hkv, G, hd)
+        row = q_offset + ci * c + jnp.arange(c)                    # (c,)
+        if use_window:
+            start = jnp.clip(ci * c + q_offset - window + 1, 0, Tk - kv_span)
+            k_blk = lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            v_blk = lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+            col = start + jnp.arange(kv_span)
+        else:
+            k_blk, v_blk, col = k, v, jnp.arange(Tk)
+        s = jnp.einsum("bckgh,btkh->bckgt", q_blk, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones((c, s.shape[-1]), dtype=bool)
+        if causal:
+            mask &= col[None, :] <= row[:, None]
+        if window > 0:
+            mask &= col[None, :] > row[:, None] - window
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bckgt,btkh->bckgh", p.astype(v.dtype), v_blk,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    if nq == 1:
+        out = one_chunk(0, qc[0])[None]
+    else:
+        out = lax.map(lambda args: one_chunk(*args), (jnp.arange(nq), qc))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, Tq, H, hdv)
+    return out
+
+
+def decode_attention(q, k_cache, v_cache, cur_len, *, scale=None, ring: bool = False):
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B, H, hd); k_cache/v_cache: (B, S, Hkv, hd); cur_len: () or (B,)
+    int32 — number of tokens already in context (the new token's position;
+    per-request when (B,), for continuous batching).  For ring buffers the
+    cache *is* the window; every slot < min(cur_len+1, S) is valid (the new
+    token has been written before attention).
+    """
+    B, S, Hkv, hd = k_cache.shape
+    H = q.shape[1]
+    G = H // Hkv
+    hdv = v_cache.shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(q.shape[-1])
+    qg = q.reshape(B, Hkv, G, -1)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    cur = jnp.broadcast_to(jnp.asarray(cur_len, jnp.int32), (B,))
+    valid = jnp.arange(S)[None, :] < jnp.minimum(cur + 1, S)[:, None]
+    s = jnp.where(valid[:, None, None, :], s, _NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, H, hdv).astype(q.dtype)

@@ -1,0 +1,169 @@
+"""Mixture-of-Experts layer: shared experts + routed top-k (sort-based dispatch).
+
+TPU-native dispatch: instead of the (tokens x experts x capacity) one-hot
+einsum (memory O(T*E*C) — prohibitive at 256 experts), tokens are *sorted* by
+assigned expert and scattered into a dense (E, C, D) buffer with per-expert
+capacity C = ceil(cf * T * k / E); expert compute is then one batched matmul
+(E, C, D) x (E, D, F) whose FLOPs match the *active* parameter count (plus
+the capacity-factor slack).  Tokens over capacity are dropped (standard
+Switch-style behaviour; the aux loss keeps the router balanced).
+
+Sharding: with experts replicated, the buffer's D/F dims are TP-sharded
+(baseline).  Setting ``ep_axis`` adds a sharding constraint placing experts
+on the model axis — GSPMD then inserts the all-to-all dispatch/combine
+(expert parallelism, the DeepSeek-style layout) — the EP hillclimb toggle.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import norm, split_tree, uinit
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(rng, cfg: ModelConfig):
+    D, Fe = cfg.d_model, cfg.d_expert
+    # padded ("dead") experts make E divide the mesh's model axis (e.g.
+    # qwen2-moe's 60 -> 64); the router never selects them (masked logits)
+    E = cfg.n_experts + cfg.n_experts_pad
+    r = split_tree(rng, 8)
+    p = {
+        "ln": jnp.zeros((D,)),
+        "router": uinit(r[0], (D, E), scale=0.02),
+        "wg": uinit(r[1], (E, D, Fe), scale=1 / math.sqrt(D)),
+        "wu": uinit(r[2], (E, D, Fe), scale=1 / math.sqrt(D)),
+        "wd": uinit(r[3], (E, Fe, D), scale=1 / math.sqrt(Fe)),
+    }
+    a = {
+        "ln": ("d_model",),
+        "router": ("d_model", None),
+        "wg": ("experts", "d_model", "d_expert"),
+        "wu": ("experts", "d_model", "d_expert"),
+        "wd": ("experts", "d_expert", "d_model"),
+    }
+    if cfg.d_shared:
+        p.update({
+            "swg": uinit(r[4], (D, cfg.d_shared)),
+            "swu": uinit(r[5], (D, cfg.d_shared)),
+            "swd": uinit(r[6], (cfg.d_shared, D)),
+        })
+        a.update({
+            "swg": ("d_model", "d_shared"), "swu": ("d_model", "d_shared"),
+            "swd": ("d_shared", "d_model"),
+        })
+        if cfg.shared_gate:
+            p["sgate"] = uinit(r[7], (D, 1), scale=0.02)
+            a["sgate"] = ("d_model", None)
+    return p, a
+
+
+# Number of independent routing groups.  Real systems dispatch per DP rank:
+# each rank routes only its own tokens, so the scatter/gather stays rank-
+# local and the only cross-device movement is the intended dispatch
+# all-to-all.  Expressed in GSPMD by giving the token set a static leading
+# ``groups`` axis sharded over the data axes (repro.launch.shardings sets
+# this + the buffer constraint); a single global sort-scatter is
+# unpartitionable and forces XLA to replicate the (E, C, D) buffer.
+_GROUPS = 1
+
+
+def set_groups(g: int) -> None:
+    global _GROUPS
+    _GROUPS = max(1, int(g))
+
+
+def get_groups() -> int:
+    return _GROUPS
+
+
+def _dispatch_compute(cfg: ModelConfig, p, x3d, probs, ep_spec):
+    """x3d: (G, Tg, D); probs: (G, Tg, E).  Returns routed output (G, Tg, D).
+
+    Per-group sort-based dispatch: tokens are sorted by assigned expert and
+    scattered into a dense (G, E, C, D) buffer with per-expert, per-group
+    capacity C = ceil(cf * Tg * k / E); expert compute is one batched matmul
+    whose FLOPs match the active parameter count (+ capacity slack)."""
+    G, Tg, D = x3d.shape
+    E = cfg.n_experts + cfg.n_experts_pad     # buffer spans padded experts
+    k = cfg.top_k
+    # capacity per *real* expert (padded ones receive no tokens)
+    C = max(1, int(math.ceil(cfg.capacity_factor * Tg * k / cfg.n_experts)))
+
+    topv, topi = lax.top_k(probs, k)                         # (G, Tg, k)
+    topv = topv / jnp.maximum(topv.sum(-1, keepdims=True), 1e-9)
+    flat_e = topi.reshape(G, Tg * k)
+    order = jnp.argsort(flat_e, axis=1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=1)
+    seg_start = jax.vmap(
+        lambda s: jnp.searchsorted(s, jnp.arange(E)))(sorted_e)   # (G, E)
+    pos_in_e = jnp.arange(Tg * k)[None] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=1)
+    keep = pos_in_e < C
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)   # E*C = drop slot
+    token_of = order // k
+
+    buf = jax.vmap(
+        lambda xg, sl, tk: jnp.zeros((E * C, D), x3d.dtype).at[sl].set(
+            xg[tk], mode="drop")
+    )(x3d, slot, token_of).reshape(G, E, C, D)
+    if ep_spec is not None:
+        buf = lax.with_sharding_constraint(buf, ep_spec)
+
+    h_g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["wg"]))
+    h_u = jnp.einsum("gecd,edf->gecf", buf, p["wu"])
+    out = jnp.einsum("gecf,efd->gecd", h_g * h_u, p["wd"])   # (G, E, C, D)
+    if ep_spec is not None:
+        out = lax.with_sharding_constraint(out, ep_spec)
+    out = out.reshape(G, E * C, D)
+
+    gathered = jnp.take_along_axis(
+        out, jnp.minimum(slot, E * C - 1)[..., None], axis=1)
+    gathered = jnp.where(keep[..., None], gathered, 0.0)
+    w = jnp.take_along_axis(topv.reshape(G, Tg * k), order, axis=1)
+    gathered = gathered * w[..., None].astype(gathered.dtype)
+    y = jax.vmap(
+        lambda tk, ga: jnp.zeros((Tg, D), x3d.dtype).at[tk].add(ga)
+    )(token_of, gathered)
+    return y
+
+
+def moe_apply(cfg: ModelConfig, p, x, ep_spec=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, D) -> (y, aux_loss).  aux = load-balance + router-z."""
+    B, T, D = x.shape
+    h = norm(x, p["ln"], cfg.norm_kind, cfg.norm_eps)
+    x2d = h.reshape(B * T, D)
+
+    logits = (x2d @ p["router"]).astype(jnp.float32)         # (T', E_alloc)
+    if cfg.n_experts_pad:
+        pad_mask = jnp.arange(logits.shape[-1]) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e9, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    G = _GROUPS if (B * T) % _GROUPS == 0 else 1
+    y = _dispatch_compute(cfg, p, x2d.reshape(G, (B * T) // G, D),
+                          probs.reshape(G, (B * T) // G, -1), ep_spec)
+    y = y.reshape(B * T, D)
+
+    if cfg.d_shared:
+        sg = jax.nn.silu(x2d @ p["swg"]) * (x2d @ p["swu"])
+        s_out = sg @ p["swd"]
+        if cfg.shared_gate:
+            s_out = s_out * jax.nn.sigmoid(x2d @ p["sgate"])
+        y = y + s_out
+
+    # aux losses (Switch-style load balance + z-loss)
+    E = cfg.n_experts
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs[..., :E], axis=0)   # real experts only
+    lb = E * jnp.sum(frac_tokens * frac_probs)
+    zl = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+    aux = cfg.router_aux_coef * lb + cfg.router_z_coef * zl
+
+    return x + y.reshape(B, T, D), aux

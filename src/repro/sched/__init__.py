@@ -1,0 +1,19 @@
+"""repro.sched — online scheduling engine: DFRS discrete-event simulator,
+batch-scheduling baselines (FCFS/EASY), evaluation metrics, cluster model."""
+from .simulator import DFRSSimulator, SimParams, SimResult, simulate
+from .batch import batch_schedule
+from .metrics import (
+    bounded_stretch,
+    max_bounded_stretch,
+    degradation_from_bound,
+    normalized_underutilization,
+)
+from .cluster import ClusterEvent, failure_trace
+
+__all__ = [
+    "DFRSSimulator", "SimParams", "SimResult", "simulate",
+    "batch_schedule",
+    "bounded_stretch", "max_bounded_stretch", "degradation_from_bound",
+    "normalized_underutilization",
+    "ClusterEvent", "failure_trace",
+]

@@ -1,0 +1,55 @@
+"""Cluster model: node failures and elastic capacity events.
+
+On the TPU adaptation a "fail" is a chip/host loss — every resident job is
+force-preempted (checkpoint image already on network storage; the DFRS
+rescheduling penalty models restore + recompile) and the scheduler's node
+pool shrinks; a "join" restores capacity.  DFRS needs no special-case logic:
+failures reuse the pause path and the next scheduling event re-places work,
+which is exactly how the paper's preemption/migration machinery doubles as
+fault tolerance.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["ClusterEvent", "failure_trace"]
+
+
+@dataclass(frozen=True)
+class ClusterEvent:
+    time: float
+    kind: str          # "fail" | "join"
+    nodes: Tuple[int, ...]
+
+    def __post_init__(self):
+        if self.kind not in ("fail", "join"):
+            raise ValueError(self.kind)
+
+
+def failure_trace(
+    n_nodes: int,
+    horizon: float,
+    mtbf: float,
+    repair: float,
+    seed: int = 0,
+) -> List[ClusterEvent]:
+    """Poisson node failures with deterministic repair time.
+
+    ``mtbf`` is the per-cluster mean time between failures (s); each failure
+    hits one uniformly random node and is repaired after ``repair`` seconds.
+    """
+    rng = np.random.default_rng(seed)
+    events: List[ClusterEvent] = []
+    t = 0.0
+    while True:
+        t += float(rng.exponential(mtbf))
+        if t >= horizon:
+            break
+        node = int(rng.integers(n_nodes))
+        events.append(ClusterEvent(t, "fail", (node,)))
+        events.append(ClusterEvent(t + repair, "join", (node,)))
+    events.sort(key=lambda e: e.time)
+    return events

@@ -1,0 +1,4 @@
+"""Training/serving substrate: optimizer, data, checkpoint, FT, serving."""
+from . import checkpoint, compression, data, ft, optimizer, serve, trainer  # noqa: F401
+from .optimizer import OptConfig                                            # noqa: F401
+from .trainer import TrainState, init_train_state, make_train_step         # noqa: F401

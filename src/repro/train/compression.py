@@ -1,0 +1,47 @@
+"""Gradient compression for data-parallel all-reduce.
+
+int8 per-tensor symmetric quantization with error feedback (1-bit-Adam-style
+residual carry).  Under pjit the quantized tensor is what crosses the ``data``
+axis; at 512 chips the DP all-reduce payload drops 4x (f32) / 2x (bf16).
+
+The compression is deliberately simple and exactly invertible in structure
+(scale carried alongside), so tests can assert the error-feedback invariant:
+    decompress(compress(g + e)) + e' == g + e   (up to quantization rounding)
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Compressed", "compress_int8", "decompress_int8"]
+
+Pytree = Any
+
+
+class Compressed(NamedTuple):
+    q: Pytree        # int8 tensors
+    scale: Pytree    # f32 scalars
+
+
+def _q_one(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    g = g.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def compress_int8(grads: Pytree) -> Tuple[Compressed, Pytree]:
+    """Quantize; return (compressed, new_error_feedback)."""
+    qs = jax.tree.map(_q_one, grads)
+    q = jax.tree.map(lambda t: t[0], qs, is_leaf=lambda x: isinstance(x, tuple))
+    scale = jax.tree.map(lambda t: t[1], qs, is_leaf=lambda x: isinstance(x, tuple))
+    deq = decompress_int8(Compressed(q, scale))
+    err = jax.tree.map(lambda g, d: g.astype(jnp.float32) - d, grads, deq)
+    return Compressed(q, scale), err
+
+
+def decompress_int8(comp: Compressed) -> Pytree:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, comp.q, comp.scale)

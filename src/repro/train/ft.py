@@ -1,0 +1,132 @@
+"""Fault tolerance: restartable training loop, failure injection, straggler
+mitigation hooks.
+
+This is the runtime half of the paper's preemption/migration machinery on
+the TPU adaptation: DFRS pauses a job = the job checkpoints and exits; DFRS
+resumes/migrates = the job restarts from the latest checkpoint on a (possibly
+different) slice.  ``run_restartable`` implements the job-side contract:
+
+* checkpoint every ``ckpt_every`` steps (async) + on SIGTERM-like requests;
+* on (re)start, resume from the newest complete checkpoint — and because
+  the data pipeline is deterministic in the step counter, the trajectory is
+  bit-identical to an uninterrupted run;
+* a ``FailureInjector`` drives chaos tests (raise at step k / random rate);
+* straggler detection: per-step wall-time EMA; steps slower than
+  ``straggler_factor``x the EMA are counted and surfaced so a cluster-level
+  scheduler can re-place the job (on real pods this feeds DFRS's migration
+  trigger; see repro.sched.cluster).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from . import checkpoint as ckpt
+
+__all__ = ["FailureInjector", "RunReport", "run_restartable", "StragglerStats"]
+
+
+class InjectedFailure(RuntimeError):
+    """A simulated node failure."""
+
+
+@dataclass
+class FailureInjector:
+    """Deterministic failure schedule: fail the run when the *global* step
+    first reaches each entry of ``at_steps`` (each fires once)."""
+
+    at_steps: Tuple[int, ...] = ()
+    _fired: set = field(default_factory=set)
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self._fired:
+            return
+        if step in self.at_steps:
+            self._fired.add(step)
+            raise InjectedFailure(f"injected node failure at step {step}")
+
+
+@dataclass
+class StragglerStats:
+    ema: float = 0.0
+    n_steps: int = 0
+    n_stragglers: int = 0
+    worst_ratio: float = 1.0
+
+    def observe(self, dt: float, factor: float = 3.0, beta: float = 0.9) -> bool:
+        self.n_steps += 1
+        if self.ema == 0.0:
+            self.ema = dt
+            return False
+        is_straggler = dt > factor * self.ema
+        if is_straggler:
+            self.n_stragglers += 1
+            self.worst_ratio = max(self.worst_ratio, dt / self.ema)
+            # do not pollute the EMA with the outlier
+        else:
+            self.ema = beta * self.ema + (1 - beta) * dt
+        return is_straggler
+
+
+@dataclass
+class RunReport:
+    final_step: int
+    n_restarts: int
+    losses: List[float]
+    straggler: StragglerStats
+    restored_from: List[int]
+
+
+def run_restartable(
+    train_step: Callable[[Any, Any], Tuple[Any, Dict]],
+    init_state: Callable[[], Any],
+    batch_for_step: Callable[[int], Any],
+    total_steps: int,
+    ckpt_dir: str,
+    ckpt_every: int = 50,
+    injector: Optional[FailureInjector] = None,
+    max_restarts: int = 16,
+    straggler_factor: float = 3.0,
+) -> RunReport:
+    """Run ``total_steps`` of training, surviving injected failures by
+    restarting from the newest checkpoint."""
+    losses: List[float] = []
+    restored_from: List[int] = []
+    strag = StragglerStats()
+    restarts = 0
+
+    while True:
+        # ---- (re)start: restore or init ---------------------------------
+        state = init_state()
+        start = ckpt.latest_step(ckpt_dir)
+        if start is not None:
+            _, state, _ = ckpt.restore(ckpt_dir, template=state)
+            restored_from.append(start)
+            step = start
+        else:
+            step = 0
+        try:
+            while step < total_steps:
+                if injector is not None:
+                    injector.maybe_fail(step)
+                t0 = time.perf_counter()
+                state, metrics = train_step(state, batch_for_step(step))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                strag.observe(dt, straggler_factor)
+                losses.append(loss)
+                step += 1
+                if step % ckpt_every == 0 or step == total_steps:
+                    ckpt.save_async(ckpt_dir, step, state,
+                                    metadata={"loss": loss})
+            ckpt.wait_pending()
+            return RunReport(step, restarts, losses, strag, restored_from)
+        except InjectedFailure:
+            restarts += 1
+            ckpt.wait_pending()
+            if restarts > max_restarts:
+                raise

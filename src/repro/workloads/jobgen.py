@@ -1,0 +1,103 @@
+"""TPU job-type generation from dry-run roofline artifacts (DESIGN.md §2).
+
+This is the bridge between the two halves of the framework: every
+(architecture × input shape) cell that passes the multi-pod dry-run yields a
+roofline record (compute/memory/collective seconds, bytes per device).  A
+cell becomes a DFRS *job type* whose
+
+* ``cpu_need``  = compute_term / max(compute, memory, collective)  — the
+  fraction of the chip's MXU the step can actually use (a bandwidth-bound
+  decode step cannot saturate compute, exactly the fractional-use phenomenon
+  DFRS exploits);
+* ``mem_req``   = bytes_per_device / HBM_BYTES — a hard constraint, like the
+  paper's no-swap rule;
+* ``n_tasks``   = the number of chips the job's mesh spans (scaled down by
+  ``chips_per_task`` when simulating at pod-slice granularity).
+
+``tpu_trace`` samples a Poisson mixture over job types to produce a cluster
+workload for the scheduler benchmarks.
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.job import JobSpec
+
+__all__ = ["TpuJobType", "tpu_job_types", "tpu_trace", "HBM_BYTES"]
+
+HBM_BYTES = 16 * 1024**3   # v5e-class chip
+
+
+@dataclass(frozen=True)
+class TpuJobType:
+    name: str
+    cpu_need: float
+    mem_req: float
+    n_tasks: int
+    typical_duration: float    # s; e.g. a training run segment / serve session
+
+
+def tpu_job_types(
+    roofline_records: Sequence[dict],
+    chips_per_task: int = 16,
+    duration_per_step_mult: float = 2_000.0,
+) -> List[TpuJobType]:
+    """Derive job types from `repro.launch.dryrun` roofline records."""
+    out: List[TpuJobType] = []
+    for rec in roofline_records:
+        terms = [rec["compute_s"], rec["memory_s"], rec["collective_s"]]
+        dom = max(terms)
+        if dom <= 0:
+            continue
+        cpu_need = float(np.clip(rec["compute_s"] / dom, 0.01, 1.0))
+        mem_req = float(np.clip(rec["bytes_per_device"] / HBM_BYTES, 0.01, 1.0))
+        chips = int(rec.get("n_chips", 256))
+        n_tasks = max(1, chips // chips_per_task)
+        dur = max(60.0, dom * duration_per_step_mult)
+        out.append(
+            TpuJobType(
+                name=f"{rec['arch']}:{rec['shape']}",
+                cpu_need=cpu_need,
+                mem_req=mem_req,
+                n_tasks=n_tasks,
+                typical_duration=dur,
+            )
+        )
+    return out
+
+
+def tpu_trace(
+    job_types: Sequence[TpuJobType],
+    n_jobs: int = 200,
+    n_nodes: int = 128,
+    seed: int = 0,
+    target_load: float = 0.6,
+) -> List[JobSpec]:
+    """Poisson mixture over TPU job types at a target offered load."""
+    rng = np.random.default_rng(seed)
+    types = [t for t in job_types if t.n_tasks <= n_nodes]
+    if not types:
+        raise ValueError("no job types fit the cluster")
+    probs = np.ones(len(types)) / len(types)
+    # expected work per job → arrival rate for the target load
+    e_work = float(
+        np.sum([p * t.n_tasks * t.cpu_need * t.typical_duration for p, t in zip(probs, types)])
+    )
+    mean_gap = e_work / (target_load * n_nodes)
+    specs: List[JobSpec] = []
+    t = 0.0
+    for jid in range(n_jobs):
+        t += float(rng.exponential(mean_gap))
+        jt = types[int(rng.choice(len(types), p=probs))]
+        dur = float(jt.typical_duration * rng.lognormal(0.0, 0.5))
+        specs.append(
+            JobSpec(
+                jid=jid, release=t, proc_time=max(30.0, dur),
+                n_tasks=jt.n_tasks, cpu_need=jt.cpu_need, mem_req=jt.mem_req,
+            )
+        )
+    return specs

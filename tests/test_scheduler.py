@@ -1,0 +1,269 @@
+"""Core scheduler unit + property tests (greedy, MCB8, yields, policies)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.greedy import greedy_p, greedy_place, greedy_pm
+from repro.core.job import JobSpec, JobState, NodePool, RUNNING
+from repro.core.mcb8 import mcb8, mcb8_pack
+from repro.core.policies import (TABLE1_POLICIES, all_paper_policies,
+                                 parse_policy)
+from repro.core.yield_alloc import allocate, maxmin_yields, min_yield
+
+# --------------------------------------------------------------------------- #
+# strategies                                                                   #
+# --------------------------------------------------------------------------- #
+job_st = st.builds(
+    JobSpec,
+    jid=st.integers(0, 10_000),
+    release=st.floats(0, 1e5),
+    proc_time=st.floats(1.0, 1e5),
+    n_tasks=st.integers(1, 16),
+    cpu_need=st.sampled_from([0.25, 0.5, 1.0]),
+    mem_req=st.sampled_from([0.1, 0.2, 0.3, 0.5, 0.8, 1.0]),
+)
+
+
+def _states(specs, vt_seed=0):
+    rng = np.random.default_rng(vt_seed)
+    out = []
+    for i, s in enumerate(specs):
+        js = JobState(spec=JobSpec(
+            jid=i, release=0.0, proc_time=s.proc_time, n_tasks=s.n_tasks,
+            cpu_need=s.cpu_need, mem_req=s.mem_req))
+        js.vt = float(rng.uniform(0.1, 100.0))
+        out.append(js)
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# greedy placement                                                             #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=50, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=20), st.integers(2, 16))
+def test_greedy_place_never_oversubscribes_memory(specs, n_nodes):
+    pool = NodePool(n_nodes)
+    for s in specs:
+        mapping = greedy_place(pool, s)
+        if mapping is not None:
+            assert len(mapping) == s.n_tasks
+    assert (pool.mem_free >= -1e-9).all()
+
+
+def test_greedy_place_picks_lowest_load():
+    pool = NodePool(3)
+    pool.load[:] = [0.5, 0.1, 0.9]
+    s = JobSpec(jid=0, release=0, proc_time=10, n_tasks=1,
+                cpu_need=0.25, mem_req=0.1)
+    assert greedy_place(pool, s) == [1]
+
+
+def test_greedy_place_rolls_back_on_failure():
+    pool = NodePool(2)
+    pool.mem_free[:] = [0.25, 0.15]
+    s = JobSpec(jid=0, release=0, proc_time=10, n_tasks=3,
+                cpu_need=1.0, mem_req=0.2)
+    before = pool.mem_free.copy()
+    assert greedy_place(pool, s) is None
+    np.testing.assert_allclose(pool.mem_free, before)
+
+
+def test_greedy_p_pauses_lowest_priority_first():
+    pool = NodePool(1)
+    # two running jobs fill memory; the lower-priority one must be paused
+    specs = [JobSpec(jid=i, release=0, proc_time=100, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.5) for i in range(2)]
+    running = []
+    for i, s in enumerate(specs):
+        js = JobState(spec=s, status=RUNNING, mapping=[0])
+        js.vt = 10.0 if i == 0 else 100.0    # jid 1: bigger vt -> lower prio
+        pool.place(s, [0])
+        running.append(js)
+    new = JobSpec(jid=2, release=50, proc_time=10, n_tasks=1,
+                  cpu_need=1.0, mem_req=0.5)
+    adm = greedy_p(pool.copy(), new, running, now=50.0)
+    assert adm.mapping is not None
+    assert adm.paused == [1]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=12), st.integers(2, 8),
+       st.integers(0, 5))
+def test_greedy_pm_admission_is_feasible(specs, n_nodes, seed):
+    """Applying a GreedyPM admission plan transactionally never violates
+    memory capacity."""
+    rng = np.random.default_rng(seed)
+    pool = NodePool(n_nodes)
+    running = []
+    for i, s in enumerate(specs[:-1]):
+        spec = JobSpec(jid=i, release=0, proc_time=10, n_tasks=s.n_tasks,
+                       cpu_need=s.cpu_need, mem_req=s.mem_req)
+        m = greedy_place(pool, spec)
+        if m is None:
+            continue
+        js = JobState(spec=spec, status=RUNNING, mapping=m)
+        js.vt = float(rng.uniform(1, 100))
+        running.append(js)
+    s = specs[-1]
+    new = JobSpec(jid=999, release=1, proc_time=10, n_tasks=s.n_tasks,
+                  cpu_need=s.cpu_need, mem_req=s.mem_req)
+    adm = greedy_pm(pool.copy(), new, running, now=1.0)
+    if adm.mapping is None:
+        return
+    # rebuild: survivors (possibly moved) + the new job
+    check = NodePool(n_nodes)
+    for js in running:
+        if js.spec.jid in adm.paused:
+            continue
+        check.place(js.spec, adm.moved.get(js.spec.jid, js.mapping))
+    check.place(new, adm.mapping)      # raises if memory oversubscribed
+
+
+# --------------------------------------------------------------------------- #
+# MCB8                                                                         #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=20), st.integers(2, 16))
+def test_mcb8_pack_respects_capacities(specs, n_nodes):
+    items = [(i, s.cpu_need * 0.5, s.mem_req, s.n_tasks)
+             for i, s in enumerate(specs)]
+    res = mcb8_pack(n_nodes, items)
+    if res is None:
+        return
+    cpu = np.zeros(n_nodes)
+    mem = np.zeros(n_nodes)
+    for (jid, c, m, n) in items:
+        assert len(res[jid]) == n
+        for node in res[jid]:
+            cpu[node] += c
+            mem[node] += m
+    assert (cpu <= 1 + 1e-9).all() and (mem <= 1 + 1e-9).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=15), st.integers(2, 8))
+def test_mcb8_full_allocation_valid(specs, n_nodes):
+    states = _states(specs)
+    res = mcb8(states, n_nodes, now=200.0)
+    cpu = np.zeros(n_nodes)
+    mem = np.zeros(n_nodes)
+    by = {js.spec.jid: js for js in states}
+    for jid, mapping in res.mappings.items():
+        s = by[jid].spec
+        assert len(mapping) == s.n_tasks
+        for node in mapping:
+            cpu[node] += min(1.0, s.cpu_need * res.yld)
+            mem[node] += s.mem_req
+    assert (mem <= 1 + 1e-9).all()
+    assert (cpu <= 1 + 1e-6).all()
+    # every candidate is either mapped or explicitly removed
+    assert set(res.mappings) | set(res.removed) == set(by)
+
+
+def test_mcb8_removes_lowest_priority_when_infeasible():
+    # 1 node, three jobs of mem 0.5 -> at most 2 fit; lowest prio removed
+    specs = [JobSpec(jid=i, release=0, proc_time=100, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.5) for i in range(3)]
+    states = [JobState(spec=s) for s in specs]
+    states[0].vt = 100.0      # lowest priority (largest vt)
+    states[1].vt = 10.0
+    states[2].vt = 1.0
+    res = mcb8(states, 1, now=200.0)
+    assert res.removed == [0]
+    assert set(res.mappings) == {1, 2}
+
+
+def test_mcb8_pinned_jobs_keep_mapping():
+    specs = [JobSpec(jid=i, release=0, proc_time=100, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.3) for i in range(3)]
+    states = _states(specs)
+    res = mcb8(states, 4, now=200.0, pinned={1: [3]})
+    assert res.mappings[1] == [3]
+
+
+def test_mcb8_deterministic_across_priority_shuffle():
+    """Mapping stability (paper SS4.4 footnote): permuting the candidate
+    order (priorities change over time) must not change the packing."""
+    specs = [JobSpec(jid=i, release=0, proc_time=100, n_tasks=2,
+                     cpu_need=1.0, mem_req=0.2) for i in range(8)]
+    a = _states(specs, vt_seed=1)
+    b = _states(specs, vt_seed=2)     # different priorities
+    ra = mcb8(a, 8, now=200.0)
+    rb = mcb8(b, 8, now=200.0)
+    assert ra.mappings == rb.mappings
+
+
+# --------------------------------------------------------------------------- #
+# yield allocation (SS4.6)                                                     #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=40, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=10), st.integers(1, 8),
+       st.integers(0, 3))
+def test_maxmin_yields_feasible_and_floor(specs, n_nodes, seed):
+    rng = np.random.default_rng(seed)
+    pool = NodePool(n_nodes)
+    placed, maps = [], []
+    for i, s in enumerate(specs):
+        spec = JobSpec(jid=i, release=0, proc_time=10, n_tasks=s.n_tasks,
+                       cpu_need=s.cpu_need, mem_req=s.mem_req)
+        m = greedy_place(pool, spec)
+        if m is not None:
+            placed.append(spec)
+            maps.append(m)
+    if not placed:
+        return
+    y = maxmin_yields(placed, maps, n_nodes)
+    assert ((0 <= y) & (y <= 1.0 + 1e-12)).all()
+    # feasibility: per-node allocated CPU <= 1
+    load = np.zeros(n_nodes)
+    for spec, m, yi in zip(placed, maps, y):
+        for node in m:
+            load[node] += yi * spec.cpu_need
+    assert (load <= 1 + 1e-6).all()
+    # floor: no one below the equal-share min yield
+    assert (y >= min_yield(pool.load.max()) - 1e-9).all()
+    # OPT=AVG dominates OPT=MIN on the sum, never below the floor
+    y_avg = allocate(placed, maps, n_nodes, opt="AVG")
+    assert y_avg.sum() >= y.sum() - 1e-6
+
+
+def test_priority_function():
+    s = JobSpec(jid=1, release=100.0, proc_time=10, n_tasks=1,
+                cpu_need=1.0, mem_req=0.1)
+    js = JobState(spec=s)
+    assert js.priority(150.0) == np.inf          # never ran -> infinite
+    js.vt = 5.0
+    assert js.priority(150.0) == pytest.approx(50.0 / 25.0)
+
+
+# --------------------------------------------------------------------------- #
+# policy naming (SS4.5)                                                        #
+# --------------------------------------------------------------------------- #
+def test_parse_policy_roundtrip():
+    p = parse_policy("GreedyPM */per/OPT=MIN/MINVT=600")
+    assert p.on_submit == "greedyPM" and p.opportunistic
+    assert p.periodic == "mcb8" and p.opt == "MIN" and p.minvt == 600.0
+    assert p.on_complete == "greedy"
+    p2 = parse_policy("MCB8 */OPT=AVG/MINFT=300")
+    assert p2.on_submit == "mcb8" and p2.on_complete == "mcb8"
+    assert p2.minft == 300.0 and p2.periodic is None
+    p3 = parse_policy("/stretch-per/OPT=MAX")
+    assert p3.on_submit is None and p3.periodic == "mcb8-stretch"
+
+
+def test_table1_and_full_policy_space():
+    for name in TABLE1_POLICIES:
+        parse_policy(name)
+    space = all_paper_policies()
+    assert len(space) == len(set(space))
+    for name in space:
+        parse_policy(name)
+    # the paper counts 116 combinations (SS6.1)
+    assert len(space) == 116
+
+
+def test_parse_policy_rejects_unknown():
+    with pytest.raises(ValueError):
+        parse_policy("Greedy */per/OPT=WAT")
+    with pytest.raises(ValueError):
+        parse_policy("Foo */per")

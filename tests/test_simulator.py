@@ -1,0 +1,193 @@
+"""Discrete-event simulator + batch scheduler tests (SS5)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bound import max_stretch_lower_bound, stretch_feasible
+from repro.core.job import JobSpec
+from repro.sched.batch import batch_schedule
+from repro.sched.cluster import ClusterEvent
+from repro.sched.simulator import DFRSSimulator, SimParams, simulate
+from repro.workloads.lublin import lublin_trace, offered_load, scale_to_load
+
+
+def mini_trace(n=40, nodes=16, seed=0):
+    return lublin_trace(n_jobs=n, n_nodes=nodes, seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# conservation / correctness invariants                                        #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", [
+    "GreedyP */OPT=MIN",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "MCB8/per/OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+])
+def test_all_jobs_complete_and_bound_holds(policy):
+    specs = mini_trace()
+    params = SimParams(n_nodes=16)
+    r = simulate(specs, policy, params)
+    assert set(r.completions) == {s.jid for s in specs}
+    lb = max_stretch_lower_bound(specs, 16)
+    assert r.max_stretch >= lb - 1e-6
+    # completion after release + dedicated time
+    for s in specs:
+        assert r.completions[s.jid] >= s.release + s.proc_time - 1e-6
+
+
+def test_single_job_runs_dedicated():
+    """One job alone on the cluster: stretch == 1 (bounded formula)."""
+    s = JobSpec(jid=0, release=0.0, proc_time=1000.0, n_tasks=4,
+                cpu_need=1.0, mem_req=0.5)
+    r = simulate([s], "GreedyP */OPT=MIN", SimParams(n_nodes=8))
+    assert r.completions[0] == pytest.approx(1000.0)
+    assert r.max_stretch == pytest.approx(1.0)
+    assert r.n_pmtn == 0 and r.n_mig == 0
+
+
+def test_cpu_oversubscription_slows_proportionally():
+    """Two 1-node cpu-1.0 jobs on one node: equal shares, both 2x slower."""
+    specs = [JobSpec(jid=i, release=0.0, proc_time=100.0, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.4) for i in range(2)]
+    r = simulate(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=1))
+    for jid in (0, 1):
+        assert r.completions[jid] == pytest.approx(200.0)
+
+
+def test_memory_constraint_forces_queueing():
+    """Two mem-0.6 jobs cannot share one node: sequential execution."""
+    specs = [JobSpec(jid=i, release=0.0, proc_time=100.0, n_tasks=1,
+                     cpu_need=0.5, mem_req=0.6) for i in range(2)]
+    r = simulate(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=1, penalty=0.0))
+    times = sorted(r.completions.values())
+    assert times[0] == pytest.approx(100.0)
+    assert times[1] >= 200.0 - 1e-6
+
+
+def test_rescheduling_penalty_applied_on_resume():
+    """A paused+resumed job must lose at least one penalty of progress."""
+    p = SimParams(n_nodes=1, penalty=300.0)
+    long_job = JobSpec(jid=0, release=0.0, proc_time=5000.0, n_tasks=1,
+                       cpu_need=1.0, mem_req=0.8)
+    short = JobSpec(jid=1, release=100.0, proc_time=50.0, n_tasks=1,
+                    cpu_need=1.0, mem_req=0.8)
+    r = simulate([long_job, short], "GreedyP */OPT=MIN", p)
+    # long job: 5000 work + 50 preempted window + >=300 penalty
+    assert r.completions[0] >= 5000.0 + 50.0 + 300.0 - 1e-6
+    assert r.n_pmtn >= 1
+
+
+def test_placement_continues_while_nodes_down():
+    """Regression: placing jobs on healthy nodes must work while other
+    nodes are marked failed (the dead-node sentinel must not trip the
+    pool's global memory invariant)."""
+    specs = [JobSpec(jid=i, release=float(i * 10), proc_time=50.0, n_tasks=1,
+                     cpu_need=0.5, mem_req=0.2) for i in range(6)]
+    ev = [ClusterEvent(time=5.0, kind="fail", nodes=(0, 1))]
+    r = simulate(specs, "GreedyPM */per/OPT=MIN/MINVT=600",
+                 SimParams(n_nodes=4), cluster_events=ev)
+    assert set(r.completions) == {s.jid for s in specs}
+
+
+def test_node_failure_forces_preemption_and_recovery():
+    specs = [JobSpec(jid=0, release=0.0, proc_time=1000.0, n_tasks=2,
+                     cpu_need=1.0, mem_req=0.5)]
+    ev = [ClusterEvent(time=100.0, kind="fail", nodes=(0,)),
+          ClusterEvent(time=400.0, kind="join", nodes=(0,))]
+    r = simulate(specs, "GreedyP */per/OPT=MIN", SimParams(n_nodes=2),
+                 cluster_events=ev)
+    assert r.completions[0] >= 1000.0 + 300.0 - 1e-6   # penalty paid
+    assert r.n_pmtn >= 1
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_underutilization_nonnegative(seed):
+    specs = mini_trace(n=25, seed=seed)
+    r = simulate(specs, "GreedyPM */per/OPT=MIN/MINVT=600", SimParams(n_nodes=16))
+    assert r.underutilization >= -1e-6
+
+
+# --------------------------------------------------------------------------- #
+# batch schedulers                                                             #
+# --------------------------------------------------------------------------- #
+def test_fcfs_order_and_exclusivity():
+    specs = [
+        JobSpec(jid=0, release=0.0, proc_time=100.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),
+        JobSpec(jid=1, release=1.0, proc_time=10.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),
+    ]
+    r = batch_schedule(specs, "FCFS", SimParams(n_nodes=2))
+    assert r.completions[0] == pytest.approx(100.0)
+    assert r.completions[1] == pytest.approx(110.0)   # waits for both nodes
+
+
+def test_easy_backfills_small_jobs():
+    """A short 1-node job backfills ahead of a blocked wide job."""
+    specs = [
+        JobSpec(jid=0, release=0.0, proc_time=100.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),  # runs
+        JobSpec(jid=1, release=1.0, proc_time=50.0, n_tasks=3, cpu_need=1.0, mem_req=0.5),   # blocked head
+        JobSpec(jid=2, release=2.0, proc_time=20.0, n_tasks=1, cpu_need=1.0, mem_req=0.5),   # backfill
+    ]
+    fcfs = batch_schedule(specs, "FCFS", SimParams(n_nodes=3))
+    easy = batch_schedule(specs, "EASY", SimParams(n_nodes=3))
+    assert easy.completions[2] < fcfs.completions[2]   # backfilled earlier
+    assert easy.completions[1] <= fcfs.completions[1] + 1e-9  # reservation kept
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 50))
+def test_easy_never_worse_than_fcfs_makespan(seed):
+    specs = mini_trace(n=30, seed=seed)
+    f = batch_schedule(specs, "FCFS", SimParams(n_nodes=16))
+    e = batch_schedule(specs, "EASY", SimParams(n_nodes=16))
+    assert set(e.completions) == {s.jid for s in specs}
+    assert e.makespan <= f.makespan + 1e-6
+
+
+# --------------------------------------------------------------------------- #
+# bound (Theorem 1)                                                            #
+# --------------------------------------------------------------------------- #
+def test_bound_exact_tiny_case():
+    """Two equal jobs on one node released together: optimal max stretch 2.
+
+    Each p=100, c=1 (tau=10 does not bind).  At S=1.5 the common deadline is
+    150 but total work is 200 > capacity -> infeasible; S=2 is feasible
+    (both finish by 200).
+    """
+    specs = [JobSpec(jid=i, release=0.0, proc_time=100.0, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.1) for i in range(2)]
+    assert not stretch_feasible(specs, 1, 1.5)
+    assert stretch_feasible(specs, 1, 2.0)
+    lb = max_stretch_lower_bound(specs, 1, rtol=1e-3)
+    assert lb == pytest.approx(2.0, abs=2e-2)
+
+
+def test_bound_tau_floor():
+    """Bounded stretch (tau=10): short jobs floor the bound at tau/p_min."""
+    specs = [JobSpec(jid=0, release=0.0, proc_time=1.0, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.1)]
+    assert max_stretch_lower_bound(specs, 4) == pytest.approx(10.0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 100))
+def test_bound_feasibility_monotone_in_stretch(seed):
+    specs = mini_trace(n=15, seed=seed)
+    lb = max_stretch_lower_bound(specs, 16)
+    assert stretch_feasible(specs, 16, lb * 2 + 1.0)
+    # below the bound must be infeasible — unless the bound IS the tau floor
+    # (tau/p_min), which is a bounded-stretch constraint, not a flow one.
+    s_lo = max(1.0, 10.0 / min(s.proc_time for s in specs))
+    if lb > s_lo * 1.05:
+        assert not stretch_feasible(specs, 16, lb * 0.9)
+
+
+def test_offered_load_scaling():
+    specs = mini_trace(n=60, nodes=16, seed=3)
+    scaled = scale_to_load(specs, 16, 0.5)
+    assert offered_load(scaled, 16) == pytest.approx(0.5, rel=1e-6)
+    # same job mix, shifted releases only
+    assert [s.proc_time for s in scaled] == [s.proc_time for s in sorted(specs, key=lambda x: x.release)]

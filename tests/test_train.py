@@ -1,0 +1,214 @@
+"""Training substrate tests: optimizer, data, checkpoint, FT, compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_reduced
+from repro.train import checkpoint as ckpt
+from repro.train.compression import compress_int8, decompress_int8
+from repro.train.data import data_for
+from repro.train.ft import FailureInjector, StragglerStats, run_restartable
+from repro.train.optimizer import (OptConfig, adafactor_update, adamw_update,
+                                   init_opt_state, lr_schedule, opt_axes)
+from repro.train.trainer import init_train_state, make_train_step
+
+CFG = get_reduced("smollm-360m")
+
+
+# --------------------------------------------------------------------------- #
+# optimizer                                                                    #
+# --------------------------------------------------------------------------- #
+def _toy_params():
+    return {"w": jnp.ones((8, 4)), "b": jnp.zeros((4,))}
+
+
+def test_adamw_descends_quadratic():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, weight_decay=0.0, total_steps=100)
+    params = _toy_params()
+    state = init_opt_state(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    for _ in range(50):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw_update(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+    assert int(state.step) == 50
+
+
+def test_adafactor_descends_and_state_is_factored():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, weight_decay=0.0, factored=True,
+                    total_steps=100)
+    params = _toy_params()
+    state = init_opt_state(params, factored=True)
+    assert set(state.nu["w"]) == {"vr", "vc"}
+    assert state.nu["w"]["vr"].shape == (8,)
+    assert state.nu["w"]["vc"].shape == (4,)
+    assert state.nu["b"].shape == (4,)           # 1-D stays unfactored
+    assert state.mu["w"].dtype == jnp.bfloat16
+    loss = lambda p: jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+    for _ in range(60):
+        g = jax.grad(loss)(params)
+        params, state, _ = adafactor_update(cfg, params, g, state)
+    assert float(loss(params)) < 0.05
+
+
+def test_opt_axes_mirror_structure():
+    params = {"w": jax.ShapeDtypeStruct((8, 4), jnp.float32),
+              "b": jax.ShapeDtypeStruct((4,), jnp.float32)}
+    axes = {"w": ("d_model", "d_ff"), "b": ("d_ff",)}
+    oa = opt_axes(axes, params, factored=True)
+    assert oa.nu["w"] == {"vr": ("d_model",), "vc": ("d_ff",)}
+    assert oa.nu["b"] == ("d_ff",)
+    assert oa.mu == axes
+
+
+def test_lr_schedule_shape():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100, min_lr_frac=0.1)
+    lrs = [float(lr_schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 55, 200)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0, abs=0.1)
+    assert lrs[3] < lrs[2]
+    assert lrs[4] == pytest.approx(0.1)
+
+
+def test_gradient_clipping_bounds_update():
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((4,))}
+    g = {"w": jnp.full((4,), 1e6)}
+    _, _, m = adamw_update(cfg, params, g, init_opt_state(params))
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+# --------------------------------------------------------------------------- #
+# gradient compression                                                         #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 1000))
+def test_int8_error_feedback_invariant(seed):
+    """decompress(compress(g)) + err == g (exact residual bookkeeping)."""
+    rng = np.random.default_rng(seed)
+    g = {"a": jnp.asarray(rng.normal(size=(16, 8)) * rng.uniform(0.1, 100)),
+         "b": jnp.asarray(rng.normal(size=(5,)))}
+    comp, err = compress_int8(g)
+    deq = decompress_int8(comp)
+    for k in g:
+        np.testing.assert_allclose(np.asarray(deq[k] + err[k]),
+                                   np.asarray(g[k], np.float32),
+                                   rtol=1e-6, atol=1e-6)
+        assert comp.q[k].dtype == jnp.int8
+        # quantization error bounded by half a step
+        step = float(comp.scale[k])
+        assert np.abs(np.asarray(err[k])).max() <= step * 0.5 + 1e-6
+
+
+def test_compressed_training_still_learns():
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=50)
+    step = jax.jit(make_train_step(CFG, opt, compress_grads=True))
+    state = init_train_state(CFG, jax.random.PRNGKey(0), compress=True)
+    data = data_for(CFG, 4, 32)
+    losses = []
+    for i in range(8):
+        state, m = step(state, data.batch_for_step(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert state.err is not None
+
+
+# --------------------------------------------------------------------------- #
+# data pipeline                                                                #
+# --------------------------------------------------------------------------- #
+def test_data_deterministic_and_restart_safe():
+    d1 = data_for(CFG, 4, 64, seed=3)
+    d2 = data_for(CFG, 4, 64, seed=3)
+    b1, b2 = d1.batch_for_step(17), d2.batch_for_step(17)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = d1.batch_for_step(18)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+    assert (np.asarray(b1["tokens"]) < CFG.vocab).all()
+    # document boundaries
+    assert (np.asarray(b1["tokens"])[:, 0] == 0).all()
+
+
+def test_data_frontend_extras():
+    wcfg = get_reduced("whisper-large-v3")
+    d = data_for(wcfg, 2, 32, n_enc=16)
+    b = d.batch_for_step(0)
+    assert b["enc_embeds"].shape == (2, 16, wcfg.d_model)
+    vcfg = get_reduced("internvl2-76b")
+    d = data_for(vcfg, 2, 32)
+    assert "vision_embeds" in d.batch_for_step(0)
+
+
+# --------------------------------------------------------------------------- #
+# checkpointing                                                                #
+# --------------------------------------------------------------------------- #
+def test_checkpoint_roundtrip_and_latest():
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.latest_step(d) is None
+        ckpt.save(d, 5, state, metadata={"loss": 1.0})
+        ckpt.save(d, 10, state)
+        assert ckpt.latest_step(d) == 10
+        step, restored, meta = ckpt.restore(d, template=state, step=5)
+        assert step == 5 and meta["loss"] == 1.0
+        ok = jax.tree.all(jax.tree.map(
+            lambda a, b: jnp.allclose(a, b), state, restored))
+        assert bool(ok)
+
+
+def test_checkpoint_rejects_shape_mismatch():
+    state = init_train_state(CFG, jax.random.PRNGKey(0))
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, state)
+        bad = jax.tree.map(lambda x: jnp.zeros((3, 3)), state)
+        with pytest.raises(ValueError):
+            ckpt.restore(d, template=bad)
+
+
+def test_checkpoint_async_commit():
+    state = {"x": jnp.arange(10)}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save_async(d, 7, state)
+        ckpt.wait_pending()
+        step, restored, _ = ckpt.restore(d, template=state)
+        assert step == 7
+        np.testing.assert_array_equal(np.asarray(restored["x"]), np.arange(10))
+
+
+# --------------------------------------------------------------------------- #
+# fault tolerance                                                              #
+# --------------------------------------------------------------------------- #
+def test_restartable_run_is_bitwise_deterministic():
+    """A run with injected failures converges to the same final loss as an
+    uninterrupted run (deterministic data + checkpoint resume)."""
+    opt = OptConfig(lr=1e-3, warmup_steps=2, total_steps=30)
+    step = jax.jit(make_train_step(CFG, opt))
+    data = data_for(CFG, 4, 32)
+    mk = lambda: init_train_state(CFG, jax.random.PRNGKey(0))
+
+    with tempfile.TemporaryDirectory() as d:
+        clean = run_restartable(step, mk, data.batch_for_step, 12, d,
+                                ckpt_every=4)
+    with tempfile.TemporaryDirectory() as d:
+        faulty = run_restartable(step, mk, data.batch_for_step, 12, d,
+                                 ckpt_every=4,
+                                 injector=FailureInjector(at_steps=(6, 9)))
+    assert faulty.n_restarts == 2
+    assert faulty.restored_from            # actually resumed from disk
+    assert faulty.losses[-1] == pytest.approx(clean.losses[-1], rel=1e-5)
+
+
+def test_straggler_detection():
+    s = StragglerStats()
+    for _ in range(10):
+        s.observe(0.1, factor=3.0)
+    assert not s.observe(0.15, factor=3.0)
+    assert s.observe(1.0, factor=3.0)       # 10x the EMA
+    assert s.n_stragglers == 1
+    assert s.worst_ratio > 3.0
