@@ -1,9 +1,12 @@
 """Shared infrastructure for the paper-table benchmarks.
 
 Scaled-down but structurally faithful reproduction of §5: three trace sets
-(HPC2N-like real-world, unscaled Lublin synthetic, load-scaled synthetic),
-the Theorem-1 lower bound per trace, and a result cache so Tables 2/3/4 and
-Figures 1/3/4 share simulation runs.
+(HPC2N-like real-world, unscaled Lublin synthetic, load-scaled synthetic)
+available two ways — declaratively as sweep workloads (``workload_specs``,
+used by the run_grid-based table2/fig1 benches) and as memoized ``Bench``
+traces with a per-process result cache (used by tables 3/4 and figure 4;
+sweep records don't feed this cache, so mixing both paths in one run
+re-simulates shared cells).
 
 Scale knobs: the paper uses 100-182 traces x 1000 jobs x 128 nodes; the
 default here is QUICK (fewer/smaller traces) so ``python -m benchmarks.run``
@@ -23,8 +26,12 @@ from repro.core.bound import max_stretch_lower_bound
 from repro.sched.simulator import SimParams, SimResult, simulate
 from repro.workloads.hpc2n import hpc2n_like_trace
 from repro.workloads.lublin import lublin_trace, scale_to_load
+from repro.workloads.registry import WorkloadSpec
 
 RESULTS_DIR = "experiments/results"
+
+#: worker processes for sweep-based benchmarks
+N_WORKERS = max(1, min(os.cpu_count() or 1, 8))
 
 #: Table-2 policy subset (the paper's headline algorithms; all OPT=MIN)
 TABLE2_POLICIES = [
@@ -64,6 +71,35 @@ QUICK = Scale()
 FULL = Scale(n_traces=10, n_jobs=1000, n_nodes=128,
              loads=(0.1, 0.3, 0.5, 0.7, 0.9),
              fig_loads=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9))
+
+
+def workload_specs(kind: str, scale: Scale) -> List[WorkloadSpec]:
+    """The paper's three trace sets (§5.3) as declarative sweep workloads:
+    ``real`` (HPC2N-like on 128 nodes), ``unscaled`` (Lublin), ``scaled``
+    (Lublin rescaled to each target load)."""
+    s = scale
+    if kind == "real":
+        return [WorkloadSpec("hpc2n", n_jobs=s.n_jobs, n_nodes=128, seed=seed)
+                for seed in range(s.n_traces)]
+    if kind == "unscaled":
+        return [WorkloadSpec("lublin", n_jobs=s.n_jobs, n_nodes=s.n_nodes,
+                             seed=seed)
+                for seed in range(s.n_traces)]
+    if kind == "scaled":
+        return [WorkloadSpec("lublin", n_jobs=s.n_jobs, n_nodes=s.n_nodes,
+                             seed=seed, load=load)
+                for seed in range(s.n_traces) for load in s.loads]
+    raise KeyError(kind)
+
+
+def records_for(records: Sequence[dict], kind: str, **kv) -> List[dict]:
+    """Filter sweep records down to one of the trace sets of §5.3."""
+    from repro.sched.sweep import record_matches
+
+    sel = {"real": lambda r: r["kind"] == "hpc2n",
+           "unscaled": lambda r: r["kind"] == "lublin" and r["load"] is None,
+           "scaled": lambda r: r["kind"] == "lublin" and r["load"] is not None}[kind]
+    return [r for r in records if sel(r) and record_matches(r, kv)]
 
 
 @dataclass

@@ -11,8 +11,8 @@ import argparse
 import time
 
 from . import (fig1_load, fig4_period_stretch, mcb8_runtime, roofline,
-               table2_stretch, table3_costs, table4_underutilization,
-               tpu_cluster)
+               sweep_bench, table2_stretch, table3_costs,
+               table4_underutilization, tpu_cluster)
 from .common import FULL, QUICK, Bench
 
 BENCHES = {
@@ -23,6 +23,7 @@ BENCHES = {
     "fig4": fig4_period_stretch.run,
     "mcb8_runtime": mcb8_runtime.run,
     "roofline": roofline.run,
+    "sweep": sweep_bench.run,
     "tpu_cluster": tpu_cluster.run,
 }
 

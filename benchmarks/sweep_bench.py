@@ -1,0 +1,67 @@
+"""Sweep-subsystem throughput benchmark → machine-readable BENCH_sweep.json.
+
+Runs the canonical 16-cell grid (2 workloads × 4 policies × 2 scenarios)
+through ``run_grid`` with 4 workers and records the perf trajectory numbers
+(cells/sec, wall time) plus per-policy stretch aggregates.  The JSON lands
+in the working directory as ``BENCH_sweep.json`` so successive PRs can
+track scheduler throughput.
+"""
+from __future__ import annotations
+
+import json
+import platform
+
+from repro.sched.sweep import grid, run_grid
+from repro.workloads.registry import WorkloadSpec
+
+from . import common
+from .common import Bench, fmt_table
+
+BENCH_JSON = "BENCH_sweep.json"
+
+POLICIES = [
+    "FCFS",
+    "EASY",
+    "GreedyP */OPT=MIN",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+]
+SCENARIOS = ["baseline", "rack_failure"]
+# canonical 4-worker shape, but never oversubscribe a smaller machine
+# (cells/sec is the tracked trajectory number; n_workers lands in the JSON)
+N_WORKERS = min(4, common.N_WORKERS)
+
+
+def run(bench: Bench, verbose: bool = True):
+    s = bench.scale
+    workloads = [
+        WorkloadSpec("lublin", n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=0),
+        WorkloadSpec("hpc2n", n_jobs=s.n_jobs, n_nodes=128, seed=0),
+    ]
+    cells = grid(workloads, POLICIES, SCENARIOS)
+    res = run_grid(cells, n_workers=N_WORKERS)
+
+    per_policy = res.summary(by="policy",
+                             keys=("mean_stretch", "max_stretch", "wall_s"))
+    payload = {
+        "bench": "sweep",
+        "n_cells": res.n_cells,
+        "n_workers": res.n_workers,
+        "wall_s": round(res.wall_s, 3),
+        "cells_per_sec": round(res.cells_per_sec, 4),
+        "grid": {"workloads": [w.name for w in workloads],
+                 "policies": POLICIES, "scenarios": SCENARIOS},
+        "per_policy": per_policy,
+        "platform": platform.platform(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    if verbose:
+        rows = [[p, round(v["mean_mean_stretch"], 1),
+                 round(v["max_max_stretch"], 1), round(v["mean_wall_s"], 2)]
+                for p, v in per_policy.items()]
+        print(fmt_table(["policy", "mean_stretch", "max_stretch", "cell_s"],
+                        rows, "Sweep bench (16 cells, 4 workers)"))
+        print(f"  {res.n_cells} cells in {res.wall_s:.1f}s = "
+              f"{res.cells_per_sec:.2f} cells/s -> {BENCH_JSON}")
+    return payload

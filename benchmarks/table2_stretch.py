@@ -1,19 +1,34 @@
 """Table 2: max-stretch degradation from the Theorem-1 bound, per policy,
 over the three trace sets (real-world-like, unscaled synthetic, scaled
-synthetic)."""
+synthetic).
+
+Ported onto the sweep subsystem: the whole (trace-set × policy) grid is one
+``run_grid`` fan-out across worker processes, and the table plus the paper
+claims are aggregations over the returned records.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from .common import Bench, TABLE2_POLICIES, fmt_table, write_csv
+from repro.sched.sweep import grid, run_grid
+
+from .common import (Bench, N_WORKERS, TABLE2_POLICIES, fmt_table,
+                     records_for, workload_specs, write_csv)
 
 
 def run(bench: Bench, verbose: bool = True):
+    s = bench.scale
+    workloads = (workload_specs("real", s) + workload_specs("unscaled", s)
+                 + workload_specs("scaled", s))
+    res = run_grid(grid(workloads, TABLE2_POLICIES),
+                   n_workers=N_WORKERS, compute_bound=True)
+
     rows = []
     for policy in TABLE2_POLICIES:
         row = [policy]
         for kind in ("real", "unscaled", "scaled"):
-            d = bench.degradations(kind, policy)
+            d = np.array([r["degradation"]
+                          for r in records_for(res.records, kind, policy=policy)])
             row += [round(float(d.mean()), 1), round(float(d.std()), 1),
                     round(float(d.max()), 1)]
         rows.append(row)
@@ -24,23 +39,28 @@ def run(bench: Bench, verbose: bool = True):
     write_csv("table2_stretch.csv", header, rows)
     if verbose:
         print(fmt_table(header, rows, "Table 2: degradation from bound"))
+        print(f"  [{res.n_cells} cells in {res.wall_s:.1f}s, "
+              f"{res.cells_per_sec:.2f} cells/s, {res.n_workers} workers]")
 
     # paper-claim checks (qualitative, quick-scale)
     by = {r[0]: r for r in rows}
     fcfs, easy = by["FCFS"], by["EASY"]
     best = min((r for r in rows if r[0] not in ("FCFS", "EASY")),
                key=lambda r: r[7])
+
     # the paper's across-the-board winner is evaluated at HIGH load
     # (Fig. 1: below ~0.3, non-periodic greedy matches it — same crossover
     # we see at quick scale)
-    hi = [t for t in bench.traces("scaled")
-          if t.load == max(x.load for x in bench.traces("scaled"))]
+    hi_load = max(s.loads)
+
+    def mean_deg_at_hi(policy):
+        recs = records_for(res.records, "scaled", policy=policy, load=hi_load)
+        return float(np.mean([r["degradation"] for r in recs]))
+
     win = "GreedyPM */per/OPT=MIN/MINVT=600"
-    win_hi = np.mean([bench.run(t, win).max_stretch / t.bound for t in hi])
-    others_hi = {
-        p: float(np.mean([bench.run(t, p).max_stretch / t.bound for t in hi]))
-        for p in TABLE2_POLICIES if p not in ("FCFS", "EASY")
-    }
+    win_hi = mean_deg_at_hi(win)
+    others_hi = {p: mean_deg_at_hi(p)
+                 for p in TABLE2_POLICIES if p not in ("FCFS", "EASY")}
     claims = {
         "EASY <= FCFS (scaled avg)": easy[7] <= fcfs[7] * 1.05,
         "best DFRS >= 10x better than EASY (scaled avg)":

@@ -5,6 +5,7 @@ yield-driven fractional allocation of node resources with preemption and
 migration, plus the offline max-stretch lower bound used for evaluation.
 """
 from .job import JobSpec, JobState, NodePool, PENDING, RUNNING, PAUSED, COMPLETED
+from .state import EngineState, JobView
 from .yield_alloc import allocate, maxmin_yields, avg_yields, min_yield
 from .greedy import greedy_place, greedy_p, greedy_pm, GreedyAdmission
 from .mcb8 import mcb8, mcb8_pack, MCB8Result
@@ -14,7 +15,7 @@ from .bound import max_stretch_lower_bound, stretch_feasible
 from .policies import PolicySpec, parse_policy, TABLE1_POLICIES, all_paper_policies
 
 __all__ = [
-    "JobSpec", "JobState", "NodePool",
+    "JobSpec", "JobState", "NodePool", "EngineState", "JobView",
     "PENDING", "RUNNING", "PAUSED", "COMPLETED",
     "allocate", "maxmin_yields", "avg_yields", "min_yield",
     "greedy_place", "greedy_p", "greedy_pm", "GreedyAdmission",

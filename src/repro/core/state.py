@@ -1,0 +1,261 @@
+"""Structure-of-arrays job state for the unified scheduling engine.
+
+``EngineState`` keeps every per-job quantity the hot loop touches —
+release / proc_time / vt / yield / status / penalty_until — in flat NumPy
+arrays indexed by a dense job index (arrival order), so the fluid-progress
+advance and the next-event computation are single vectorized expressions
+instead of Python-object traversals.  Task→node mappings stay as per-job
+lists (ragged, policy-produced) in ``mappings``.
+
+Policy modules (``core.greedy``, ``core.mcb8``, ``core.stretch_opt``) are
+written against the ``JobState`` object interface; ``JobView`` is a
+zero-copy proxy with the same attribute surface whose reads/writes go
+straight to the arrays, so policies run unchanged on top of the SoA core.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .job import (
+    COMPLETED,
+    PAUSED,
+    PENDING,
+    RUNNING,
+    JobSpec,
+    NodePool,
+)
+
+__all__ = [
+    "EngineState",
+    "JobView",
+    "S_NOT_ARRIVED",
+    "S_PENDING",
+    "S_RUNNING",
+    "S_PAUSED",
+    "S_COMPLETED",
+]
+
+_EPS = 1e-9
+
+# integer status codes (array-friendly); "in system" == 0 < status < COMPLETED
+S_NOT_ARRIVED = 0
+S_PENDING = 1
+S_RUNNING = 2
+S_PAUSED = 3
+S_COMPLETED = 4
+
+_STATUS_STR = {
+    S_PENDING: PENDING,
+    S_RUNNING: RUNNING,
+    S_PAUSED: PAUSED,
+    S_COMPLETED: COMPLETED,
+}
+_STATUS_CODE = {v: k for k, v in _STATUS_STR.items()}
+
+
+class JobView:
+    """JobState-compatible view over one row of an ``EngineState``.
+
+    Provides exactly the attributes/methods the policy modules read
+    (``spec``, ``vt``, ``yld``, ``status``, ``mapping``, ``penalty_until``,
+    ``priority_key`` …); assignments write through to the arrays.
+    """
+
+    __slots__ = ("_st", "i", "spec")
+
+    def __init__(self, st: "EngineState", i: int):
+        self._st = st
+        self.i = i
+        self.spec = st.specs[i]
+
+    # ---- array-backed fields -------------------------------------------
+    @property
+    def vt(self) -> float:
+        return float(self._st.vt[self.i])
+
+    @vt.setter
+    def vt(self, v: float) -> None:
+        self._st.vt[self.i] = v
+
+    @property
+    def yld(self) -> float:
+        return float(self._st.yld[self.i])
+
+    @yld.setter
+    def yld(self, v: float) -> None:
+        self._st.yld[self.i] = v
+
+    @property
+    def penalty_until(self) -> float:
+        return float(self._st.penalty_until[self.i])
+
+    @penalty_until.setter
+    def penalty_until(self, v: float) -> None:
+        self._st.penalty_until[self.i] = v
+
+    @property
+    def status(self) -> str:
+        return _STATUS_STR[int(self._st.status[self.i])]
+
+    @status.setter
+    def status(self, v: str) -> None:
+        self._st.status[self.i] = _STATUS_CODE[v]
+
+    @property
+    def mapping(self) -> Optional[List[int]]:
+        return self._st.mappings[self.i]
+
+    @mapping.setter
+    def mapping(self, v: Optional[List[int]]) -> None:
+        self._st.mappings[self.i] = v
+
+    @property
+    def completed_at(self) -> Optional[float]:
+        c = self._st.completed_at[self.i]
+        return None if np.isnan(c) else float(c)
+
+    @completed_at.setter
+    def completed_at(self, v: float) -> None:
+        self._st.completed_at[self.i] = v
+
+    @property
+    def n_pmtn(self) -> int:
+        return int(self._st.n_pmtn[self.i])
+
+    @n_pmtn.setter
+    def n_pmtn(self, v: int) -> None:
+        self._st.n_pmtn[self.i] = v
+
+    @property
+    def n_mig(self) -> int:
+        return int(self._st.n_mig[self.i])
+
+    @n_mig.setter
+    def n_mig(self, v: int) -> None:
+        self._st.n_mig[self.i] = v
+
+    # ---- scheduler-visible quantities (same formulas as JobState) -------
+    def flow_time(self, now: float) -> float:
+        return now - self.spec.release
+
+    def priority(self, now: float) -> float:
+        vt = self.vt
+        if vt <= 0.0:
+            return np.inf
+        return self.flow_time(now) / (vt * vt)
+
+    def priority_key(self, now: float):
+        return (self.priority(now), -self.spec.jid)
+
+    # ---- simulator-side quantities --------------------------------------
+    def remaining_vt(self) -> float:
+        return self.spec.proc_time - self.vt
+
+    @property
+    def is_running(self) -> bool:
+        return int(self._st.status[self.i]) == S_RUNNING
+
+
+class EngineState:
+    """All dynamic job state of one simulation, as flat arrays.
+
+    The job index is arrival order (specs sorted by ``(release, jid)``);
+    every policy-facing iteration below yields views in index order, which
+    matches the insertion order of the pre-refactor per-job dict exactly.
+    """
+
+    def __init__(self, specs: Sequence[JobSpec], n_nodes: int):
+        self.specs = list(specs)
+        n = len(self.specs)
+        self.proc_time = np.array([s.proc_time for s in self.specs], dtype=np.float64)
+        # per-job demand, n_tasks * cpu_need — reused every advance
+        self.demand = np.array(
+            [s.n_tasks * s.cpu_need for s in self.specs], dtype=np.float64)
+
+        self.vt = np.zeros(n)
+        self.yld = np.zeros(n)
+        self.penalty_until = np.full(n, -np.inf)
+        self.completed_at = np.full(n, np.nan)
+        self.status = np.full(n, S_NOT_ARRIVED, dtype=np.int8)
+        self.n_pmtn = np.zeros(n, dtype=np.int64)
+        self.n_mig = np.zeros(n, dtype=np.int64)
+        self.mappings: List[Optional[List[int]]] = [None] * n
+        self.views = [JobView(self, i) for i in range(n)]
+
+        self.pool = NodePool(n_nodes)
+        self.alive = np.ones(n_nodes, dtype=bool)
+        self.now = 0.0
+        self.util_integral = 0.0       # ∫ useful allocation dt
+        self.demand_integral = 0.0     # ∫ min(|P|, demand) dt
+
+    # ------------------------------------------------------------------ #
+    # index helpers                                                       #
+    # ------------------------------------------------------------------ #
+    def running_indices(self) -> np.ndarray:
+        return np.nonzero(self.status == S_RUNNING)[0]
+
+    def in_system_indices(self) -> np.ndarray:
+        return np.nonzero((self.status > S_NOT_ARRIVED) & (self.status < S_COMPLETED))[0]
+
+    def running(self) -> List[JobView]:
+        return [self.views[i] for i in self.running_indices()]
+
+    def uncompleted(self) -> List[JobView]:
+        return [self.views[i] for i in self.in_system_indices()]
+
+    def any_in_system(self) -> bool:
+        return bool(((self.status > S_NOT_ARRIVED) & (self.status < S_COMPLETED)).any())
+
+    # ------------------------------------------------------------------ #
+    # vectorized hot-loop kernels                                         #
+    # ------------------------------------------------------------------ #
+    def next_completion_time(self) -> float:
+        """Earliest time any running job's virtual time reaches p_j."""
+        run = self.running_indices()
+        if run.size == 0:
+            return np.inf
+        yld = self.yld[run]
+        ok = yld > _EPS
+        if not ok.any():
+            return np.inf
+        run = run[ok]
+        yld = yld[ok]
+        t0 = np.maximum(self.now, self.penalty_until[run])
+        t = t0 + (self.proc_time[run] - self.vt[run]) / yld
+        return float(t.min())
+
+    def finished_running_indices(self) -> np.ndarray:
+        """Running jobs whose remaining virtual time is exhausted."""
+        run = self.running_indices()
+        if run.size == 0:
+            return run
+        done = (self.proc_time[run] - self.vt[run] <= _EPS) & (self.yld[run] > _EPS)
+        return run[done]
+
+    def advance(self, t_next: float) -> None:
+        """Advance virtual times + utilization integrals to ``t_next``.
+
+        u(t) is piecewise-constant except at penalty expiries inside the
+        window; integrate exactly by splitting at those points.
+        """
+        if t_next <= self.now:
+            return
+        ins = self.in_system_indices()
+        demand = float(self.demand[ins].sum())
+        cap = float(self.alive.sum())
+        run = self.running_indices()
+        pen = self.penalty_until[run]
+        inner = pen[(pen > self.now) & (pen < t_next)]
+        cuts = np.unique(np.concatenate([[self.now, t_next], inner]))
+        contrib = self.yld[run] * self.demand[run]
+        for a, b in zip(cuts[:-1], cuts[1:]):
+            u = float(contrib[pen <= a + _EPS].sum())
+            self.util_integral += u * (b - a)
+            self.demand_integral += min(cap, demand) * (b - a)
+        eff = np.maximum(0.0, t_next - np.maximum(self.now, pen))
+        self.vt[run] = np.minimum(
+            self.proc_time[run], self.vt[run] + self.yld[run] * eff
+        )
+        self.now = t_next

@@ -142,7 +142,10 @@ class Plan:
                 return P(None, b, None, w)
             return P(None, b, *([None] * (nd - 2)))
 
-        return jax.tree.map_with_path(leaf, cache_shapes)
+        # jax.tree.map_with_path only exists on jax >= 0.5
+        tree_map_with_path = getattr(jax.tree, "map_with_path", None) \
+            or jax.tree_util.tree_map_with_path
+        return tree_map_with_path(leaf, cache_shapes)
 
     def act_spec(self):
         """Residual-stream constraint (B, T, D) for the SP toggle."""

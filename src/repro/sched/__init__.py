@@ -1,6 +1,8 @@
-"""repro.sched — online scheduling engine: DFRS discrete-event simulator,
-batch-scheduling baselines (FCFS/EASY), evaluation metrics, cluster model."""
-from .simulator import DFRSSimulator, SimParams, SimResult, simulate
+"""repro.sched — unified scheduling engine (DFRS policies + FCFS/EASY batch
+baselines behind one event loop), evaluation metrics, cluster model, named
+cluster scenarios, and the parallel scenario-sweep subsystem."""
+from .engine import BatchPolicy, DFRSPolicy, Engine, Policy, SimParams, SimResult
+from .simulator import DFRSSimulator, simulate
 from .batch import batch_schedule
 from .metrics import (
     bounded_stretch,
@@ -9,11 +11,16 @@ from .metrics import (
     normalized_underutilization,
 )
 from .cluster import ClusterEvent, failure_trace
+from .scenarios import apply_scenario, list_scenarios, register_scenario
+from .sweep import Cell, SweepResult, grid, run_grid
 
 __all__ = [
+    "Engine", "Policy", "DFRSPolicy", "BatchPolicy",
     "DFRSSimulator", "SimParams", "SimResult", "simulate",
     "batch_schedule",
     "bounded_stretch", "max_bounded_stretch", "degradation_from_bound",
     "normalized_underutilization",
     "ClusterEvent", "failure_trace",
+    "apply_scenario", "list_scenarios", "register_scenario",
+    "Cell", "SweepResult", "grid", "run_grid",
 ]

@@ -1,129 +1,27 @@
 """Batch-scheduling baselines: FCFS and EASY backfilling (paper §5.2).
 
-Nodes are allocated integrally and exclusively: job j occupies n_j nodes for
-exactly p_j seconds.  EASY gives the queue head a reservation at the
-earliest time it could start under FCFS and backfills any job that does not
-interfere with that reservation; as in the paper, EASY is given *perfect*
-processing-time estimates (a best case for the baseline).
+The actual scheduling logic lives in :class:`repro.sched.engine.BatchPolicy`
+and runs on the same unified engine (and the same ``SimResult`` metrics
+pipeline) as the DFRS policies; this module keeps the historical
+``batch_schedule`` entry point.
 """
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+from typing import Optional, Sequence
 
 from ..core.job import JobSpec
-from .metrics import bounded_stretch
+from ..core.policies import parse_policy
+from .engine import Engine, SimParams, SimResult
 
 __all__ = ["batch_schedule"]
 
 
-def batch_schedule(specs: Sequence[JobSpec], algo: str, params=None):
-    from .simulator import SimParams, SimResult
-
-    p = params or SimParams()
-    algo = algo.upper()
-    if algo not in ("FCFS", "EASY"):
+def batch_schedule(
+    specs: Sequence[JobSpec],
+    algo: str,
+    params: Optional[SimParams] = None,
+) -> SimResult:
+    spec = parse_policy(algo)
+    if not spec.is_batch:
         raise ValueError(algo)
-    specs = sorted(specs, key=lambda s: (s.release, s.jid))
-    for s in specs:
-        if s.n_tasks > p.n_nodes:
-            raise ValueError(f"job {s.jid} needs {s.n_tasks} > {p.n_nodes} nodes")
-
-    free = p.n_nodes
-    queue: List[JobSpec] = []
-    running: List[Tuple[float, int, int]] = []   # (end, jid, n_nodes) heap
-    start_at: Dict[int, float] = {}
-    completions: Dict[int, float] = {}
-    ai = 0
-    now = 0.0
-    util_int = 0.0
-    demand_int = 0.0
-    in_system: Dict[int, JobSpec] = {}
-
-    def try_start(now: float) -> None:
-        nonlocal free
-        # FCFS part: start queue head(s) while they fit.
-        while queue and queue[0].n_tasks <= free:
-            s = queue.pop(0)
-            free -= s.n_tasks
-            start_at[s.jid] = now
-            heapq.heappush(running, (now + s.proc_time, s.jid, s.n_tasks))
-        if algo == "FCFS" or not queue:
-            return
-        # EASY backfilling against the head's reservation.
-        changed = True
-        while changed:
-            changed = False
-            head = queue[0]
-            ends = sorted(running)
-            avail = free
-            shadow, extra = math.inf, 0
-            for end, _, n in ends:
-                avail += n
-                if avail >= head.n_tasks:
-                    shadow = end
-                    extra = avail - head.n_tasks
-                    break
-            for i, s in enumerate(list(queue[1:]), start=1):
-                if s.n_tasks <= free and (
-                    now + s.proc_time <= shadow + 1e-9 or s.n_tasks <= min(free, extra)
-                ):
-                    queue.pop(i)
-                    free -= s.n_tasks
-                    start_at[s.jid] = now
-                    heapq.heappush(running, (now + s.proc_time, s.jid, s.n_tasks))
-                    changed = True
-                    break   # recompute the reservation after each backfill
-
-    while ai < len(specs) or running or queue:
-        t_arr = specs[ai].release if ai < len(specs) else math.inf
-        t_end = running[0][0] if running else math.inf
-        t_next = min(t_arr, t_end)
-        if math.isinf(t_next):
-            raise RuntimeError("batch deadlock (job larger than cluster?)")
-        # integrate utilization/demand over [now, t_next)
-        u = sum(in_system[jid].n_tasks * in_system[jid].cpu_need
-                for _, jid, _ in running)
-        d = sum(s.n_tasks * s.cpu_need for s in in_system.values())
-        util_int += u * (t_next - now)
-        demand_int += min(float(p.n_nodes), d) * (t_next - now)
-        now = t_next
-        while running and running[0][0] <= now + 1e-9:
-            end, jid, n = heapq.heappop(running)
-            completions[jid] = end
-            free += n
-            del in_system[jid]
-        while ai < len(specs) and specs[ai].release <= now + 1e-9:
-            queue.append(specs[ai])
-            in_system[specs[ai].jid] = specs[ai]
-            ai += 1
-        try_start(now)
-
-    from .simulator import SimResult
-
-    stretches = {
-        s.jid: bounded_stretch(completions[s.jid] - s.release, s.proc_time, p.stretch_tau)
-        for s in specs
-    }
-    first = min(s.release for s in specs) if specs else 0.0
-    makespan = max(completions.values()) - first if completions else 0.0
-    total_work = sum(s.total_work for s in specs) or 1.0
-    svals = list(stretches.values())
-    return SimResult(
-        policy=algo,
-        completions=completions,
-        stretches=stretches,
-        max_stretch=max(svals) if svals else 0.0,
-        mean_stretch=float(np.mean(svals)) if svals else 0.0,
-        n_pmtn=0, n_mig=0,
-        pmtn_per_job=0.0, mig_per_job=0.0,
-        pmtn_per_hour=0.0, mig_per_hour=0.0,
-        bytes_moved_gb=0.0, bandwidth_gbps=0.0,
-        underutilization=(demand_int - util_int) / total_work,
-        makespan=makespan,
-        events=len(specs),
-    )
+    return Engine(specs, spec, params).run()

@@ -1,0 +1,648 @@
+"""Unified scheduling engine: one event loop for DFRS *and* batch baselines.
+
+The engine owns the simulation clock, the structure-of-arrays job state
+(``repro.core.state.EngineState``), the node pool, cluster (failure/elastic)
+events and all accounting (penalties, bandwidth, utilization integrals,
+metrics).  Scheduling behaviour is a pluggable :class:`Policy`:
+
+* :class:`DFRSPolicy` — the paper's dynamic fractional policies (§4):
+  greedy/GreedyP/GreedyPM submission, opportunistic completion handling,
+  periodic MCB8 / MCB8-stretch, OPT yield post-passes, MINVT/MINFT pins.
+* :class:`BatchPolicy` — FCFS and EASY backfilling (§5.2): integral,
+  exclusive node allocation with perfect runtime estimates for EASY.
+
+Both share the same event loop, fluid-progress advance, and
+:class:`SimResult` metrics pipeline, so DFRS and batch numbers are produced
+by literally the same accounting code.  Fluid model (§5.1): between events
+every running job j progresses at its yield (vt += y_j·dt) and completes
+when vt reaches p_j; preemption-resumes and migrations cost a rescheduling
+penalty of zero progress; pauses/resumes/migrations move memory images and
+are charged to the bandwidth tally.
+
+``SimParams.max_events`` bounds the event loop: the engine raises a
+``RuntimeError`` with diagnostics when exceeded, or — with
+``on_max_events="truncate"`` — stops early and returns a partial
+``SimResult`` with ``hit_max_events=True`` (completions then cover only the
+jobs that finished).
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.greedy import greedy_p, greedy_place, greedy_pm
+from ..core.job import COMPLETED, PAUSED, PENDING, RUNNING, JobSpec
+from ..core.mcb8 import mcb8
+from ..core.policies import PolicySpec, parse_policy
+from ..core.state import EngineState, JobView, S_COMPLETED, S_PENDING
+from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
+from ..core.yield_alloc import allocate
+from .cluster import ClusterEvent
+
+__all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy", "BatchPolicy"]
+
+_EPS = 1e-9
+
+
+@dataclass
+class SimParams:
+    n_nodes: int = 128
+    penalty: float = 300.0          # rescheduling penalty (s), §5.1
+    period: float = 600.0           # periodic MCB8 period (default 2x penalty)
+    node_mem_gb: float = 8.0        # bandwidth accounting only
+    stretch_tau: float = 10.0       # bounded-stretch threshold (s)
+    max_events: int = 20_000_000    # hard event-loop bound
+    on_max_events: str = "raise"    # "raise" | "truncate"
+
+    def __post_init__(self) -> None:
+        if self.max_events < 1:
+            raise ValueError("max_events must be >= 1")
+        if self.on_max_events not in ("raise", "truncate"):
+            raise ValueError(f"on_max_events must be 'raise' or 'truncate', "
+                             f"got {self.on_max_events!r}")
+
+
+@dataclass
+class SimResult:
+    policy: str
+    completions: Dict[int, float]
+    stretches: Dict[int, float]
+    max_stretch: float
+    mean_stretch: float
+    n_pmtn: int
+    n_mig: int
+    pmtn_per_job: float
+    mig_per_job: float
+    pmtn_per_hour: float
+    mig_per_hour: float
+    bytes_moved_gb: float
+    bandwidth_gbps: float
+    underutilization: float         # normalized (§6.4)
+    makespan: float
+    events: int
+    hit_max_events: bool = False    # True only with on_max_events="truncate"
+
+
+# ---------------------------------------------------------------------------
+# policies
+# ---------------------------------------------------------------------------
+class Policy:
+    """Scheduling behaviour plugged into the engine's event loop.
+
+    Hook order per event timestamp: job completions (``on_job_completed``
+    per job, then ``on_complete`` per batch), cluster events, arrivals
+    (``on_submit``), periodic tick (``on_tick``), then ``finalize(acted)``.
+    """
+
+    #: does the policy react to node failures / elastic capacity events?
+    handles_cluster_events = False
+    #: None | "mcb8" | "mcb8-stretch" — enables the periodic tick
+    periodic_kind: Optional[str] = None
+
+    def bind(self, engine: "Engine") -> None:
+        self.e = engine
+
+    def validate(self, specs: Sequence[JobSpec], params: SimParams) -> None:
+        pass
+
+    def on_submit(self, js: JobView) -> None:
+        pass
+
+    def on_job_completed(self, js: JobView) -> None:
+        pass
+
+    def on_complete(self) -> None:
+        pass
+
+    def on_tick(self) -> None:
+        pass
+
+    def finalize(self, acted: bool) -> None:
+        pass
+
+
+class DFRSPolicy(Policy):
+    """Dynamic fractional resource scheduling (paper §4), parameterized by a
+    :class:`repro.core.policies.PolicySpec`."""
+
+    handles_cluster_events = True
+
+    def __init__(self, spec: PolicySpec):
+        if spec.is_batch:
+            raise ValueError("BatchPolicy handles FCFS/EASY")
+        self.spec = spec
+        self.periodic_kind = spec.periodic
+        self._stretch_yields_set = False
+
+    def bind(self, engine: "Engine") -> None:
+        super().bind(engine)
+        self._stretch_yields_set = False    # reset per engine run
+
+    # ---- helpers --------------------------------------------------------
+    def _pinned(self) -> Dict[int, List[int]]:
+        """Jobs protected from remapping by MINVT/MINFT (§4.3)."""
+        spec = self.spec
+        pins: Dict[int, List[int]] = {}
+        if spec.minvt is None and spec.minft is None:
+            return pins
+        now = self.e.state.now
+        for js in self.e.state.running():
+            if spec.minvt is not None and js.vt < spec.minvt:
+                pins[js.spec.jid] = list(js.mapping)
+            elif spec.minft is not None and js.flow_time(now) < spec.minft:
+                pins[js.spec.jid] = list(js.mapping)
+        return pins
+
+    def _apply_mcb8(self) -> None:
+        e = self.e
+        cands = e.state.uncompleted()
+        if not cands:
+            return
+        res = mcb8(
+            cands, e.params.n_nodes, e.state.now,
+            pinned=self._pinned(), alive=e.state.alive,
+        )
+        self._apply_global_mapping(res.mappings, cands)
+
+    def _apply_global_mapping(
+        self, mappings: Dict[int, List[int]], cands: Sequence[JobView]
+    ) -> None:
+        """Apply a from-scratch MCB8 mapping transactionally: the mapping is
+        feasible as a whole, so all removals happen before any placement."""
+        e = self.e
+        migrations: List[Tuple[JobView, List[int]]] = []
+        starts: List[Tuple[JobView, List[int]]] = []
+        for js in cands:
+            new_map = mappings.get(js.spec.jid)
+            if js.status == RUNNING:
+                if new_map is None:
+                    e.pause(js)
+                elif _node_multiset(js.mapping) != _node_multiset(new_map):
+                    migrations.append((js, new_map))
+            elif new_map is not None:
+                starts.append((js, new_map))
+        e.migrate_many(migrations)
+        for js, new_map in starts:
+            e.start(js, new_map)
+
+    def _apply_stretch_per(self) -> None:
+        e = self.e
+        cands = e.state.uncompleted()
+        if not cands:
+            return
+        res = mcb8_stretch(
+            cands, e.params.n_nodes, e.state.now, e.params.period,
+            pinned=self._pinned(), alive=e.state.alive,
+        )
+        self._apply_global_mapping(res.mappings, cands)
+        running = e.state.running()
+        mappings = {js.spec.jid: js.mapping for js in running}
+        ylds = {js.spec.jid: res.yields.get(js.spec.jid, 0.0) for js in running}
+        if self.spec.opt == "MAX":
+            ylds = improve_max_stretch(
+                running, mappings, ylds, e.params.n_nodes, e.state.now,
+                e.params.period,
+            )
+        else:
+            ylds = improve_avg_stretch(
+                running, mappings, ylds, e.params.n_nodes, e.state.now,
+                e.params.period,
+            )
+        for js in running:
+            js.yld = float(min(1.0, ylds.get(js.spec.jid, 0.0)))
+        self._stretch_yields_set = True
+
+    # ---- hooks ----------------------------------------------------------
+    def on_submit(self, js: JobView) -> None:
+        e = self.e
+        kind = self.spec.on_submit
+        if kind is None:
+            return
+        if kind == "greedy":
+            mapping = greedy_place(e.state.pool.copy(), js.spec)
+            if mapping is not None:
+                e.start(js, mapping)
+            return
+        if kind in ("greedyP", "greedyPM"):
+            fn = greedy_p if kind == "greedyP" else greedy_pm
+            running = e.state.running()
+            adm = fn(e.state.pool.copy(), js.spec, running, e.state.now)
+            if adm.mapping is None:
+                return
+            by_jid = {j.spec.jid: j for j in running}
+            for jid in adm.paused:
+                e.pause(by_jid[jid])
+            e.migrate_many(
+                [(by_jid[jid], new_map) for jid, new_map in adm.moved.items()])
+            e.start(js, adm.mapping)
+            return
+        if kind == "mcb8":
+            self._apply_mcb8()
+            return
+        raise ValueError(kind)
+
+    def on_complete(self) -> None:
+        e = self.e
+        kind = self.spec.on_complete
+        if kind is None:
+            return
+        if kind == "greedy":
+            waiting = sorted(
+                (j for j in e.state.uncompleted() if j.status in (PENDING, PAUSED)),
+                key=lambda j: j.priority_key(e.state.now),
+                reverse=True,
+            )
+            for js in waiting:
+                mapping = greedy_place(e.state.pool.copy(), js.spec)
+                if mapping is not None:
+                    e.start(js, mapping)
+            return
+        if kind == "mcb8":
+            self._apply_mcb8()
+            return
+        raise ValueError(kind)
+
+    def on_tick(self) -> None:
+        if self.periodic_kind == "mcb8":
+            self._apply_mcb8()
+        else:
+            self._apply_stretch_per()
+
+    def finalize(self, acted: bool) -> None:
+        if acted:
+            self._reallocate()
+
+    def _reallocate(self) -> None:
+        """Recompute yields for running jobs (§4.6) unless /stretch-per just
+        set them explicitly."""
+        if self._stretch_yields_set:
+            self._stretch_yields_set = False
+            return
+        e = self.e
+        running = e.state.running()
+        specs = [js.spec for js in running]
+        maps = [js.mapping for js in running]
+        opt = self.spec.opt if self.spec.opt in ("MIN", "AVG") else "MIN"
+        ylds = allocate(specs, maps, e.params.n_nodes, opt=opt)
+        for js, y in zip(running, ylds):
+            js.yld = float(y)
+
+
+class BatchPolicy(Policy):
+    """FCFS / EASY backfilling (paper §5.2) on the unified engine.
+
+    Nodes are allocated integrally and exclusively: job j occupies n_j whole
+    nodes at yield 1 for exactly p_j seconds.  EASY gives the queue head a
+    reservation at the earliest time it could start under FCFS and backfills
+    any job that does not interfere with it; as in the paper, EASY is given
+    *perfect* processing-time estimates (a best case for the baseline).
+    Cluster events are ignored — the baselines do not model failures.
+    """
+
+    def __init__(self, algo: str):
+        algo = algo.upper()
+        if algo not in ("FCFS", "EASY"):
+            raise ValueError(algo)
+        self.algo = algo
+        self.queue: List[JobView] = []
+        self.free: List[int] = []                       # free node ids (heap)
+        self.running: List[Tuple[float, int, int]] = [] # (end, jid, n_tasks)
+        self._dirty = False
+
+    def bind(self, engine: "Engine") -> None:
+        # bind() is the per-engine reset: a Policy instance may be reused
+        # across Engine runs, so no run state can survive it
+        super().bind(engine)
+        self.queue = []
+        self.running = []
+        self._dirty = False
+        self.free = list(range(engine.params.n_nodes))
+        heapq.heapify(self.free)
+
+    def validate(self, specs: Sequence[JobSpec], params: SimParams) -> None:
+        for s in specs:
+            if s.n_tasks > params.n_nodes:
+                raise ValueError(
+                    f"job {s.jid} needs {s.n_tasks} > {params.n_nodes} nodes")
+
+    def on_submit(self, js: JobView) -> None:
+        self.queue.append(js)
+        self._dirty = True
+
+    def on_job_completed(self, js: JobView) -> None:
+        # called before the engine clears the mapping — reclaim the nodes
+        jid = js.spec.jid
+        self.running = [r for r in self.running if r[1] != jid]
+        for node in js.mapping:
+            heapq.heappush(self.free, node)
+        self._dirty = True
+
+    def finalize(self, acted: bool) -> None:
+        if self._dirty:
+            self._try_start()
+            self._dirty = False
+
+    # ---- allocation -----------------------------------------------------
+    def _start_job(self, js: JobView) -> None:
+        nodes = [heapq.heappop(self.free) for _ in range(js.spec.n_tasks)]
+        now = self.e.state.now
+        self.running.append((now + js.spec.proc_time, js.spec.jid,
+                             js.spec.n_tasks))
+        self.e.start(js, nodes)
+        js.yld = 1.0            # dedicated nodes, full speed
+
+    def _try_start(self) -> None:
+        now = self.e.state.now
+        q = self.queue
+        # FCFS part: start queue head(s) while they fit.
+        while q and q[0].spec.n_tasks <= len(self.free):
+            self._start_job(q.pop(0))
+        if self.algo == "FCFS" or not q:
+            return
+        # EASY backfilling against the head's reservation.
+        changed = True
+        while changed:
+            changed = False
+            head = q[0]
+            ends = sorted(self.running)
+            avail = len(self.free)
+            shadow, extra = math.inf, 0
+            for end, _, n in ends:
+                avail += n
+                if avail >= head.spec.n_tasks:
+                    shadow = end
+                    extra = avail - head.spec.n_tasks
+                    break
+            for i, js in enumerate(list(q[1:]), start=1):
+                free = len(self.free)
+                if js.spec.n_tasks <= free and (
+                    now + js.spec.proc_time <= shadow + 1e-9
+                    or js.spec.n_tasks <= min(free, extra)
+                ):
+                    q.pop(i)
+                    self._start_job(js)
+                    changed = True
+                    break   # recompute the reservation after each backfill
+        return
+
+
+def make_policy(spec: PolicySpec) -> Policy:
+    return BatchPolicy(spec.name) if spec.is_batch else DFRSPolicy(spec)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+class Engine:
+    """Event-driven simulation of one (trace, policy, cluster-script) cell."""
+
+    def __init__(
+        self,
+        specs: Sequence[JobSpec],
+        policy: PolicySpec | str | Policy,
+        params: Optional[SimParams] = None,
+        cluster_events: Sequence[ClusterEvent] = (),
+    ):
+        self.params = params or SimParams()
+        if isinstance(policy, Policy):
+            self.policy_spec = None
+            self.policy = policy
+        else:
+            spec = parse_policy(policy) if isinstance(policy, str) else policy
+            self.policy_spec = spec
+            self.policy = make_policy(spec)
+        self.state = EngineState(
+            sorted(specs, key=lambda s: (s.release, s.jid)),
+            self.params.n_nodes,
+        )
+        self.cluster_events = sorted(cluster_events, key=lambda e: e.time)
+        self.bytes_moved_gb = 0.0
+        self.n_pmtn = 0
+        self.n_mig = 0
+        self._events = 0
+        self.policy.validate(self.state.specs, self.params)
+        self.policy.bind(self)
+
+    # ------------------------------------------------------------------ #
+    # state transitions (shared accounting)                               #
+    # ------------------------------------------------------------------ #
+    def _job_mem_gb(self, spec: JobSpec, n_tasks: Optional[int] = None) -> float:
+        k = spec.n_tasks if n_tasks is None else n_tasks
+        return k * spec.mem_req * self.params.node_mem_gb
+
+    def pause(self, js: JobView) -> None:
+        assert js.status == RUNNING
+        self.state.pool.remove(js.spec, js.mapping)
+        js.status = PAUSED
+        js.mapping = None
+        js.yld = 0.0
+        js.n_pmtn += 1
+        self.n_pmtn += 1
+        self.bytes_moved_gb += self._job_mem_gb(js.spec)  # save image
+
+    def start(self, js: JobView, mapping: List[int]) -> None:
+        assert js.status in (PENDING, PAUSED)
+        resume = js.status == PAUSED
+        self.state.pool.place(js.spec, mapping)
+        js.status = RUNNING
+        js.mapping = list(mapping)
+        if resume:
+            js.penalty_until = self.state.now + self.params.penalty
+            self.bytes_moved_gb += self._job_mem_gb(js.spec)  # restore image
+
+    def migrate_many(self, pairs: Sequence[Tuple[JobView, List[int]]]) -> None:
+        """Transactionally migrate several running jobs: the new mappings are
+        feasible *as a set* (computed against a pool copy), so all removals
+        must happen before any placement."""
+        moves = []
+        for js, new_mapping in pairs:
+            assert js.status == RUNNING
+            old = _node_multiset(js.mapping)
+            new = _node_multiset(new_mapping)
+            moved = js.spec.n_tasks - sum(
+                min(old.get(n, 0), new.get(n, 0)) for n in old)
+            moves.append((js, new_mapping, moved))
+        for js, _, _ in moves:
+            self.state.pool.remove(js.spec, js.mapping)
+        for js, new_mapping, moved in moves:
+            self.state.pool.place(js.spec, new_mapping)
+            js.mapping = list(new_mapping)
+            if moved == 0:
+                continue
+            js.n_mig += 1
+            self.n_mig += 1
+            js.penalty_until = self.state.now + self.params.penalty
+            self.bytes_moved_gb += 2.0 * self._job_mem_gb(js.spec, moved)
+
+    def complete(self, js: JobView) -> None:
+        self.state.pool.remove(js.spec, js.mapping)
+        js.status = COMPLETED
+        js.mapping = None
+        js.yld = 0.0
+        js.completed_at = self.state.now
+
+    # ------------------------------------------------------------------ #
+    # cluster (failure / elastic) events                                  #
+    # ------------------------------------------------------------------ #
+    def _apply_cluster_event(self, ev: ClusterEvent) -> None:
+        st = self.state
+        if ev.kind == "fail":
+            for node in ev.nodes:
+                if not st.alive[node]:
+                    continue
+                st.alive[node] = False
+                # force-preempt every job with a task on the node
+                for js in list(st.running()):
+                    if node in (js.mapping or ()):
+                        self.pause(js)
+                # node can no longer host anything (0.0, not a negative
+                # sentinel: NodePool.place validates global non-negativity)
+                st.pool.mem_free[node] = 0.0
+                st.pool.load[node] = np.inf
+        elif ev.kind == "join":
+            for node in ev.nodes:
+                if st.alive[node]:
+                    continue
+                st.alive[node] = True
+                st.pool.mem_free[node] = 1.0
+                st.pool.load[node] = 0.0
+        else:
+            raise ValueError(ev.kind)
+
+    # ------------------------------------------------------------------ #
+    # main loop                                                           #
+    # ------------------------------------------------------------------ #
+    def run(self) -> SimResult:
+        p = self.params
+        st = self.state
+        pol = self.policy
+        arrivals = st.specs
+        ai = 0
+        cev = self.cluster_events if pol.handles_cluster_events else []
+        ci = 0
+        periodic = pol.periodic_kind is not None
+        next_tick = math.inf
+        if periodic and arrivals:
+            next_tick = arrivals[0].release + p.period
+        hit_cap = False
+
+        while True:
+            self._events += 1
+            if self._events > p.max_events:
+                self._events = p.max_events
+                if p.on_max_events == "truncate":
+                    hit_cap = True
+                    break
+                n_done = int((st.status == S_COMPLETED).sum())
+                raise RuntimeError(
+                    f"event budget exceeded: max_events={p.max_events} at "
+                    f"t={st.now:.6g}s with {n_done}/{len(arrivals)} jobs "
+                    f"completed (policy {pol.__class__.__name__}); raise "
+                    f"SimParams.max_events or set on_max_events='truncate' "
+                    f"for a partial SimResult")
+            t_arr = arrivals[ai].release if ai < len(arrivals) else math.inf
+            t_cev = cev[ci].time if ci < len(cev) else math.inf
+            t_done = st.next_completion_time()
+            live = st.any_in_system()
+            t_tick = next_tick if (periodic and (live or ai < len(arrivals))) else math.inf
+            t_next = min(t_arr, t_done, t_tick, t_cev)
+            if math.isinf(t_next):
+                break
+            st.advance(t_next)
+
+            acted = False
+            # 1) completions
+            while True:
+                fin = st.finished_running_indices()
+                if fin.size == 0:
+                    break
+                for i in fin:
+                    js = st.views[i]
+                    pol.on_job_completed(js)   # mapping still set here
+                    self.complete(js)
+                pol.on_complete()
+                acted = True
+            # 2) cluster events
+            while ci < len(cev) and cev[ci].time <= st.now + _EPS:
+                self._apply_cluster_event(cev[ci])
+                ci += 1
+                acted = True
+            # 3) arrivals
+            while ai < len(arrivals) and arrivals[ai].release <= st.now + _EPS:
+                i = ai
+                ai += 1
+                st.status[i] = S_PENDING
+                pol.on_submit(st.views[i])
+                acted = True
+            # 4) periodic tick
+            if periodic and st.now + _EPS >= next_tick:
+                pol.on_tick()
+                next_tick += p.period
+                acted = True
+            pol.finalize(acted)
+
+        return self._result(hit_cap)
+
+    # ------------------------------------------------------------------ #
+    def _result(self, hit_cap: bool = False) -> SimResult:
+        from .metrics import bounded_stretch
+
+        p = self.params
+        st = self.state
+        completions: Dict[int, float] = {}
+        stretches: Dict[int, float] = {}
+        for js in st.views:
+            if js.completed_at is None:
+                if hit_cap:
+                    continue            # truncated run: report finished jobs
+                raise RuntimeError(
+                    f"job {js.spec.jid} never completed (deadlock?)")
+            completions[js.spec.jid] = js.completed_at
+            t = js.completed_at - js.spec.release
+            stretches[js.spec.jid] = bounded_stretch(
+                t, js.spec.proc_time, p.stretch_tau)
+        specs = st.specs
+        first = min(s.release for s in specs) if specs else 0.0
+        last = max(completions.values()) if completions else 0.0
+        makespan = max(0.0, last - first)
+        hours = max(makespan / 3600.0, 1e-9)
+        total_work = sum(s.total_work for s in specs) or 1.0
+        svals = list(stretches.values())
+        if self.policy_spec is not None:
+            name = self.policy_spec.name
+        elif isinstance(self.policy, BatchPolicy):
+            name = self.policy.algo
+        elif isinstance(self.policy, DFRSPolicy):
+            name = self.policy.spec.name
+        else:
+            name = self.policy.__class__.__name__
+        return SimResult(
+            policy=name,
+            completions=completions,
+            stretches=stretches,
+            max_stretch=max(svals) if svals else 0.0,
+            mean_stretch=float(np.mean(svals)) if svals else 0.0,
+            n_pmtn=self.n_pmtn,
+            n_mig=self.n_mig,
+            pmtn_per_job=self.n_pmtn / max(1, len(specs)),
+            mig_per_job=self.n_mig / max(1, len(specs)),
+            pmtn_per_hour=self.n_pmtn / hours,
+            mig_per_hour=self.n_mig / hours,
+            bytes_moved_gb=self.bytes_moved_gb,
+            bandwidth_gbps=self.bytes_moved_gb / max(makespan, 1e-9),
+            underutilization=(st.demand_integral - st.util_integral) / total_work,
+            makespan=makespan,
+            events=self._events,
+            hit_max_events=hit_cap,
+        )
+
+
+def _node_multiset(mapping: Sequence[int]) -> Dict[int, int]:
+    out: Dict[int, int] = {}
+    for n in mapping:
+        out[n] = out.get(n, 0) + 1
+    return out

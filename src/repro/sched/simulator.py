@@ -1,78 +1,26 @@
-"""Discrete-event simulator for DFRS policies (paper §5.1).
+"""Back-compat front-end for the unified engine (see ``repro.sched.engine``).
 
-Fluid model: between scheduling events every running job j progresses at its
-yield y_j (virtual time vt += y_j * dt); job j completes when vt reaches its
-processing time p_j.  Every preemption-resume and every migration costs a
-*rescheduling penalty* (default 5 min) of zero progress — policies are
-unaware of the penalty (§5.1).  Bandwidth accounting follows the paper's
-pause/resume pessimism: a pause writes the job's memory image to storage,
-a resume reads it back, a migration does both for the tasks that moved.
-
-Node failures / elastic capacity changes are injected as ClusterEvents: a
-failure force-preempts resident jobs (their progress is preserved — the
-checkpoint/restart analogue on the TPU adaptation) and shrinks the pool.
+Historically this module held the DFRS discrete-event simulator; the event
+loop, fluid-progress model and metrics now live in :class:`Engine`, which
+runs DFRS policies and the FCFS/EASY batch baselines through one code path.
+``DFRSSimulator`` and ``simulate`` are kept as thin wrappers so existing
+callers and tests keep working unchanged.
 """
 from __future__ import annotations
 
-import heapq
-import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Optional, Sequence
 
-import numpy as np
-
-from ..core.job import (
-    COMPLETED,
-    PAUSED,
-    PENDING,
-    RUNNING,
-    JobSpec,
-    JobState,
-    NodePool,
-)
-from ..core.greedy import greedy_place, greedy_p, greedy_pm
-from ..core.mcb8 import mcb8
+from ..core.job import JobSpec
 from ..core.policies import PolicySpec, parse_policy
-from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
-from ..core.yield_alloc import allocate
 from .cluster import ClusterEvent
+from .engine import Engine, SimParams, SimResult
 
 __all__ = ["SimParams", "SimResult", "DFRSSimulator", "simulate"]
 
-_EPS = 1e-9
 
+class DFRSSimulator(Engine):
+    """DFRS-only front-end: rejects batch policies like the original class."""
 
-@dataclass
-class SimParams:
-    n_nodes: int = 128
-    penalty: float = 300.0          # rescheduling penalty (s), §5.1
-    period: float = 600.0           # periodic MCB8 period (default 2x penalty)
-    node_mem_gb: float = 8.0        # bandwidth accounting only
-    stretch_tau: float = 10.0       # bounded-stretch threshold (s)
-    max_events: int = 20_000_000
-
-
-@dataclass
-class SimResult:
-    policy: str
-    completions: Dict[int, float]
-    stretches: Dict[int, float]
-    max_stretch: float
-    mean_stretch: float
-    n_pmtn: int
-    n_mig: int
-    pmtn_per_job: float
-    mig_per_job: float
-    pmtn_per_hour: float
-    mig_per_hour: float
-    bytes_moved_gb: float
-    bandwidth_gbps: float
-    underutilization: float         # normalized (§6.4)
-    makespan: float
-    events: int
-
-
-class DFRSSimulator:
     def __init__(
         self,
         specs: Sequence[JobSpec],
@@ -80,398 +28,10 @@ class DFRSSimulator:
         params: Optional[SimParams] = None,
         cluster_events: Sequence[ClusterEvent] = (),
     ):
-        self.params = params or SimParams()
-        self.policy = parse_policy(policy) if isinstance(policy, str) else policy
-        if self.policy.is_batch:
+        spec = parse_policy(policy) if isinstance(policy, str) else policy
+        if spec.is_batch:
             raise ValueError("use repro.sched.batch for FCFS/EASY")
-        self.specs = sorted(specs, key=lambda s: (s.release, s.jid))
-        self.cluster_events = sorted(cluster_events, key=lambda e: e.time)
-        self.jobs: Dict[int, JobState] = {}
-        self.pool = NodePool(self.params.n_nodes)
-        self.alive = np.ones(self.params.n_nodes, dtype=bool)
-        self.now = 0.0
-        self.bytes_moved_gb = 0.0
-        self.n_pmtn = 0
-        self.n_mig = 0
-        self._util_integral = 0.0      # ∫ u dt
-        self._demand_integral = 0.0    # ∫ min(P, D) dt
-        self._events = 0
-
-    # ------------------------------------------------------------------ #
-    # accounting helpers                                                  #
-    # ------------------------------------------------------------------ #
-    def _job_mem_gb(self, spec: JobSpec, n_tasks: Optional[int] = None) -> float:
-        k = spec.n_tasks if n_tasks is None else n_tasks
-        return k * spec.mem_req * self.params.node_mem_gb
-
-    def _pause(self, js: JobState) -> None:
-        assert js.status == RUNNING
-        self.pool.remove(js.spec, js.mapping)
-        js.status = PAUSED
-        js.mapping = None
-        js.yld = 0.0
-        js.n_pmtn += 1
-        self.n_pmtn += 1
-        self.bytes_moved_gb += self._job_mem_gb(js.spec)  # save image
-
-    def _start(self, js: JobState, mapping: List[int]) -> None:
-        assert js.status in (PENDING, PAUSED)
-        resume = js.status == PAUSED
-        self.pool.place(js.spec, mapping)
-        js.status = RUNNING
-        js.mapping = list(mapping)
-        js.started_once = True
-        if resume:
-            js.penalty_until = self.now + self.params.penalty
-            self.bytes_moved_gb += self._job_mem_gb(js.spec)  # restore image
-
-    def _migrate_many(self, pairs: Sequence[Tuple[JobState, List[int]]]) -> None:
-        """Transactionally migrate several running jobs: the new mappings are
-        feasible *as a set* (computed against a pool copy), so all removals
-        must happen before any placement."""
-        moves = []
-        for js, new_mapping in pairs:
-            assert js.status == RUNNING
-            old = _node_multiset(js.mapping)
-            new = _node_multiset(new_mapping)
-            moved = js.spec.n_tasks - sum(
-                min(old.get(n, 0), new.get(n, 0)) for n in old)
-            moves.append((js, new_mapping, moved))
-        for js, _, _ in moves:
-            self.pool.remove(js.spec, js.mapping)
-        for js, new_mapping, moved in moves:
-            self.pool.place(js.spec, new_mapping)
-            js.mapping = list(new_mapping)
-            if moved == 0:
-                continue
-            js.n_mig += 1
-            self.n_mig += 1
-            js.penalty_until = self.now + self.params.penalty
-            self.bytes_moved_gb += 2.0 * self._job_mem_gb(js.spec, moved)
-
-    def _complete(self, js: JobState) -> None:
-        self.pool.remove(js.spec, js.mapping)
-        js.status = COMPLETED
-        js.mapping = None
-        js.yld = 0.0
-        js.completed_at = self.now
-
-    # ------------------------------------------------------------------ #
-    # policy actions                                                      #
-    # ------------------------------------------------------------------ #
-    def _running(self) -> List[JobState]:
-        return [j for j in self.jobs.values() if j.status == RUNNING]
-
-    def _uncompleted(self) -> List[JobState]:
-        return [j for j in self.jobs.values() if j.status != COMPLETED]
-
-    def _pinned(self) -> Dict[int, List[int]]:
-        """Jobs protected from remapping by MINVT/MINFT (§4.3)."""
-        spec = self.policy
-        pins: Dict[int, List[int]] = {}
-        if spec.minvt is None and spec.minft is None:
-            return pins
-        for js in self._running():
-            if spec.minvt is not None and js.vt < spec.minvt:
-                pins[js.spec.jid] = list(js.mapping)
-            elif spec.minft is not None and js.flow_time(self.now) < spec.minft:
-                pins[js.spec.jid] = list(js.mapping)
-        return pins
-
-    def _apply_mcb8(self) -> None:
-        cands = self._uncompleted()
-        if not cands:
-            return
-        res = mcb8(
-            cands, self.params.n_nodes, self.now,
-            pinned=self._pinned(), alive=self.alive,
-        )
-        self._apply_global_mapping(res.mappings, cands)
-
-    def _apply_global_mapping(
-        self, mappings: Dict[int, List[int]], cands: Sequence[JobState]
-    ) -> None:
-        """Apply a from-scratch MCB8 mapping transactionally: the mapping is
-        feasible as a whole, so all removals happen before any placement."""
-        migrations: List[Tuple[JobState, List[int]]] = []
-        starts: List[Tuple[JobState, List[int]]] = []
-        for js in cands:
-            new_map = mappings.get(js.spec.jid)
-            if js.status == RUNNING:
-                if new_map is None:
-                    self._pause(js)
-                elif _node_multiset(js.mapping) != _node_multiset(new_map):
-                    migrations.append((js, new_map))
-            elif new_map is not None:
-                starts.append((js, new_map))
-        self._migrate_many(migrations)
-        for js, new_map in starts:
-            self._start(js, new_map)
-
-    def _apply_stretch_per(self) -> None:
-        cands = self._uncompleted()
-        if not cands:
-            return
-        res = mcb8_stretch(
-            cands, self.params.n_nodes, self.now, self.params.period,
-            pinned=self._pinned(), alive=self.alive,
-        )
-        self._apply_global_mapping(res.mappings, cands)
-        running = self._running()
-        mappings = {js.spec.jid: js.mapping for js in running}
-        ylds = {js.spec.jid: res.yields.get(js.spec.jid, 0.0) for js in running}
-        if self.policy.opt == "MAX":
-            ylds = improve_max_stretch(
-                running, mappings, ylds, self.params.n_nodes, self.now, self.params.period
-            )
-        else:
-            ylds = improve_avg_stretch(
-                running, mappings, ylds, self.params.n_nodes, self.now, self.params.period
-            )
-        for js in running:
-            js.yld = float(min(1.0, ylds.get(js.spec.jid, 0.0)))
-        self._stretch_yields_set = True
-
-    def _on_submit(self, js: JobState) -> None:
-        kind = self.policy.on_submit
-        if kind is None:
-            return
-        if kind == "greedy":
-            mapping = greedy_place(self.pool.copy(), js.spec)
-            if mapping is not None:
-                self._start(js, mapping)
-            return
-        if kind in ("greedyP", "greedyPM"):
-            fn = greedy_p if kind == "greedyP" else greedy_pm
-            adm = fn(self.pool.copy(), js.spec, self._running(), self.now)
-            if adm.mapping is None:
-                return
-            by_jid = {j.spec.jid: j for j in self._running()}
-            for jid in adm.paused:
-                self._pause(by_jid[jid])
-            self._migrate_many(
-                [(by_jid[jid], new_map) for jid, new_map in adm.moved.items()])
-            self._start(js, adm.mapping)
-            return
-        if kind == "mcb8":
-            self._apply_mcb8()
-            return
-        raise ValueError(kind)
-
-    def _on_complete(self) -> None:
-        kind = self.policy.on_complete
-        if kind is None:
-            return
-        if kind == "greedy":
-            waiting = sorted(
-                (j for j in self.jobs.values() if j.status in (PENDING, PAUSED)),
-                key=lambda j: j.priority_key(self.now),
-                reverse=True,
-            )
-            for js in waiting:
-                mapping = greedy_place(self.pool.copy(), js.spec)
-                if mapping is not None:
-                    self._start(js, mapping)
-            return
-        if kind == "mcb8":
-            self._apply_mcb8()
-            return
-        raise ValueError(kind)
-
-    def _reallocate(self) -> None:
-        """Recompute yields for running jobs (§4.6) unless /stretch-per just
-        set them explicitly."""
-        if getattr(self, "_stretch_yields_set", False):
-            self._stretch_yields_set = False
-            return
-        running = self._running()
-        specs = [js.spec for js in running]
-        maps = [js.mapping for js in running]
-        opt = self.policy.opt if self.policy.opt in ("MIN", "AVG") else "MIN"
-        ylds = allocate(specs, maps, self.params.n_nodes, opt=opt)
-        for js, y in zip(running, ylds):
-            js.yld = float(y)
-
-    # ------------------------------------------------------------------ #
-    # cluster (failure / elastic) events                                  #
-    # ------------------------------------------------------------------ #
-    def _apply_cluster_event(self, ev: ClusterEvent) -> None:
-        if ev.kind == "fail":
-            for node in ev.nodes:
-                if not self.alive[node]:
-                    continue
-                self.alive[node] = False
-                # force-preempt every job with a task on the node
-                for js in list(self._running()):
-                    if node in (js.mapping or ()):
-                        self._pause(js)
-                # node can no longer host anything (0.0, not a negative
-                # sentinel: NodePool.place validates global non-negativity)
-                self.pool.mem_free[node] = 0.0
-                self.pool.load[node] = np.inf
-        elif ev.kind == "join":
-            for node in ev.nodes:
-                if self.alive[node]:
-                    continue
-                self.alive[node] = True
-                self.pool.mem_free[node] = 1.0
-                self.pool.load[node] = 0.0
-        else:
-            raise ValueError(ev.kind)
-
-    # ------------------------------------------------------------------ #
-    # main loop                                                           #
-    # ------------------------------------------------------------------ #
-    def _next_completion(self) -> Tuple[float, Optional[JobState]]:
-        best_t, best = math.inf, None
-        for js in self._running():
-            if js.yld <= _EPS:
-                continue
-            t0 = max(self.now, js.penalty_until)
-            t = t0 + js.remaining_vt() / js.yld
-            if t < best_t:
-                best_t, best = t, js
-        return best_t, best
-
-    def _advance(self, t_next: float) -> None:
-        """Advance virtual times + utilization integrals to t_next."""
-        if t_next <= self.now:
-            return
-        demand = sum(
-            j.spec.n_tasks * j.spec.cpu_need for j in self._uncompleted()
-        )
-        cap = float(self.alive.sum())
-        # u(t) is piecewise-constant except at penalty expiries inside the
-        # window; integrate exactly by splitting at those points.
-        cuts = sorted(
-            {self.now, t_next}
-            | {
-                js.penalty_until
-                for js in self._running()
-                if self.now < js.penalty_until < t_next
-            }
-        )
-        for a, b in zip(cuts[:-1], cuts[1:]):
-            u = sum(
-                js.yld * js.spec.cpu_need * js.spec.n_tasks
-                for js in self._running()
-                if js.penalty_until <= a + _EPS
-            )
-            self._util_integral += u * (b - a)
-            self._demand_integral += min(cap, demand) * (b - a)
-        for js in self._running():
-            eff = max(0.0, t_next - max(self.now, js.penalty_until))
-            js.vt = min(js.spec.proc_time, js.vt + js.yld * eff)
-        self.now = t_next
-
-    def run(self) -> SimResult:
-        p = self.params
-        arrivals = list(self.specs)
-        ai = 0
-        cev = list(self.cluster_events)
-        ci = 0
-        periodic = self.policy.periodic is not None
-        next_tick = math.inf
-        if periodic and arrivals:
-            next_tick = arrivals[0].release + p.period
-
-        while True:
-            self._events += 1
-            if self._events > p.max_events:
-                raise RuntimeError("simulator event budget exceeded")
-            t_arr = arrivals[ai].release if ai < len(arrivals) else math.inf
-            t_cev = cev[ci].time if ci < len(cev) else math.inf
-            t_done, _ = self._next_completion()
-            live = any(js.status != COMPLETED for js in self.jobs.values())
-            t_tick = next_tick if (periodic and (live or ai < len(arrivals))) else math.inf
-            t_next = min(t_arr, t_done, t_tick, t_cev)
-            if math.isinf(t_next):
-                break
-            self._advance(t_next)
-
-            acted = False
-            # 1) completions
-            while True:
-                finished = [
-                    js for js in self._running()
-                    if js.remaining_vt() <= _EPS and js.yld > _EPS
-                ]
-                if not finished:
-                    break
-                for js in finished:
-                    self._complete(js)
-                self._on_complete()
-                acted = True
-            # 2) cluster events
-            while ci < len(cev) and cev[ci].time <= self.now + _EPS:
-                self._apply_cluster_event(cev[ci])
-                ci += 1
-                acted = True
-            # 3) arrivals
-            while ai < len(arrivals) and arrivals[ai].release <= self.now + _EPS:
-                spec = arrivals[ai]
-                ai += 1
-                js = JobState(spec=spec)
-                self.jobs[spec.jid] = js
-                self._on_submit(js)
-                acted = True
-            # 4) periodic tick
-            if periodic and self.now + _EPS >= next_tick:
-                if self.policy.periodic == "mcb8":
-                    self._apply_mcb8()
-                else:
-                    self._apply_stretch_per()
-                next_tick += p.period
-                acted = True
-            if acted:
-                self._reallocate()
-
-        return self._result()
-
-    # ------------------------------------------------------------------ #
-    def _result(self) -> SimResult:
-        from .metrics import bounded_stretch
-
-        p = self.params
-        completions = {}
-        stretches = {}
-        for jid, js in self.jobs.items():
-            if js.completed_at is None:
-                raise RuntimeError(f"job {jid} never completed (deadlock?)")
-            completions[jid] = js.completed_at
-            t = js.completed_at - js.spec.release
-            stretches[jid] = bounded_stretch(t, js.spec.proc_time, p.stretch_tau)
-        first = min(s.release for s in self.specs) if self.specs else 0.0
-        last = max(completions.values()) if completions else 0.0
-        makespan = max(0.0, last - first)
-        hours = max(makespan / 3600.0, 1e-9)
-        total_work = sum(s.total_work for s in self.specs) or 1.0
-        svals = list(stretches.values())
-        return SimResult(
-            policy=self.policy.name,
-            completions=completions,
-            stretches=stretches,
-            max_stretch=max(svals) if svals else 0.0,
-            mean_stretch=float(np.mean(svals)) if svals else 0.0,
-            n_pmtn=self.n_pmtn,
-            n_mig=self.n_mig,
-            pmtn_per_job=self.n_pmtn / max(1, len(self.specs)),
-            mig_per_job=self.n_mig / max(1, len(self.specs)),
-            pmtn_per_hour=self.n_pmtn / hours,
-            mig_per_hour=self.n_mig / hours,
-            bytes_moved_gb=self.bytes_moved_gb,
-            bandwidth_gbps=self.bytes_moved_gb / max(makespan, 1e-9),
-            underutilization=(self._demand_integral - self._util_integral) / total_work,
-            makespan=makespan,
-            events=self._events,
-        )
-
-
-def _node_multiset(mapping: Sequence[int]) -> Dict[int, int]:
-    out: Dict[int, int] = {}
-    for n in mapping:
-        out[n] = out.get(n, 0) + 1
-    return out
+        super().__init__(specs, spec, params, cluster_events)
 
 
 def simulate(
@@ -480,10 +40,9 @@ def simulate(
     params: Optional[SimParams] = None,
     cluster_events: Sequence[ClusterEvent] = (),
 ) -> SimResult:
-    """Run one DFRS policy (or FCFS/EASY via repro.sched.batch) on a trace."""
-    spec = parse_policy(policy)
-    if spec.is_batch:
-        from .batch import batch_schedule
+    """Run one policy (DFRS or FCFS/EASY) on a trace via the unified engine.
 
-        return batch_schedule(specs, spec.name, params)
-    return DFRSSimulator(specs, spec, params, cluster_events).run()
+    Cluster events are ignored for the batch baselines (they do not model
+    failures), matching the historical behaviour of this entry point.
+    """
+    return Engine(specs, policy, params, cluster_events).run()

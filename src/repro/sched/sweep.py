@@ -1,0 +1,258 @@
+"""Parallel scenario sweeps: evaluate a grid of simulation cells at once.
+
+The paper's headline numbers come from sweeping ~116 policy combinations
+against FCFS/EASY over many traces; this module makes that a first-class
+operation.  A :class:`Cell` is one (workload × policy × scenario) point —
+the workload a declarative :class:`repro.workloads.registry.WorkloadSpec`,
+the scenario a name from :mod:`repro.sched.scenarios` — and
+:func:`run_grid` fans cells across worker processes with chunked
+scheduling, aggregating per-cell metrics into a tidy list of flat record
+dicts plus an optional JSON artifact.
+
+Cells are cheap to pickle (no trace objects cross process boundaries);
+workers regenerate and memoize traces / Theorem-1 bounds locally, so a
+policy sweep over one trace pays for trace generation and bound computation
+once per worker, not once per cell.
+
+    ws = [WorkloadSpec("lublin", n_jobs=250, n_nodes=64, seed=s) for s in range(3)]
+    res = run_grid(grid(ws, TABLE2_POLICIES, ["baseline", "rack_failure"]),
+                   n_workers=8, compute_bound=True)
+    res.save_json("experiments/results/sweep.json")
+    res.summary(by="policy")
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing as mp
+import os
+import sys
+import time
+from dataclasses import dataclass, replace
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core.bound import max_stretch_lower_bound
+from ..workloads.registry import WorkloadSpec, make_trace
+from .engine import Engine, SimParams
+from .scenarios import apply_scenario
+
+__all__ = ["Cell", "SweepResult", "grid", "run_grid", "record_matches"]
+
+
+def record_matches(record: Dict[str, Any], kv: Dict[str, Any]) -> bool:
+    """Shared record predicate: every kv pair equals the record's value."""
+    return all(record.get(k) == v for k, v in kv.items())
+
+
+@dataclass(frozen=True)
+class Cell:
+    """One simulation point of a sweep grid."""
+
+    workload: WorkloadSpec
+    policy: str
+    scenario: str = "baseline"
+    params: Optional[SimParams] = None   # template; n_nodes comes from workload
+
+    @property
+    def name(self) -> str:
+        return f"{self.workload.name} × {self.policy} × {self.scenario}"
+
+
+def grid(
+    workloads: Iterable[WorkloadSpec],
+    policies: Iterable[str],
+    scenarios: Iterable[str] = ("baseline",),
+    params: Optional[SimParams] = None,
+) -> List[Cell]:
+    """Cross product of workloads × policies × scenarios."""
+    return [
+        Cell(w, p, sc, params)
+        for w in workloads
+        for p in policies
+        for sc in scenarios
+    ]
+
+
+@dataclass
+class SweepResult:
+    records: List[Dict[str, Any]]
+    wall_s: float
+    n_workers: int
+
+    @property
+    def n_cells(self) -> int:
+        return len(self.records)
+
+    @property
+    def cells_per_sec(self) -> float:
+        return self.n_cells / max(self.wall_s, 1e-9)
+
+    def filter(self, **kv) -> List[Dict[str, Any]]:
+        return [r for r in self.records if record_matches(r, kv)]
+
+    def values(self, key: str, **kv) -> np.ndarray:
+        return np.array([r[key] for r in self.filter(**kv)])
+
+    def summary(self, by: str = "policy",
+                keys: Sequence[str] = ("mean_stretch", "max_stretch")) -> Dict:
+        """Per-group mean/max aggregates of the chosen metric keys."""
+        groups: Dict[str, List[Dict[str, Any]]] = {}
+        for r in self.records:
+            groups.setdefault(str(r[by]), []).append(r)
+        out = {}
+        for g, rs in sorted(groups.items()):
+            out[g] = {"n_cells": len(rs)}
+            for k in keys:
+                vals = np.array([r[k] for r in rs], dtype=float)
+                out[g][f"mean_{k}"] = float(vals.mean())
+                out[g][f"max_{k}"] = float(vals.max())
+        return out
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "schema": "repro.sweep/v1",
+            "n_cells": self.n_cells,
+            "wall_s": self.wall_s,
+            "cells_per_sec": self.cells_per_sec,
+            "n_workers": self.n_workers,
+            "records": self.records,
+        }
+
+    def save_json(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=1)
+        return path
+
+
+# --------------------------------------------------------------------------- #
+# worker side                                                                  #
+# --------------------------------------------------------------------------- #
+# per-process memo: (workload, scenario) -> (specs, events, bound-or-None)
+_CELL_CACHE: Dict[Tuple[WorkloadSpec, str, bool], Tuple] = {}
+
+
+def _materialize(workload: WorkloadSpec, scenario: str, compute_bound: bool):
+    key = (workload, scenario, compute_bound)
+    hit = _CELL_CACHE.get(key)
+    if hit is not None:
+        return hit
+    specs = make_trace(workload)
+    specs, events = apply_scenario(scenario, specs, workload.n_nodes,
+                                   seed=workload.seed)
+    bound = (max_stretch_lower_bound(specs, workload.n_nodes)
+             if compute_bound else None)
+    out = (specs, events, bound)
+    if len(_CELL_CACHE) > 32:       # sweeps iterate policies per workload
+        _CELL_CACHE.clear()
+    _CELL_CACHE[key] = out
+    return out
+
+
+def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
+    idx, cell, compute_bound = task
+    specs, events, bound = _materialize(cell.workload, cell.scenario,
+                                        compute_bound)
+    base = cell.params or SimParams()
+    params = replace(base, n_nodes=cell.workload.n_nodes)
+    t0 = time.perf_counter()
+    engine = Engine(specs, cell.policy, params, cluster_events=events)
+    # batch baselines drop ClusterEvents (they don't model failures) — flag
+    # the record so failure-scenario cells aren't read as simulated for them
+    applied = engine.policy.handles_cluster_events or not events
+    r = engine.run()
+    wall = time.perf_counter() - t0
+    rec: Dict[str, Any] = {
+        "cell": idx,
+        "workload": cell.workload.name,
+        **cell.workload.to_dict(),
+        "policy": cell.policy,
+        "scenario": cell.scenario,
+        "scenario_applied": applied,
+        "max_stretch": r.max_stretch,
+        "mean_stretch": r.mean_stretch,
+        "makespan": r.makespan,
+        "underutilization": r.underutilization,
+        "n_pmtn": r.n_pmtn,
+        "n_mig": r.n_mig,
+        "pmtn_per_job": r.pmtn_per_job,
+        "mig_per_job": r.mig_per_job,
+        "bytes_moved_gb": r.bytes_moved_gb,
+        "bandwidth_gbps": r.bandwidth_gbps,
+        "events": r.events,
+        "hit_max_events": r.hit_max_events,
+        "wall_s": wall,
+    }
+    if bound is not None:
+        rec["bound"] = bound
+        rec["degradation"] = r.max_stretch / bound if bound > 0 else np.inf
+    return rec
+
+
+# --------------------------------------------------------------------------- #
+# driver side                                                                  #
+# --------------------------------------------------------------------------- #
+def _pool_context() -> mp.context.BaseContext:
+    """Pick a start method: fork is fastest, but forking a process with an
+    initialized (multithreaded) JAX runtime can deadlock the children, so
+    prefer forkserver/spawn once jax is loaded.  Those methods re-import
+    ``__main__`` in the worker, which breaks for stdin/REPL parents — in
+    that corner fall back to fork anyway."""
+    methods = mp.get_all_start_methods()
+    if "fork" in methods and "jax" not in sys.modules:
+        return mp.get_context("fork")
+    main = sys.modules.get("__main__")
+    main_file = getattr(main, "__file__", None)
+    main_importable = (
+        main_file is None
+        or os.path.exists(main_file)
+        or getattr(main, "__spec__", None) is not None
+    )
+    if main_importable:
+        for method in ("forkserver", "spawn"):
+            if method in methods:
+                return mp.get_context(method)
+    return mp.get_context("fork" if "fork" in methods else "spawn")
+
+
+def run_grid(
+    cells: Sequence[Cell],
+    n_workers: int = 1,
+    chunksize: Optional[int] = None,
+    compute_bound: bool = False,
+    json_path: Optional[str] = None,
+) -> SweepResult:
+    """Evaluate every cell, fanning across ``n_workers`` processes.
+
+    ``n_workers <= 1`` runs serially in-process (deterministic, easiest to
+    debug); otherwise a process pool consumes the cell list in chunks of
+    ``chunksize`` (default: spread cells ~4 chunks per worker so stragglers
+    rebalance).  Records come back in grid order regardless of scheduling.
+    With ``compute_bound``, each record also carries the Theorem-1 lower
+    bound of its (scenario-transformed) trace and the achieved
+    ``degradation`` from it.  ``json_path`` additionally writes the artifact.
+
+    Note: when jax is loaded the pool uses the forkserver start method (see
+    ``_pool_context``), which re-imports ``__main__`` — scripts calling this
+    with ``n_workers > 1`` need the usual ``if __name__ == "__main__"`` guard.
+    """
+    tasks = [(i, c, compute_bound) for i, c in enumerate(cells)]
+    t0 = time.perf_counter()
+    if n_workers <= 1 or len(tasks) <= 1:
+        records = [_run_cell(t) for t in tasks]
+        n_workers = 1
+    else:
+        if chunksize is None:
+            chunksize = max(1, len(tasks) // (4 * n_workers))
+        with _pool_context().Pool(processes=n_workers) as pool:
+            records = list(pool.imap_unordered(_run_cell, tasks,
+                                               chunksize=chunksize))
+    records.sort(key=lambda r: r["cell"])
+    res = SweepResult(records=records, wall_s=time.perf_counter() - t0,
+                      n_workers=n_workers)
+    if json_path is not None:
+        res.save_json(json_path)
+    return res

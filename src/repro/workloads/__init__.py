@@ -1,10 +1,13 @@
-"""repro.workloads — HPC workload generation and trace handling (paper §5.3)."""
+"""repro.workloads — HPC workload generation and trace handling (paper §5.3),
+plus the declarative seeded-generator registry used by sweep cells."""
 from .lublin import lublin_trace, scale_to_load, offered_load
 from .hpc2n import parse_swf, hpc2n_preprocess, hpc2n_like_trace
 from .jobgen import tpu_job_types, tpu_trace
+from .registry import WorkloadSpec, make_trace
 
 __all__ = [
     "lublin_trace", "scale_to_load", "offered_load",
     "parse_swf", "hpc2n_preprocess", "hpc2n_like_trace",
     "tpu_job_types", "tpu_trace",
+    "WorkloadSpec", "make_trace",
 ]

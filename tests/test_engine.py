@@ -1,0 +1,221 @@
+"""Unified-engine tests: wrapper equivalence, transactional migration,
+max_events bounding, and batch/DFRS behaviour through the one event loop.
+
+Unlike test_simulator.py these tests do not need hypothesis, so they run
+even on minimal installs — they carry the core engine invariants.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.bound import max_stretch_lower_bound
+from repro.core.job import JobSpec
+from repro.core.state import S_PENDING
+from repro.sched.batch import batch_schedule
+from repro.sched.cluster import ClusterEvent
+from repro.sched.engine import Engine, SimParams
+from repro.sched.simulator import DFRSSimulator, simulate
+from repro.workloads.lublin import lublin_trace
+
+
+def mini_trace(n=40, nodes=16, seed=0):
+    return lublin_trace(n_jobs=n, n_nodes=nodes, seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# equivalence: every public entry point is the same engine                      #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", [
+    "GreedyP */OPT=MIN",
+    "GreedyPM */per/OPT=MIN/MINVT=600",
+    "/per/OPT=MIN",
+])
+def test_simulate_equals_engine_on_seeded_lublin(policy):
+    """Old simulate() front-end vs direct Engine: identical completions and
+    stretch metrics (the refactor's bit-for-bit contract)."""
+    specs = mini_trace()
+    params = SimParams(n_nodes=16)
+    a = simulate(specs, policy, params)
+    b = Engine(specs, policy, SimParams(n_nodes=16)).run()
+    c = DFRSSimulator(specs, policy, SimParams(n_nodes=16)).run()
+    assert a.completions == b.completions == c.completions
+    assert a.stretches == b.stretches == c.stretches
+    assert a.max_stretch == b.max_stretch == c.max_stretch
+    assert (a.n_pmtn, a.n_mig) == (b.n_pmtn, b.n_mig) == (c.n_pmtn, c.n_mig)
+
+
+@pytest.mark.parametrize("algo", ["FCFS", "EASY"])
+def test_batch_entrypoints_agree(algo):
+    specs = mini_trace(n=30)
+    a = batch_schedule(specs, algo, SimParams(n_nodes=16))
+    b = simulate(specs, algo, SimParams(n_nodes=16))
+    c = Engine(specs, algo, SimParams(n_nodes=16)).run()
+    assert a.completions == b.completions == c.completions
+    assert a.policy == algo
+
+
+def test_dfrs_simulator_rejects_batch():
+    with pytest.raises(ValueError):
+        DFRSSimulator(mini_trace(n=5), "FCFS")
+    with pytest.raises(ValueError):
+        batch_schedule(mini_trace(n=5), "GreedyP */OPT=MIN")
+
+
+# --------------------------------------------------------------------------- #
+# conservation / fluid-model invariants (engine-native, no hypothesis)          #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", [
+    "GreedyP */OPT=MIN",
+    "MCB8/per/OPT=MIN/MINVT=600",
+    "/stretch-per/OPT=MAX",
+    "FCFS",
+    "EASY",
+])
+def test_all_jobs_complete_and_bound_holds(policy):
+    specs = mini_trace()
+    r = simulate(specs, policy, SimParams(n_nodes=16))
+    assert set(r.completions) == {s.jid for s in specs}
+    lb = max_stretch_lower_bound(specs, 16)
+    assert r.max_stretch >= lb - 1e-6
+    for s in specs:
+        assert r.completions[s.jid] >= s.release + s.proc_time - 1e-6
+    assert r.underutilization >= -1e-6
+
+
+def test_single_job_runs_dedicated():
+    s = JobSpec(jid=0, release=0.0, proc_time=1000.0, n_tasks=4,
+                cpu_need=1.0, mem_req=0.5)
+    r = simulate([s], "GreedyP */OPT=MIN", SimParams(n_nodes=8))
+    assert r.completions[0] == pytest.approx(1000.0)
+    assert r.max_stretch == pytest.approx(1.0)
+    assert r.n_pmtn == 0 and r.n_mig == 0
+
+
+def test_cpu_oversubscription_slows_proportionally():
+    specs = [JobSpec(jid=i, release=0.0, proc_time=100.0, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.4) for i in range(2)]
+    r = simulate(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=1))
+    for jid in (0, 1):
+        assert r.completions[jid] == pytest.approx(200.0)
+
+
+def test_rescheduling_penalty_applied_on_resume():
+    p = SimParams(n_nodes=1, penalty=300.0)
+    long_job = JobSpec(jid=0, release=0.0, proc_time=5000.0, n_tasks=1,
+                       cpu_need=1.0, mem_req=0.8)
+    short = JobSpec(jid=1, release=100.0, proc_time=50.0, n_tasks=1,
+                    cpu_need=1.0, mem_req=0.8)
+    r = simulate([long_job, short], "GreedyP */OPT=MIN", p)
+    assert r.completions[0] >= 5000.0 + 50.0 + 300.0 - 1e-6
+    assert r.n_pmtn >= 1
+
+
+def test_fcfs_order_and_exclusivity():
+    specs = [
+        JobSpec(jid=0, release=0.0, proc_time=100.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),
+        JobSpec(jid=1, release=1.0, proc_time=10.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),
+    ]
+    r = batch_schedule(specs, "FCFS", SimParams(n_nodes=2))
+    assert r.completions[0] == pytest.approx(100.0)
+    assert r.completions[1] == pytest.approx(110.0)   # waits for both nodes
+
+
+def test_easy_backfills_small_jobs():
+    specs = [
+        JobSpec(jid=0, release=0.0, proc_time=100.0, n_tasks=2, cpu_need=1.0, mem_req=0.5),
+        JobSpec(jid=1, release=1.0, proc_time=50.0, n_tasks=3, cpu_need=1.0, mem_req=0.5),
+        JobSpec(jid=2, release=2.0, proc_time=20.0, n_tasks=1, cpu_need=1.0, mem_req=0.5),
+    ]
+    fcfs = batch_schedule(specs, "FCFS", SimParams(n_nodes=3))
+    easy = batch_schedule(specs, "EASY", SimParams(n_nodes=3))
+    assert easy.completions[2] < fcfs.completions[2]   # backfilled earlier
+    assert easy.completions[1] <= fcfs.completions[1] + 1e-9
+
+
+def test_node_failure_forces_preemption_and_recovery():
+    specs = [JobSpec(jid=0, release=0.0, proc_time=1000.0, n_tasks=2,
+                     cpu_need=1.0, mem_req=0.5)]
+    ev = [ClusterEvent(time=100.0, kind="fail", nodes=(0,)),
+          ClusterEvent(time=400.0, kind="join", nodes=(0,))]
+    r = simulate(specs, "GreedyP */per/OPT=MIN", SimParams(n_nodes=2),
+                 cluster_events=ev)
+    assert r.completions[0] >= 1000.0 + 300.0 - 1e-6
+    assert r.n_pmtn >= 1
+
+
+# --------------------------------------------------------------------------- #
+# transactional multi-job migration                                             #
+# --------------------------------------------------------------------------- #
+def _engine_with_running_pair():
+    """Two running mem-0.6 jobs on a 2-node cluster, one node each."""
+    specs = [JobSpec(jid=i, release=0.0, proc_time=100.0, n_tasks=1,
+                     cpu_need=1.0, mem_req=0.6) for i in range(2)]
+    e = Engine(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=2, penalty=300.0))
+    st = e.state
+    st.status[:] = S_PENDING
+    e.start(st.views[0], [0])
+    e.start(st.views[1], [1])
+    return e
+
+
+def test_migrate_many_feasible_only_as_a_set():
+    """Regression: swapping two mem-0.6 jobs between two nodes is only
+    feasible transactionally — placing either job on its target before the
+    other is removed would oversubscribe node memory.  All removals must
+    happen before any placement."""
+    e = _engine_with_running_pair()
+    v0, v1 = e.state.views[0], e.state.views[1]
+    e.migrate_many([(v0, [1]), (v1, [0])])     # must not raise
+    assert v0.mapping == [1] and v1.mapping == [0]
+    assert e.n_mig == 2
+    # both paid the rescheduling penalty
+    assert v0.penalty_until == pytest.approx(e.state.now + 300.0)
+    assert v1.penalty_until == pytest.approx(e.state.now + 300.0)
+    # pool is consistent: one 0.6 image per node
+    np.testing.assert_allclose(e.state.pool.mem_free, [0.4, 0.4])
+    # a non-transactional (place-before-remove) apply would have raised:
+    with pytest.raises(RuntimeError):
+        e.state.pool.place(v0.spec, [0])       # oversubscribes node 0
+    e.state.pool.remove(v0.spec, [0])
+
+
+def test_migrate_many_no_move_is_free():
+    """A 'migration' to the same node multiset costs nothing."""
+    e = _engine_with_running_pair()
+    v0 = e.state.views[0]
+    e.migrate_many([(v0, [0])])
+    assert e.n_mig == 0 and e.bytes_moved_gb == pytest.approx(0.0)
+    assert v0.penalty_until == -math.inf
+
+
+# --------------------------------------------------------------------------- #
+# max_events bounding                                                           #
+# --------------------------------------------------------------------------- #
+def test_max_events_raises_with_clear_error():
+    specs = mini_trace(n=20)
+    with pytest.raises(RuntimeError, match="max_events=5"):
+        simulate(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=16, max_events=5))
+    with pytest.raises(RuntimeError, match="event budget"):
+        simulate(specs, "FCFS", SimParams(n_nodes=16, max_events=5))
+
+
+def test_max_events_truncate_surfaces_cap_in_result():
+    specs = mini_trace(n=20)
+    p = SimParams(n_nodes=16, max_events=5, on_max_events="truncate")
+    r = simulate(specs, "GreedyP */OPT=MIN", p)
+    assert r.hit_max_events
+    assert r.events == 5
+    # partial: some jobs cannot have completed in 5 events
+    assert len(r.completions) < len(specs)
+    # untruncated runs are flagged healthy
+    full = simulate(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=16))
+    assert not full.hit_max_events
+    assert set(full.completions) == {s.jid for s in specs}
+
+
+def test_sim_params_validation():
+    with pytest.raises(ValueError):
+        SimParams(max_events=0)
+    with pytest.raises(ValueError):
+        SimParams(on_max_events="explode")

@@ -1,6 +1,9 @@
 """Core scheduler unit + property tests (greedy, MCB8, yields, policies)."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.greedy import greedy_p, greedy_place, greedy_pm

@@ -14,10 +14,17 @@ from repro.launch.shardings import make_plan
 from repro.models import backbone
 
 
+def _abstract_mesh(sizes, names):
+    try:                                   # jax >= 0.5: (axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:                      # jax 0.4.x: ((name, size), ...) pairs
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
 def amesh(multi=False):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+        return _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return _abstract_mesh((16, 16), ("data", "model"))
 
 
 def test_mesh_axes_helpers():

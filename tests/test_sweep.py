@@ -1,0 +1,162 @@
+"""Sweep subsystem + scenario library + workload registry tests.
+
+Includes the acceptance grid: a 16-cell (2 workloads × 4 policies × 2
+scenarios) sweep through run_grid with n_workers=4, producing a JSON
+artifact, with parallel results identical to the serial run.
+"""
+import json
+
+import pytest
+
+from repro.sched.engine import SimParams
+from repro.sched.scenarios import apply_scenario, list_scenarios
+from repro.sched.sweep import Cell, grid, run_grid
+from repro.workloads.lublin import lublin_trace
+from repro.workloads.registry import WorkloadSpec, make_trace
+
+POLICIES = ["FCFS", "EASY", "GreedyP */OPT=MIN",
+            "GreedyPM */per/OPT=MIN/MINVT=600"]
+
+
+def small_workloads():
+    return [WorkloadSpec("lublin", n_jobs=40, n_nodes=16, seed=0),
+            WorkloadSpec("hpc2n", n_jobs=40, n_nodes=128, seed=1)]
+
+
+# --------------------------------------------------------------------------- #
+# workload registry                                                             #
+# --------------------------------------------------------------------------- #
+def test_workload_spec_roundtrip_and_validation():
+    w = WorkloadSpec("lublin", n_jobs=10, n_nodes=8, seed=3, load=0.5)
+    assert w.to_dict()["load"] == 0.5
+    assert "lublin" in w.name and "@0.5" in w.name
+    with pytest.raises(ValueError):
+        WorkloadSpec("marsaglia")
+    with pytest.raises(ValueError):
+        WorkloadSpec("hpc2n", load=0.5)
+
+
+def test_make_trace_deterministic_and_memoized():
+    w = WorkloadSpec("lublin", n_jobs=20, n_nodes=16, seed=7)
+    a, b = make_trace(w), make_trace(w)
+    assert a == b
+    assert a is not b            # callers get fresh lists, not the cache
+    assert [s.jid for s in a] == list(range(20))
+
+
+def test_make_trace_scaled_load():
+    from repro.workloads.lublin import offered_load
+    w = WorkloadSpec("lublin", n_jobs=60, n_nodes=16, seed=0, load=0.5)
+    specs = make_trace(w)
+    assert offered_load(specs, 16) == pytest.approx(0.5, rel=1e-6)
+
+
+def test_hpc2n_drops_jobs_wider_than_cluster():
+    w = WorkloadSpec("hpc2n", n_jobs=80, n_nodes=32, seed=0)
+    specs = make_trace(w)
+    assert specs and all(s.n_tasks <= 32 for s in specs)
+
+
+# --------------------------------------------------------------------------- #
+# scenario library                                                              #
+# --------------------------------------------------------------------------- #
+def test_builtin_scenarios_present():
+    names = list_scenarios()
+    for expected in ("baseline", "rack_failure", "rolling_failures",
+                     "elastic", "arrival_burst", "mem_pressure"):
+        assert expected in names
+
+
+@pytest.mark.parametrize("name", ["baseline", "rack_failure",
+                                  "rolling_failures", "elastic",
+                                  "arrival_burst", "mem_pressure"])
+def test_scenarios_deterministic_and_wellformed(name):
+    base = lublin_trace(n_jobs=30, n_nodes=16, seed=1)
+    s1, e1 = apply_scenario(name, base, 16, seed=5)
+    s2, e2 = apply_scenario(name, base, 16, seed=5)
+    assert s1 == s2 and e1 == e2              # deterministic given the seed
+    assert len(s1) == len(base)               # scenarios never drop jobs
+    for ev in e1:
+        assert ev.kind in ("fail", "join")
+        assert all(0 <= n < 16 for n in ev.nodes)
+    for s in s1:
+        assert 0.0 < s.mem_req <= 1.0
+
+
+def test_arrival_burst_compresses_midspan():
+    base = lublin_trace(n_jobs=200, n_nodes=16, seed=2)
+    burst, _ = apply_scenario("arrival_burst", base, 16, seed=0)
+    span = lambda xs: max(s.release for s in xs) - min(s.release for s in xs)
+    assert span(burst) <= span(base)
+    # total work untouched — only releases move
+    assert sum(s.total_work for s in burst) == pytest.approx(
+        sum(s.total_work for s in base))
+
+
+def test_unknown_scenario_raises():
+    with pytest.raises(KeyError):
+        apply_scenario("meteor_strike", [], 4)
+
+
+def test_scenario_cells_complete_under_failures():
+    """A DFRS policy absorbs every built-in scenario end to end."""
+    w = WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=3)
+    cells = grid([w], ["GreedyPM */per/OPT=MIN/MINVT=600"], list_scenarios())
+    res = run_grid(cells, n_workers=1)
+    assert res.n_cells == len(list_scenarios())
+    for rec in res.records:
+        assert rec["makespan"] > 0
+        assert not rec["hit_max_events"]
+
+
+# --------------------------------------------------------------------------- #
+# the acceptance grid: 16 cells, 4 workers, JSON artifact                       #
+# --------------------------------------------------------------------------- #
+def test_16_cell_sweep_parallel_matches_serial(tmp_path):
+    cells = grid(small_workloads(), POLICIES, ["baseline", "rack_failure"])
+    assert len(cells) == 16
+    path = str(tmp_path / "sweep.json")
+    par = run_grid(cells, n_workers=4, compute_bound=True, json_path=path)
+    ser = run_grid(cells, n_workers=1, compute_bound=True)
+    assert par.n_cells == ser.n_cells == 16
+    for a, b in zip(ser.records, par.records):
+        for k in a:
+            if k == "wall_s":
+                continue        # timing differs; results must not
+            assert a[k] == b[k], (k, a[k], b[k])
+    # artifact shape
+    art = json.loads(open(path).read())
+    assert art["schema"] == "repro.sweep/v1"
+    assert art["n_cells"] == 16 and len(art["records"]) == 16
+    assert art["cells_per_sec"] > 0
+    for rec in art["records"]:
+        for key in ("workload", "policy", "scenario", "scenario_applied",
+                    "max_stretch", "mean_stretch", "makespan", "bound",
+                    "degradation"):
+            assert key in rec
+        assert rec["degradation"] >= 0.99   # never beats the lower bound
+        # batch baselines drop ClusterEvents: flagged, not silently claimed
+        is_batch = rec["policy"] in ("FCFS", "EASY")
+        expect = not (is_batch and rec["scenario"] == "rack_failure")
+        assert rec["scenario_applied"] == expect
+
+
+def test_sweep_result_helpers():
+    cells = grid(small_workloads()[:1], POLICIES[:2])
+    res = run_grid(cells, n_workers=1)
+    assert res.values("max_stretch", policy="FCFS").shape == (1,)
+    summ = res.summary(by="policy")
+    assert set(summ) == {"FCFS", "EASY"}
+    assert all("mean_max_stretch" in v for v in summ.values())
+
+
+def test_cell_params_template_propagates():
+    """A params template reaches the engine (period halved here), while
+    n_nodes always comes from the workload spec."""
+    w = WorkloadSpec("lublin", n_jobs=25, n_nodes=16, seed=0)
+    fast = run_grid([Cell(w, "/per/OPT=MIN",
+                          params=SimParams(period=300.0))], n_workers=1)
+    slow = run_grid([Cell(w, "/per/OPT=MIN",
+                          params=SimParams(period=6000.0))], n_workers=1)
+    # more frequent MCB8 passes do strictly more events
+    assert fast.records[0]["events"] > slow.records[0]["events"]
