@@ -2,11 +2,12 @@
 
 Scaled-down but structurally faithful reproduction of §5: three trace sets
 (HPC2N-like real-world, unscaled Lublin synthetic, load-scaled synthetic)
-available two ways — declaratively as sweep workloads (``workload_specs``,
-used by the run_grid-based table2/fig1 benches) and as memoized ``Bench``
-traces with a per-process result cache (used by tables 3/4 and figure 4;
-sweep records don't feed this cache, so mixing both paths in one run
-re-simulates shared cells).
+expressed declaratively as sweep workloads (``workload_specs``).  All paper
+benchmarks draw their simulation cells from one shared
+:class:`Bench` record cache built on the ``run_grid`` sweep API: each
+(workload × policy × period × scenario) cell is simulated at most once per
+``benchmarks.run`` process no matter how many tables/figures consume it,
+and every miss batch fans out across worker processes.
 
 Scale knobs: the paper uses 100-182 traces x 1000 jobs x 128 nodes; the
 default here is QUICK (fewer/smaller traces) so ``python -m benchmarks.run``
@@ -16,16 +17,11 @@ from __future__ import annotations
 
 import csv
 import os
-import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-import numpy as np
-
-from repro.core.bound import max_stretch_lower_bound
-from repro.sched.simulator import SimParams, SimResult, simulate
-from repro.workloads.hpc2n import hpc2n_like_trace
-from repro.workloads.lublin import lublin_trace, scale_to_load
+from repro.sched.engine import SimParams
+from repro.sched.sweep import Cell, record_matches, run_grid
 from repro.workloads.registry import WorkloadSpec
 
 RESULTS_DIR = "experiments/results"
@@ -94,74 +90,61 @@ def workload_specs(kind: str, scale: Scale) -> List[WorkloadSpec]:
 
 def records_for(records: Sequence[dict], kind: str, **kv) -> List[dict]:
     """Filter sweep records down to one of the trace sets of §5.3."""
-    from repro.sched.sweep import record_matches
-
     sel = {"real": lambda r: r["kind"] == "hpc2n",
            "unscaled": lambda r: r["kind"] == "lublin" and r["load"] is None,
            "scaled": lambda r: r["kind"] == "lublin" and r["load"] is not None}[kind]
     return [r for r in records if sel(r) and record_matches(r, kv)]
 
 
-@dataclass
-class Trace:
-    name: str            # set name: real | unscaled | scaled
-    seed: int
-    load: Optional[float]
-    specs: list
-    n_nodes: int
-    bound: float = 0.0
+#: a cell's cache identity inside one benchmark process
+CellKey = Tuple[WorkloadSpec, str, float, str]
 
 
 class Bench:
-    """Trace registry + memoized simulation."""
+    """Shared sweep-record cache across all paper benchmarks.
+
+    ``sweep`` returns one flat record per requested
+    (workload × policy × period × scenario) cell; only cells not yet in the
+    cache are simulated, in a single ``run_grid`` fan-out across worker
+    processes.  Tables 2/3/4 and figures 1/3/4 overlap heavily on the
+    default-period grid — with this cache a full ``benchmarks.run`` pays for
+    each shared cell exactly once (the pre-sweep ``Bench`` re-simulated them
+    once per table because its memo was keyed per serial code path).
+    """
 
     def __init__(self, scale: Scale):
         self.scale = scale
-        self._traces: Dict[str, List[Trace]] = {}
-        self._cache: Dict[Tuple[str, float, str], SimResult] = {}
+        self._records: Dict[CellKey, Dict[str, Any]] = {}
+        self._workloads: Dict[str, List[WorkloadSpec]] = {}
 
-    # ---- trace sets -----------------------------------------------------
-    def traces(self, kind: str) -> List[Trace]:
-        if kind in self._traces:
-            return self._traces[kind]
-        s = self.scale
-        out: List[Trace] = []
-        if kind == "real":
-            for seed in range(s.n_traces):
-                specs = hpc2n_like_trace(n_jobs=s.n_jobs, seed=seed)
-                out.append(Trace("real", seed, None, specs, 128))
-        elif kind == "unscaled":
-            for seed in range(s.n_traces):
-                specs = lublin_trace(n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=seed)
-                out.append(Trace("unscaled", seed, None, specs, s.n_nodes))
-        elif kind == "scaled":
-            for seed in range(s.n_traces):
-                base = lublin_trace(n_jobs=s.n_jobs, n_nodes=s.n_nodes, seed=seed)
-                for load in s.loads:
-                    specs = scale_to_load(base, s.n_nodes, load)
-                    out.append(Trace("scaled", seed, load, specs, s.n_nodes))
-        else:
-            raise KeyError(kind)
-        for tr in out:
-            tr.bound = max_stretch_lower_bound(tr.specs, tr.n_nodes)
-        self._traces[kind] = out
-        return out
+    def workloads(self, kind: str) -> List[WorkloadSpec]:
+        if kind not in self._workloads:
+            self._workloads[kind] = workload_specs(kind, self.scale)
+        return self._workloads[kind]
 
-    # ---- simulation -----------------------------------------------------
-    def run(self, tr: Trace, policy: str,
-            period: float = 600.0) -> SimResult:
-        key = (f"{tr.name}:{tr.seed}:{tr.load}", period, policy)
-        if key not in self._cache:
-            params = SimParams(n_nodes=tr.n_nodes, period=period)
-            self._cache[key] = simulate(tr.specs, policy, params)
-        return self._cache[key]
-
-    def degradations(self, kind: str, policy: str,
-                     period: float = 600.0) -> np.ndarray:
-        return np.array([
-            self.run(tr, policy, period).max_stretch / tr.bound
-            for tr in self.traces(kind)
-        ])
+    def sweep(
+        self,
+        workloads: Iterable[WorkloadSpec],
+        policies: Iterable[str],
+        periods: Iterable[float] = (600.0,),
+        scenarios: Iterable[str] = ("baseline",),
+        n_workers: Optional[int] = None,
+    ) -> List[Dict[str, Any]]:
+        """Records for the full cross product, simulating only cache misses."""
+        want: List[CellKey] = [
+            (w, p, float(per), sc)
+            for per in periods for w in workloads
+            for p in policies for sc in scenarios
+        ]
+        missing = [k for k in dict.fromkeys(want) if k not in self._records]
+        if missing:
+            cells = [Cell(w, p, sc, params=SimParams(period=per))
+                     for (w, p, per, sc) in missing]
+            res = run_grid(cells, n_workers=n_workers or N_WORKERS,
+                           compute_bound=True)
+            for key, rec in zip(missing, res.records):
+                self._records[key] = rec
+        return [self._records[k] for k in want]
 
 
 def write_csv(name: str, header: Sequence[str], rows: Sequence[Sequence]) -> str:

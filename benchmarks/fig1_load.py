@@ -1,17 +1,17 @@
 """Figure 1: average degradation from bound vs offered load.
 
-One sweep over the (load × seed × policy) grid; each record already carries
-the Theorem-1 bound of its scaled trace, so a row of the figure is a mean
-over the matching records.
+One sweep over the (load × seed × policy) grid through the shared
+``Bench.sweep`` cache; each record already carries the Theorem-1 bound of
+its scaled trace, so a row of the figure is a mean over matching records.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.sched.sweep import grid, run_grid
+from repro.sched.sweep import record_matches
 from repro.workloads.registry import WorkloadSpec
 
-from .common import Bench, N_WORKERS, fmt_table, write_csv
+from .common import Bench, fmt_table, write_csv
 
 POLICIES = [
     "EASY",
@@ -29,22 +29,21 @@ def run(bench: Bench, verbose: bool = True):
                      seed=seed, load=load)
         for load in s.fig_loads for seed in range(s.n_traces)
     ]
-    res = run_grid(grid(workloads, POLICIES),
-                   n_workers=N_WORKERS, compute_bound=True)
+    records = bench.sweep(workloads, POLICIES)
 
     rows = []
     for load in s.fig_loads:
         row = [load]
         for policy in POLICIES:
-            ds = res.values("degradation", policy=policy, load=load)
+            ds = [r["degradation"] for r in records
+                  if record_matches(r, dict(policy=policy, load=load))]
             row.append(round(float(np.mean(ds)), 1))
         rows.append(row)
     header = ["load"] + POLICIES
     write_csv("fig1_degradation_vs_load.csv", header, rows)
     if verbose:
         print(fmt_table(header, rows, "Figure 1: degradation vs load"))
-        print(f"  [{res.n_cells} cells in {res.wall_s:.1f}s, "
-              f"{res.cells_per_sec:.2f} cells/s, {res.n_workers} workers]")
+        print(f"  [{len(records)} cells]")
     hi = rows[-1]
     claims = {
         "best policy beats EASY >=10x at high load":

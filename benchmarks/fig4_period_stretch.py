@@ -1,19 +1,29 @@
 """Figure 4: max-stretch degradation vs MCB8 period (robustness claim:
-a 20x period increase costs < ~3x stretch while underutilization improves)."""
+a 20x period increase costs < ~3x stretch while underutilization improves).
+
+Cells come from the shared ``Bench.sweep`` cache; the scaled-trace period
+sweep is the same cell set figure 3 uses, so it simulates nothing new when
+run after table 4.
+"""
 from __future__ import annotations
 
 import numpy as np
 
-from .common import BEST_POLICIES, Bench, fmt_table, write_csv
+from .common import BEST_POLICIES, Bench, fmt_table, records_for, write_csv
 
 
 def run(bench: Bench, verbose: bool = True):
     pol = BEST_POLICIES[1]
+    workloads = (bench.workloads("real") + bench.workloads("unscaled")
+                 + bench.workloads("scaled"))
+    records = bench.sweep(workloads, [pol], periods=bench.scale.periods)
     rows = []
     for period in bench.scale.periods:
         row = [int(period)]
         for kind in ("real", "unscaled", "scaled"):
-            d = bench.degradations(kind, pol, period=period)
+            d = np.array([r["degradation"]
+                          for r in records_for(records, kind,
+                                               period=period)])
             row.append(round(float(d.mean()), 1))
         rows.append(row)
     header = ["period_s", "real", "unscaled", "scaled"]

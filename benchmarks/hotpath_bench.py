@@ -1,0 +1,232 @@
+"""Allocation hot-path benchmark → machine-readable BENCH_hotpath.json.
+
+Profiles the vectorized allocation/placement microkernels (§4.6 maxmin /
+avg yields, §4.2 greedy placement, §4.3 MCB8 packing) against the
+pre-vectorization reference implementations on a deterministic fixture, and
+times end-to-end ``GreedyPM */per/OPT=MIN/MINVT=600`` simulation cells —
+the migration-heavy cells that dominated ``BENCH_sweep.json``.  Extends the
+perf trajectory started by the sweep bench with per-kernel numbers.
+
+CLI (used by the CI perf-smoke job)::
+
+    PYTHONPATH=src python -m benchmarks.hotpath_bench --jobs 120 \
+        --check-baseline benchmarks/hotpath_baseline.json
+
+``--check-baseline`` exits non-zero when any end-to-end GreedyPM cell is
+more than ``--max-regression`` (default 2.0) times slower than the
+checked-in baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import sys
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import alloc_reference
+from repro.core.alloc_kernels import reference_kernels
+from repro.core.greedy import greedy_place
+from repro.core.job import JobState, NodePool
+from repro.core.mcb8 import mcb8
+from repro.core.yield_alloc import avg_yields, maxmin_yields
+from repro.sched.engine import Engine, SimParams
+from repro.sched.scenarios import apply_scenario
+from repro.workloads.registry import WorkloadSpec, make_trace
+
+from .common import Bench, fmt_table
+
+BENCH_JSON = "BENCH_hotpath.json"
+GREEDYPM = "GreedyPM */per/OPT=MIN/MINVT=600"
+
+
+# --------------------------------------------------------------------------- #
+# fixtures                                                                     #
+# --------------------------------------------------------------------------- #
+def _alloc_fixture(n_jobs: int, n_nodes: int, seed: int = 0):
+    """A saturated running set: greedy-place a Lublin job mix until full."""
+    trace = make_trace(WorkloadSpec("lublin", n_jobs=n_jobs,
+                                    n_nodes=n_nodes, seed=seed))
+    pool = NodePool(n_nodes)
+    specs, maps = [], []
+    for s in trace:
+        m = greedy_place(pool, s)
+        if m is not None:
+            specs.append(s)
+            maps.append(m)
+    return specs, maps, n_nodes
+
+
+def _mcb8_fixture(n_jobs: int, n_nodes: int, seed: int = 0):
+    trace = make_trace(WorkloadSpec("lublin", n_jobs=n_jobs,
+                                    n_nodes=n_nodes, seed=seed))
+    rng = np.random.default_rng(seed)
+    states = []
+    for s in trace:
+        js = JobState(spec=s)
+        js.vt = float(rng.uniform(1.0, 1000.0))
+        states.append(js)
+    return states, n_nodes
+
+
+def _time(fn: Callable[[], object], repeats: int) -> float:
+    """Mean seconds per call over ``repeats`` calls (after one warm-up)."""
+    fn()
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fn()
+    return (time.perf_counter() - t0) / repeats
+
+
+# --------------------------------------------------------------------------- #
+# bench                                                                        #
+# --------------------------------------------------------------------------- #
+def run(bench: Bench, verbose: bool = True,
+        n_jobs: Optional[int] = None, repeats: int = 5) -> dict:
+    n_jobs = n_jobs or bench.scale.n_jobs
+    n_nodes = bench.scale.n_nodes
+
+    specs, maps, nn = _alloc_fixture(n_jobs, n_nodes)
+    states, mn = _mcb8_fixture(n_jobs, 2 * n_nodes)
+    place_trace = make_trace(WorkloadSpec("lublin", n_jobs=n_jobs,
+                                          n_nodes=n_nodes, seed=1))
+
+    def place_all() -> None:
+        pool = NodePool(n_nodes)
+        for s in place_trace:
+            greedy_place(pool, s)
+
+    def place_all_ref() -> None:
+        pool = NodePool(n_nodes)
+        for s in place_trace:
+            alloc_reference.greedy_place(pool, s)
+
+    kernels: Dict[str, Dict[str, float]] = {}
+
+    def kernel(name: str, fast: Callable[[], object],
+               ref: Callable[[], object]) -> None:
+        t_fast = _time(fast, repeats)
+        t_ref = _time(ref, repeats)
+        kernels[name] = {
+            "mean_us": round(t_fast * 1e6, 1),
+            "ref_mean_us": round(t_ref * 1e6, 1),
+            "speedup": round(t_ref / max(t_fast, 1e-12), 2),
+        }
+
+    kernel("maxmin_yields",
+           lambda: maxmin_yields(specs, maps, nn),
+           lambda: alloc_reference.maxmin_yields(specs, maps, nn))
+    kernel("avg_yields",
+           lambda: avg_yields(specs, maps, nn),
+           lambda: alloc_reference.avg_yields(specs, maps, nn))
+    kernel("greedy_place_trace", place_all, place_all_ref)
+
+    def mcb8_ref() -> None:
+        with reference_kernels():
+            mcb8(states, mn, now=2000.0)
+
+    kernel("mcb8", lambda: mcb8(states, mn, now=2000.0), mcb8_ref)
+
+    # ---- end-to-end GreedyPM cells -------------------------------------- #
+    e2e: Dict[str, float] = {}
+    cells = [
+        (WorkloadSpec("lublin", n_jobs=n_jobs, n_nodes=n_nodes, seed=0),
+         "baseline"),
+        (WorkloadSpec("hpc2n", n_jobs=n_jobs, n_nodes=128, seed=0),
+         "baseline"),
+        (WorkloadSpec("hpc2n", n_jobs=n_jobs, n_nodes=128, seed=0),
+         "rack_failure"),
+    ]
+    for w, scenario in cells:
+        trace = make_trace(w)
+        trace, events = apply_scenario(scenario, trace, w.n_nodes, seed=w.seed)
+        t0 = time.perf_counter()
+        Engine(trace, GREEDYPM, SimParams(n_nodes=w.n_nodes),
+               cluster_events=events).run()
+        e2e[f"{w.name}×{scenario}"] = round(time.perf_counter() - t0, 3)
+
+    payload = {
+        "bench": "hotpath",
+        "config": {"n_jobs": n_jobs, "n_nodes": n_nodes, "repeats": repeats,
+                   "policy": GREEDYPM},
+        "kernels": kernels,
+        "e2e_greedypm_wall_s": e2e,
+        "platform": platform.platform(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    if verbose:
+        rows = [[k, v["mean_us"], v["ref_mean_us"], f'{v["speedup"]}x']
+                for k, v in kernels.items()]
+        print(fmt_table(["kernel", "mean_us", "ref_mean_us", "speedup"],
+                        rows, f"Hot-path microkernels ({n_jobs} jobs)"))
+        for name, wall in e2e.items():
+            print(f"  e2e {name}: {wall:.2f}s")
+        print(f"  -> {BENCH_JSON}")
+    return payload
+
+
+def check_baseline(payload: dict, baseline_path: str,
+                   max_regression: float) -> List[str]:
+    """Names of end-to-end cells slower than ``max_regression``× baseline.
+
+    The gate refuses to pass vacuously: a config mismatch (different
+    ``--jobs`` than the baseline was recorded with) or zero overlapping
+    cell names is itself a failure — otherwise a fixture rename would
+    silently disable the regression check.
+    """
+    with open(baseline_path) as f:
+        base = json.load(f)
+    failures = []
+    if payload["config"]["n_jobs"] != base.get("config", {}).get("n_jobs"):
+        failures.append(
+            f"config mismatch: bench ran with n_jobs="
+            f"{payload['config']['n_jobs']} but baseline was recorded with "
+            f"n_jobs={base.get('config', {}).get('n_jobs')} — rerun with the "
+            f"baseline's --jobs or re-record the baseline")
+    compared = 0
+    for name, wall in payload["e2e_greedypm_wall_s"].items():
+        ref = base.get("e2e_greedypm_wall_s", {}).get(name)
+        if ref is None:
+            continue
+        compared += 1
+        if wall > max_regression * ref:
+            failures.append(f"{name}: {wall:.2f}s > "
+                            f"{max_regression:g}x baseline {ref:.2f}s")
+    if compared == 0:
+        failures.append(
+            f"no e2e cell names overlap with {baseline_path} — the gate "
+            f"compared nothing; re-record the baseline")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="trace size (default: quick-scale n_jobs)")
+    ap.add_argument("--repeats", type=int, default=5)
+    ap.add_argument("--check-baseline", default=None, metavar="JSON",
+                    help="fail if an e2e GreedyPM cell regresses vs this file")
+    ap.add_argument("--max-regression", type=float, default=2.0)
+    args = ap.parse_args()
+
+    from .common import QUICK
+
+    payload = run(Bench(QUICK), n_jobs=args.jobs, repeats=args.repeats)
+    if args.check_baseline:
+        failures = check_baseline(payload, args.check_baseline,
+                                  args.max_regression)
+        if failures:
+            print("PERF REGRESSION:", *failures, sep="\n  ", file=sys.stderr)
+            return 1
+        print(f"perf within {args.max_regression:g}x of "
+              f"{args.check_baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

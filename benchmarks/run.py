@@ -10,8 +10,8 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig1_load, fig4_period_stretch, mcb8_runtime, roofline,
-               sweep_bench, table2_stretch, table3_costs,
+from . import (fig1_load, fig4_period_stretch, hotpath_bench, mcb8_runtime,
+               roofline, sweep_bench, table2_stretch, table3_costs,
                table4_underutilization, tpu_cluster)
 from .common import FULL, QUICK, Bench
 
@@ -24,6 +24,7 @@ BENCHES = {
     "mcb8_runtime": mcb8_runtime.run,
     "roofline": roofline.run,
     "sweep": sweep_bench.run,
+    "hotpath": hotpath_bench.run,
     "tpu_cluster": tpu_cluster.run,
 }
 

@@ -2,33 +2,30 @@
 over the three trace sets (real-world-like, unscaled synthetic, scaled
 synthetic).
 
-Ported onto the sweep subsystem: the whole (trace-set × policy) grid is one
-``run_grid`` fan-out across worker processes, and the table plus the paper
-claims are aggregations over the returned records.
+Runs on the shared ``Bench.sweep`` record cache: the whole
+(trace-set × policy) grid is one ``run_grid`` fan-out across worker
+processes on first touch, and later benchmarks (tables 3/4) reuse the very
+same cells instead of re-simulating them.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.sched.sweep import grid, run_grid
-
-from .common import (Bench, N_WORKERS, TABLE2_POLICIES, fmt_table,
-                     records_for, workload_specs, write_csv)
+from .common import Bench, TABLE2_POLICIES, fmt_table, records_for, write_csv
 
 
 def run(bench: Bench, verbose: bool = True):
     s = bench.scale
-    workloads = (workload_specs("real", s) + workload_specs("unscaled", s)
-                 + workload_specs("scaled", s))
-    res = run_grid(grid(workloads, TABLE2_POLICIES),
-                   n_workers=N_WORKERS, compute_bound=True)
+    workloads = (bench.workloads("real") + bench.workloads("unscaled")
+                 + bench.workloads("scaled"))
+    records = bench.sweep(workloads, TABLE2_POLICIES)
 
     rows = []
     for policy in TABLE2_POLICIES:
         row = [policy]
         for kind in ("real", "unscaled", "scaled"):
             d = np.array([r["degradation"]
-                          for r in records_for(res.records, kind, policy=policy)])
+                          for r in records_for(records, kind, policy=policy)])
             row += [round(float(d.mean()), 1), round(float(d.std()), 1),
                     round(float(d.max()), 1)]
         rows.append(row)
@@ -39,8 +36,7 @@ def run(bench: Bench, verbose: bool = True):
     write_csv("table2_stretch.csv", header, rows)
     if verbose:
         print(fmt_table(header, rows, "Table 2: degradation from bound"))
-        print(f"  [{res.n_cells} cells in {res.wall_s:.1f}s, "
-              f"{res.cells_per_sec:.2f} cells/s, {res.n_workers} workers]")
+        print(f"  [{len(records)} cells]")
 
     # paper-claim checks (qualitative, quick-scale)
     by = {r[0]: r for r in rows}
@@ -54,7 +50,7 @@ def run(bench: Bench, verbose: bool = True):
     hi_load = max(s.loads)
 
     def mean_deg_at_hi(policy):
-        recs = records_for(res.records, "scaled", policy=policy, load=hi_load)
+        recs = records_for(records, "scaled", policy=policy, load=hi_load)
         return float(np.mean([r["degradation"] for r in recs]))
 
     win = "GreedyPM */per/OPT=MIN/MINVT=600"

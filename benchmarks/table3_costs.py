@@ -1,5 +1,10 @@
 """Table 3: preemption/migration costs (bandwidth, events/hour, events/job)
-over scaled traces with load >= 0.7."""
+over scaled traces with load >= 0.7.
+
+The cells are a subset of the table-2 grid; through the shared
+``Bench.sweep`` cache this table costs zero extra simulations when run
+after table 2.
+"""
 from __future__ import annotations
 
 import numpy as np
@@ -8,21 +13,23 @@ from .common import Bench, TABLE2_POLICIES, fmt_table, write_csv
 
 
 def run(bench: Bench, verbose: bool = True):
-    traces = [t for t in bench.traces("scaled") if (t.load or 0) >= 0.7]
-    if not traces:       # quick scale may not include >=0.7; use max load
-        max_load = max(t.load or 0 for t in bench.traces("scaled"))
-        traces = [t for t in bench.traces("scaled") if t.load == max_load]
+    scaled = bench.workloads("scaled")
+    hi = [w for w in scaled if (w.load or 0) >= 0.7]
+    if not hi:        # quick scale may not include >=0.7; use max load
+        max_load = max(w.load or 0 for w in scaled)
+        hi = [w for w in scaled if w.load == max_load]
+    records = bench.sweep(hi, TABLE2_POLICIES)
     rows = []
     for policy in TABLE2_POLICIES:
-        rs = [bench.run(t, policy) for t in traces]
-        bw = [r.bandwidth_gbps for r in rs]
+        rs = [r for r in records if r["policy"] == policy]
+        bw = [r["bandwidth_gbps"] for r in rs]
         rows.append([
             policy,
             round(float(np.mean(bw)), 3), round(float(np.max(bw)), 3),
-            round(float(np.mean([r.pmtn_per_hour for r in rs])), 2),
-            round(float(np.mean([r.mig_per_hour for r in rs])), 2),
-            round(float(np.mean([r.pmtn_per_job for r in rs])), 2),
-            round(float(np.mean([r.mig_per_job for r in rs])), 2),
+            round(float(np.mean([r["pmtn_per_hour"] for r in rs])), 2),
+            round(float(np.mean([r["mig_per_hour"] for r in rs])), 2),
+            round(float(np.mean([r["pmtn_per_job"] for r in rs])), 2),
+            round(float(np.mean([r["mig_per_job"] for r in rs])), 2),
         ])
     header = ["policy", "bw_gbps_avg", "bw_gbps_max",
               "pmtn_per_hour", "mig_per_hour", "pmtn_per_job", "mig_per_job"]

@@ -9,15 +9,21 @@
 All functions are pure with respect to the passed-in ``NodePool`` copies;
 they return placement decisions, the caller (simulator) applies them and
 does penalty/bandwidth accounting.
+
+``greedy_place`` keeps one masked candidate-load array per call and updates
+only the chosen node after each task placement (the reference rebuilt the
+feasibility mask and masked array per task); results are bit-identical —
+the per-node load arithmetic and the argmin tie-breaking are unchanged.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from .job import JobSpec, JobState, NodePool, RUNNING
+from . import alloc_kernels, alloc_reference
+from .job import JobSpec, JobState, NodePool
 
 __all__ = ["greedy_place", "GreedyAdmission", "greedy_p", "greedy_pm"]
 
@@ -26,19 +32,26 @@ def greedy_place(pool: NodePool, spec: JobSpec) -> Optional[List[int]]:
     """Map each task of ``spec`` to the feasible node with the lowest CPU
     load (§4.2), updating ``pool`` in place.  Returns the mapping or None if
     some task cannot fit in memory (pool is then left unmodified)."""
+    if alloc_kernels.reference_kernels_active():
+        return alloc_reference.greedy_place(pool, spec)
+    # one masked-load array per call; only the chosen node changes per task
+    masked = pool.masked_loads(spec.mem_req)
+    if masked.size == 0:
+        return None
+    load, mem_free = pool.load, pool.mem_free
+    cpu_need, mem_req = spec.cpu_need, spec.mem_req
+    thr = mem_req - 1e-12
     mapping: List[int] = []
     for _ in range(spec.n_tasks):
-        feasible = pool.mem_free >= spec.mem_req - 1e-12
-        if not feasible.any():
-            # roll back
+        node = int(masked.argmin())
+        if masked[node] == np.inf:          # no feasible node
             if mapping:
                 pool.remove(spec, mapping)
             return None
-        loads = np.where(feasible, pool.load, np.inf)
-        node = int(np.argmin(loads))
         mapping.append(node)
-        pool.load[node] += spec.cpu_need
-        pool.mem_free[node] -= spec.mem_req
+        load[node] += cpu_need
+        mem_free[node] -= mem_req
+        masked[node] = load[node] if mem_free[node] >= thr else np.inf
     return mapping
 
 
@@ -89,15 +102,19 @@ def greedy_p(
             pool.place(js.spec, js.mapping)
         return GreedyAdmission(mapping=None)
     # Phase 2: unmark in decreasing priority order when memory allows.
+    unmarked: set = set()
     for js in sorted(marked, key=lambda j: j.priority_key(now), reverse=True):
         pool.place(js.spec, js.mapping)      # tentatively keep it running
         if _can_place(pool, spec):
-            marked.remove(js)
+            unmarked.add(js.spec.jid)
         else:
             pool.remove(js.spec, js.mapping)  # must stay paused
     mapping = greedy_place(pool, spec)
     assert mapping is not None
-    return GreedyAdmission(mapping=mapping, paused=[js.spec.jid for js in marked])
+    return GreedyAdmission(
+        mapping=mapping,
+        paused=[js.spec.jid for js in marked if js.spec.jid not in unmarked],
+    )
 
 
 def greedy_pm(

@@ -132,6 +132,13 @@ class NodePool:
     def fits(self, spec: JobSpec, node: int) -> bool:
         return self.mem_free[node] >= spec.mem_req - 1e-12
 
+    def masked_loads(self, mem_req: float) -> np.ndarray:
+        """Fresh candidate array for greedy placement: per-node load with
+        memory-infeasible nodes masked to +inf.  The caller owns the array
+        and keeps it current with O(1) writes per placement instead of
+        rebuilding the mask per task."""
+        return np.where(self.mem_free >= mem_req - 1e-12, self.load, np.inf)
+
 
 def rebuild_pool(n_nodes: int, jobs: Dict[int, JobState]) -> NodePool:
     """Construct a NodePool from the mappings of all running jobs."""

@@ -18,6 +18,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from .alloc_kernels import NodeIncidence
 from .job import (
     COMPLETED,
     PAUSED,
@@ -170,6 +171,7 @@ class EngineState:
         self.specs = list(specs)
         n = len(self.specs)
         self.proc_time = np.array([s.proc_time for s in self.specs], dtype=np.float64)
+        self.cpu_need = np.array([s.cpu_need for s in self.specs], dtype=np.float64)
         # per-job demand, n_tasks * cpu_need — reused every advance
         self.demand = np.array(
             [s.n_tasks * s.cpu_need for s in self.specs], dtype=np.float64)
@@ -185,6 +187,10 @@ class EngineState:
         self.views = [JobView(self, i) for i in range(n)]
 
         self.pool = NodePool(n_nodes)
+        # job×node CSR incidence of the running tasks, kept consistent by
+        # the engine on every start/pause/migrate/complete transition — the
+        # §4.6 allocation kernels read it instead of rescanning mappings
+        self.inc = NodeIncidence(n_nodes, self.cpu_need)
         self.alive = np.ones(n_nodes, dtype=bool)
         self.now = 0.0
         self.util_integral = 0.0       # ∫ useful allocation dt

@@ -12,16 +12,22 @@ Post-passes: OPT=MAX iteratively lowers the maximum estimated stretch using
 left-over node capacity (water-filling in stretch space); OPT=AVG maximizes
 the total projected progress Σ y_j·T/(ft_j+T) (linear proxy for average
 stretch minimization) with HiGHS.
+
+The probe loop and both post-passes run on flat arrays (candidate columns
+precomputed once per call, per-node usage via an in-order ``np.add.at``
+scatter); all float accumulation orders match the reference implementations
+in :mod:`repro.core.alloc_reference` bit for bit.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from . import alloc_kernels, alloc_reference
 from .job import JobState
-from .mcb8 import _try_pack
+from .mcb8 import _Candidates
 
 __all__ = ["StretchResult", "mcb8_stretch", "improve_max_stretch", "improve_avg_stretch"]
 
@@ -34,11 +40,6 @@ class StretchResult:
     yields: Dict[int, float]       # initial per-job yields for the target
     target: float                  # achieved estimated max stretch
     removed: List[int]
-
-
-def _required_yield(js: JobState, now: float, period: float, target: float) -> float:
-    ft = js.flow_time(now)
-    return ((ft + period) / target - js.vt) / period
 
 
 def mcb8_stretch(
@@ -54,43 +55,40 @@ def mcb8_stretch(
     active = sorted(candidates, key=lambda js: js.priority_key(now))  # incr prio
     removed: List[int] = []
 
-    def feasible(inv_s: float, jobs: Sequence[JobState]):
+    # flat candidate columns, priority order (suffixes drop removed heads)
+    cand = _Candidates(active, pinned)
+    ft_a = np.array([js.flow_time(now) for js in active])
+    vt_a = np.array([js.vt for js in active])
+
+    def feasible(inv_s: float, k: int):
         target = 1.0 / inv_s
-        items = []
-        pins: Dict[int, Tuple[float, float, List[int]]] = {}
-        ylds: Dict[int, float] = {}
-        for js in jobs:
-            y = _required_yield(js, now, period, target)
-            if y > 1.0 + _EPS:
-                return None
-            y = float(np.clip(y, 0.0, 1.0))
-            ylds[js.spec.jid] = y
-            cpu_req = y * js.spec.cpu_need
-            if js.spec.jid in pinned:
-                pins[js.spec.jid] = (cpu_req, js.spec.mem_req, pinned[js.spec.jid])
-            else:
-                items.append((js.spec.jid, cpu_req, js.spec.mem_req, js.spec.n_tasks))
-        pack = _try_pack(n_nodes, items, pins, alive)
+        y = ((ft_a[k:] + period) / target - vt_a[k:]) / period
+        if (y > 1.0 + _EPS).any():
+            return None
+        y = np.clip(y, 0.0, 1.0)
+        ylds = {int(j): float(v) for j, v in zip(cand.jid[k:], y)}
+        pack = cand.pack_probe(y * cand.cpu[k:], k, n_nodes, alive)
         if pack is None:
             return None
         return pack, ylds
 
+    k0 = 0
     while True:
-        jobs = [js for js in active if js.spec.jid not in removed]
-        if not jobs:
+        if k0 >= len(active):
             return StretchResult({}, {}, np.inf, removed)
-        base = feasible(accuracy, jobs)  # very lax target (stretch 100)
+        base = feasible(accuracy, k0)  # very lax target (stretch 100)
         if base is None:
-            removed.append(jobs[0].spec.jid)
+            removed.append(active[k0].spec.jid)
+            k0 += 1
             continue
         best, best_inv = base, accuracy
-        top = feasible(1.0, jobs)        # stretch-1 target
+        top = feasible(1.0, k0)        # stretch-1 target
         if top is not None:
             return StretchResult(top[0], top[1], 1.0, removed)
         lo, hi = accuracy, 1.0
         while hi - lo > accuracy:
             mid = 0.5 * (lo + hi)
-            r = feasible(mid, jobs)
+            r = feasible(mid, k0)
             if r is not None:
                 best, best_inv, lo = r, mid, mid
             else:
@@ -98,12 +96,9 @@ def mcb8_stretch(
         return StretchResult(best[0], best[1], 1.0 / best_inv, removed)
 
 
-def _node_usage(jobs, mappings, yields, n_nodes):
-    use = np.zeros(n_nodes)
-    for js in jobs:
-        for node in mappings[js.spec.jid]:
-            use[node] += yields[js.spec.jid] * js.spec.cpu_need
-    return use
+def _required_yield(js: JobState, now: float, period: float, target: float) -> float:
+    ft = js.flow_time(now)
+    return ((ft + period) / target - js.vt) / period
 
 
 def improve_max_stretch(
@@ -118,38 +113,65 @@ def improve_max_stretch(
     """OPT=MAX (§4.7): iteratively reduce the max estimated stretch using
     slack — raise the worst job's yield until slack, cap, or the next-worst
     stretch level is reached."""
+    if alloc_kernels.reference_kernels_active():
+        return alloc_reference.improve_max_stretch(
+            jobs, mappings, yields, n_nodes, now, period, max_rounds)
     jobs = [js for js in jobs if js.spec.jid in mappings]
     if not jobs:
         return yields
+    m = len(jobs)
     yields = dict(yields)
-    frozen: set = set()
-
-    def est(js):
-        return (js.flow_time(now) + period) / max(_EPS, js.vt + yields[js.spec.jid] * period)
-
-    for _ in range(max_rounds):
-        live = [js for js in jobs if js.spec.jid not in frozen and yields[js.spec.jid] < 1.0 - _EPS]
-        if not live:
-            break
-        worst = max(live, key=est)
-        s_worst = est(worst)
-        others = [est(js) for js in jobs if js is not worst]
-        s_next = max([s for s in others if s < s_worst - 1e-12], default=1.0)
-        target = max(s_next, 1.0)
-        y_target = _required_yield(worst, now, period, target)
-        use = _node_usage(jobs, mappings, yields, n_nodes)
-        jid = worst.spec.jid
+    jid_a = [js.spec.jid for js in jobs]
+    cpu_a = np.array([js.spec.cpu_need for js in jobs])
+    ftp = np.array([js.flow_time(now) for js in jobs]) + period
+    vt_a = np.array([js.vt for js in jobs])
+    y_a = np.array([yields[j] for j in jid_a])
+    # flat (job-position, node) scatter columns in job-then-task order: the
+    # in-order np.add.at accumulation equals the reference per-task loop
+    pos_flat = np.repeat(np.arange(m),
+                         [len(mappings[j]) for j in jid_a])
+    node_flat = np.concatenate(
+        [np.asarray(mappings[j], dtype=np.int64) for j in jid_a])
+    # per-job (node, multiplicity) in first-occurrence order, as the
+    # reference's dict accumulation produces
+    mult_of: List[Dict[int, int]] = []
+    for j in jid_a:
         mult: Dict[int, int] = {}
-        for node in mappings[jid]:
+        for node in mappings[j]:
             mult[node] = mult.get(node, 0) + 1
+        mult_of.append(mult)
+
+    frozen = np.zeros(m, dtype=bool)
+    use = np.empty(n_nodes)
+    for _ in range(max_rounds):
+        live = ~frozen & (y_a < 1.0 - _EPS)
+        if not live.any():
+            break
+        est = ftp / np.maximum(_EPS, vt_a + y_a * period)
+        # first-maximal among live, in job order (== reference max(live, key))
+        live_idx = np.nonzero(live)[0]
+        w = int(live_idx[int(est[live_idx].argmax())])
+        s_worst = float(est[w])
+        others = np.delete(est, w)
+        below = others[others < s_worst - 1e-12]
+        s_next = float(below.max()) if below.size else 1.0
+        target = max(s_next, 1.0)
+        y_target = (ftp[w] / target - vt_a[w]) / period
+        use[:] = 0.0
+        np.add.at(use, node_flat, (y_a * cpu_a)[pos_flat])
+        c = cpu_a[w]
         dy_slack = min(
-            (1.0 - use[node]) / (worst.spec.cpu_need * k) for node, k in mult.items()
+            (1.0 - use[node]) / (c * k) for node, k in mult_of[w].items()
         )
-        dy = min(max(0.0, y_target - yields[jid]), max(0.0, dy_slack), 1.0 - yields[jid])
+        y_w = float(y_a[w])
+        dy = min(max(0.0, float(y_target) - y_w), max(0.0, dy_slack),
+                 1.0 - y_w)
         if dy <= 1e-6:
-            frozen.add(jid)
+            frozen[w] = True
             continue
-        yields[jid] += dy
+        y_a[w] = y_w + dy
+    for i, j in enumerate(jid_a):
+        yields[j] = float(y_a[i])
     return yields
 
 
@@ -163,24 +185,27 @@ def improve_avg_stretch(
 ) -> Dict[int, float]:
     """OPT=AVG (§4.7): maximize Σ projected progress (linear proxy) with the
     achieved target as per-job floor."""
+    if alloc_kernels.reference_kernels_active():
+        return alloc_reference.improve_avg_stretch(
+            jobs, mappings, yields, n_nodes, now, period)
     from scipy.optimize import linprog
-    from scipy.sparse import lil_matrix
+    from scipy.sparse import csr_matrix
 
     jobs = [js for js in jobs if js.spec.jid in mappings]
     if not jobs:
         return yields
     m = len(jobs)
-    a = lil_matrix((n_nodes, m))
+    dense = np.zeros((n_nodes, m))
     lo = np.zeros(m)
     w = np.zeros(m)
     for i, js in enumerate(jobs):
-        for node in mappings[js.spec.jid]:
-            a[node, i] += js.spec.cpu_need
+        nodes = np.asarray(mappings[js.spec.jid], dtype=np.int64)
+        np.add.at(dense[:, i], nodes, js.spec.cpu_need)
         lo[i] = yields[js.spec.jid]
         w[i] = period / (js.flow_time(now) + period)
     res = linprog(
         c=-w,
-        A_ub=a.tocsr(),
+        A_ub=csr_matrix(dense),
         b_ub=np.ones(n_nodes),
         bounds=list(zip(lo, np.ones(m))),
         method="highs",

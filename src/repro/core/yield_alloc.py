@@ -10,18 +10,25 @@ rest, until every job is frozen or capped at yield 1.
 Step 2' (OPT=AVG): maximize the *average* yield subject to no job dropping
 below the step-1 minimum — a rational LP (paper Linear Program (2)), solved
 with scipy's HiGHS.
+
+Both passes run on the vectorized CSR kernels of
+:mod:`repro.core.alloc_kernels` (the engine feeds them its incrementally
+maintained incidence matrix directly; this module's (specs, mappings) API
+builds the same CSR from scratch).  The original loop implementations live
+on as the oracle in :mod:`repro.core.alloc_reference`.
 """
 from __future__ import annotations
 
-from typing import Dict, List, Sequence, Tuple
+from typing import Sequence
 
 import numpy as np
 
+from . import alloc_kernels, alloc_reference
+from .alloc_kernels import CSRIncidence, build_csr
 from .job import JobSpec
 
-__all__ = ["min_yield", "maxmin_yields", "avg_yields", "allocate"]
-
-_EPS = 1e-12
+__all__ = ["min_yield", "maxmin_yields", "avg_yields", "allocate",
+           "allocate_incidence"]
 
 
 def min_yield(max_load: float) -> float:
@@ -29,78 +36,19 @@ def min_yield(max_load: float) -> float:
     return 1.0 / max(1.0, max_load)
 
 
-def _node_tables(
-    specs: Sequence[JobSpec], mappings: Sequence[Sequence[int]], n_nodes: int
-) -> Tuple[np.ndarray, List[List[Tuple[int, int]]]]:
-    """Return (per-node list of (job_idx, multiplicity)) and per-node total
-    CPU need, for the jobs' task placements."""
-    per_node: List[Dict[int, int]] = [dict() for _ in range(n_nodes)]
-    for ji, mapping in enumerate(mappings):
-        for node in mapping:
-            per_node[node][ji] = per_node[node].get(ji, 0) + 1
-    node_lists = [sorted(d.items()) for d in per_node]
-    need = np.zeros(n_nodes)
-    for node, items in enumerate(node_lists):
-        need[node] = sum(specs[ji].cpu_need * mult for ji, mult in items)
-    return need, node_lists
-
-
 def maxmin_yields(
     specs: Sequence[JobSpec],
     mappings: Sequence[Sequence[int]],
     n_nodes: int,
 ) -> np.ndarray:
-    """OPT=MIN: lexicographic max-min yields for the given mapping.
-
-    Classic water-filling: raise all unfrozen jobs' yields uniformly until a
-    node saturates (or a job hits yield 1); freeze the binding jobs; repeat.
-    """
+    """OPT=MIN: lexicographic max-min yields for the given mapping."""
+    if alloc_kernels.reference_kernels_active():
+        return alloc_reference.maxmin_yields(specs, mappings, n_nodes)
     m = len(specs)
-    y = np.zeros(m)
     if m == 0:
-        return y
-    frozen = np.zeros(m, dtype=bool)
-    load_need, node_lists = _node_tables(specs, mappings, n_nodes)
-
-    # residual capacity per node once frozen jobs are accounted for
-    for _ in range(m + 1):
-        if frozen.all():
-            break
-        # For each node, level = (1 - frozen usage) / unfrozen need
-        best_level = 1.0  # cap at yield 1
-        binding_nodes: List[int] = []
-        for node, items in enumerate(node_lists):
-            f_use = 0.0
-            u_need = 0.0
-            for ji, mult in items:
-                c = specs[ji].cpu_need * mult
-                if frozen[ji]:
-                    f_use += y[ji] * c
-                else:
-                    u_need += c
-            if u_need <= _EPS:
-                continue
-            level = max(0.0, (1.0 - f_use)) / u_need
-            if level < best_level - 1e-15:
-                best_level = level
-                binding_nodes = [node]
-            elif abs(level - best_level) <= 1e-15:
-                binding_nodes.append(node)
-        # raise every unfrozen job to best_level
-        newly = np.zeros(m, dtype=bool)
-        if best_level >= 1.0 - 1e-12:
-            best_level = 1.0
-            newly |= ~frozen  # everyone capped
-        else:
-            for node in binding_nodes:
-                for ji, _ in node_lists[node]:
-                    if not frozen[ji]:
-                        newly[ji] = True
-        y[~frozen] = best_level
-        if not newly.any():          # numerical safety
-            newly |= ~frozen
-        frozen |= newly
-    return np.clip(y, 0.0, 1.0)
+        return np.zeros(0)
+    inc = build_csr([s.cpu_need for s in specs], mappings, n_nodes)
+    return alloc_kernels.maxmin_yields_csr(inc, np.ones(m, dtype=bool))
 
 
 def avg_yields(
@@ -109,29 +57,13 @@ def avg_yields(
     n_nodes: int,
 ) -> np.ndarray:
     """OPT=AVG: maximize sum of yields s.t. y_j >= 1/max(1,Λ) (LP (2))."""
-    from scipy.optimize import linprog
-    from scipy.sparse import lil_matrix
-
+    if alloc_kernels.reference_kernels_active():
+        return alloc_reference.avg_yields(specs, mappings, n_nodes)
     m = len(specs)
     if m == 0:
         return np.zeros(0)
-    load_need, node_lists = _node_tables(specs, mappings, n_nodes)
-    lam = float(load_need.max()) if n_nodes else 0.0
-    y_min = min_yield(lam)
-    a = lil_matrix((n_nodes, m))
-    for node, items in enumerate(node_lists):
-        for ji, mult in items:
-            a[node, ji] = specs[ji].cpu_need * mult
-    res = linprog(
-        c=-np.ones(m),
-        A_ub=a.tocsr(),
-        b_ub=np.ones(n_nodes),
-        bounds=[(y_min, 1.0)] * m,
-        method="highs",
-    )
-    if not res.success:  # numerically degenerate: fall back to the safe floor
-        return np.full(m, y_min)
-    return np.clip(res.x, 0.0, 1.0)
+    inc = build_csr([s.cpu_need for s in specs], mappings, n_nodes)
+    return alloc_kernels.avg_yields_csr(inc, np.arange(m, dtype=np.int64))
 
 
 def allocate(
@@ -145,4 +77,24 @@ def allocate(
         return maxmin_yields(specs, mappings, n_nodes)
     if opt == "AVG":
         return avg_yields(specs, mappings, n_nodes)
+    raise ValueError(f"unknown OPT {opt!r}")
+
+
+def allocate_incidence(
+    inc: "CSRIncidence",
+    cols: np.ndarray,
+    opt: str = "MIN",
+) -> np.ndarray:
+    """§4.6 allocation straight off an engine incidence snapshot.
+
+    ``cols`` — sorted job columns of the running set.  Returns yields aligned
+    with ``cols``.  This is the engine's hot path: no per-event table rebuild,
+    no (specs, mappings) list materialization.
+    """
+    if opt == "MIN":
+        active = np.zeros(inc.width, dtype=bool)
+        active[cols] = True
+        return alloc_kernels.maxmin_yields_csr(inc, active)[cols]
+    if opt == "AVG":
+        return alloc_kernels.avg_yields_csr(inc, cols)
     raise ValueError(f"unknown OPT {opt!r}")

@@ -29,18 +29,21 @@ from __future__ import annotations
 
 import heapq
 import math
+from collections import Counter, deque
 from dataclasses import dataclass
+from itertools import islice
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import alloc_kernels
 from ..core.greedy import greedy_p, greedy_place, greedy_pm
 from ..core.job import COMPLETED, PAUSED, PENDING, RUNNING, JobSpec
 from ..core.mcb8 import mcb8
 from ..core.policies import PolicySpec, parse_policy
 from ..core.state import EngineState, JobView, S_COMPLETED, S_PENDING
 from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
-from ..core.yield_alloc import allocate
+from ..core.yield_alloc import allocate, allocate_incidence
 from .cluster import ClusterEvent
 
 __all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy", "BatchPolicy"]
@@ -283,13 +286,19 @@ class DFRSPolicy(Policy):
             self._stretch_yields_set = False
             return
         e = self.e
-        running = e.state.running()
-        specs = [js.spec for js in running]
-        maps = [js.mapping for js in running]
+        st = e.state
+        run = st.running_indices()
         opt = self.spec.opt if self.spec.opt in ("MIN", "AVG") else "MIN"
-        ylds = allocate(specs, maps, e.params.n_nodes, opt=opt)
-        for js, y in zip(running, ylds):
-            js.yld = float(y)
+        if alloc_kernels.reference_kernels_active():
+            views = [st.views[i] for i in run]
+            ylds = allocate([js.spec for js in views],
+                            [js.mapping for js in views],
+                            e.params.n_nodes, opt=opt)
+        else:
+            # hot path: the incrementally maintained incidence matrix already
+            # holds every running task — no mapping rescan, no table rebuild
+            ylds = allocate_incidence(st.inc.csr(), run, opt=opt)
+        st.yld[run] = ylds
 
 
 class BatchPolicy(Policy):
@@ -308,7 +317,7 @@ class BatchPolicy(Policy):
         if algo not in ("FCFS", "EASY"):
             raise ValueError(algo)
         self.algo = algo
-        self.queue: List[JobView] = []
+        self.queue: deque = deque()                     # FIFO: O(1) head pops
         self.free: List[int] = []                       # free node ids (heap)
         self.running: List[Tuple[float, int, int]] = [] # (end, jid, n_tasks)
         self._dirty = False
@@ -317,7 +326,7 @@ class BatchPolicy(Policy):
         # bind() is the per-engine reset: a Policy instance may be reused
         # across Engine runs, so no run state can survive it
         super().bind(engine)
-        self.queue = []
+        self.queue = deque()
         self.running = []
         self._dirty = False
         self.free = list(range(engine.params.n_nodes))
@@ -360,7 +369,7 @@ class BatchPolicy(Policy):
         q = self.queue
         # FCFS part: start queue head(s) while they fit.
         while q and q[0].spec.n_tasks <= len(self.free):
-            self._start_job(q.pop(0))
+            self._start_job(q.popleft())
         if self.algo == "FCFS" or not q:
             return
         # EASY backfilling against the head's reservation.
@@ -377,13 +386,13 @@ class BatchPolicy(Policy):
                     shadow = end
                     extra = avail - head.spec.n_tasks
                     break
-            for i, js in enumerate(list(q[1:]), start=1):
+            for i, js in enumerate(islice(q, 1, None), start=1):
                 free = len(self.free)
                 if js.spec.n_tasks <= free and (
                     now + js.spec.proc_time <= shadow + 1e-9
                     or js.spec.n_tasks <= min(free, extra)
                 ):
-                    q.pop(i)
+                    del q[i]
                     self._start_job(js)
                     changed = True
                     break   # recompute the reservation after each backfill
@@ -437,6 +446,7 @@ class Engine:
     def pause(self, js: JobView) -> None:
         assert js.status == RUNNING
         self.state.pool.remove(js.spec, js.mapping)
+        self.state.inc.remove(js.i, js.mapping)
         js.status = PAUSED
         js.mapping = None
         js.yld = 0.0
@@ -448,6 +458,7 @@ class Engine:
         assert js.status in (PENDING, PAUSED)
         resume = js.status == PAUSED
         self.state.pool.place(js.spec, mapping)
+        self.state.inc.place(js.i, mapping)
         js.status = RUNNING
         js.mapping = list(mapping)
         if resume:
@@ -468,8 +479,10 @@ class Engine:
             moves.append((js, new_mapping, moved))
         for js, _, _ in moves:
             self.state.pool.remove(js.spec, js.mapping)
+            self.state.inc.remove(js.i, js.mapping)
         for js, new_mapping, moved in moves:
             self.state.pool.place(js.spec, new_mapping)
+            self.state.inc.place(js.i, new_mapping)
             js.mapping = list(new_mapping)
             if moved == 0:
                 continue
@@ -480,6 +493,7 @@ class Engine:
 
     def complete(self, js: JobView) -> None:
         self.state.pool.remove(js.spec, js.mapping)
+        self.state.inc.remove(js.i, js.mapping)
         js.status = COMPLETED
         js.mapping = None
         js.yld = 0.0
@@ -641,8 +655,5 @@ class Engine:
         )
 
 
-def _node_multiset(mapping: Sequence[int]) -> Dict[int, int]:
-    out: Dict[int, int] = {}
-    for n in mapping:
-        out[n] = out.get(n, 0) + 1
-    return out
+def _node_multiset(mapping: Sequence[int]) -> Counter:
+    return Counter(mapping)

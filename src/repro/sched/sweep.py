@@ -172,6 +172,7 @@ def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
         "policy": cell.policy,
         "scenario": cell.scenario,
         "scenario_applied": applied,
+        "period": params.period,
         "max_stretch": r.max_stretch,
         "mean_stretch": r.mean_stretch,
         "makespan": r.makespan,
@@ -180,6 +181,8 @@ def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
         "n_mig": r.n_mig,
         "pmtn_per_job": r.pmtn_per_job,
         "mig_per_job": r.mig_per_job,
+        "pmtn_per_hour": r.pmtn_per_hour,
+        "mig_per_hour": r.mig_per_hour,
         "bytes_moved_gb": r.bytes_moved_gb,
         "bandwidth_gbps": r.bandwidth_gbps,
         "events": r.events,

@@ -1,0 +1,267 @@
+"""Vectorized allocation-kernel tests: bit-identity against the
+pre-vectorization reference implementations (``repro.core.alloc_reference``)
+and golden end-to-end engine equivalence.
+
+Two layers:
+
+* property tests drive randomized specs/mappings through the vectorized
+  kernels and the reference oracle and require *bitwise* equal outputs
+  (the kernels are engineered to perform the identical IEEE operation
+  sequence, so exact equality — not allclose — is the contract);
+* golden tests run full simulation cells (the 16-cell acceptance grid plus
+  a stretch-per cell, failure scenarios included) once on the vectorized
+  hot path and once under ``reference_kernels()`` and require identical
+  ``SimResult``s.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import alloc_reference as ref
+from repro.core.alloc_kernels import (NodeIncidence, build_csr,
+                                      reference_kernels)
+from repro.core.greedy import greedy_place
+from repro.core.job import JobSpec, JobState, NodePool
+from repro.core.mcb8 import mcb8, mcb8_pack
+from repro.core.stretch_opt import (improve_avg_stretch, improve_max_stretch,
+                                    mcb8_stretch)
+from repro.core.yield_alloc import avg_yields, maxmin_yields
+from repro.sched.engine import Engine, SimParams
+from repro.sched.scenarios import apply_scenario
+from repro.workloads.registry import WorkloadSpec, make_trace
+
+# --------------------------------------------------------------------------- #
+# randomized fixtures (deterministic per seed)                                 #
+# --------------------------------------------------------------------------- #
+CPU_CHOICES = [0.25, 0.37, 0.5, 1.0]
+MEM_CHOICES = [0.1, 0.2, 0.3, 0.5, 0.8, 1.0]
+
+
+def random_jobs(rng, n_max=14, wide=False):
+    out = []
+    for i in range(int(rng.integers(1, n_max + 1))):
+        out.append(JobSpec(
+            jid=i, release=0.0, proc_time=float(rng.uniform(10.0, 1e4)),
+            n_tasks=int(rng.integers(1, 17 if wide else 5)),
+            cpu_need=float(rng.choice(CPU_CHOICES)),
+            mem_req=float(rng.choice(MEM_CHOICES)),
+        ))
+    return out
+
+
+def placed_fixture(seed):
+    """Specs + feasible mappings via (reference) greedy placement."""
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(1, 10))
+    pool = NodePool(n_nodes)
+    specs, maps = [], []
+    for s in random_jobs(rng):
+        m = ref.greedy_place(pool, s)
+        if m is not None:
+            specs.append(s)
+            maps.append(m)
+    return specs, maps, n_nodes
+
+
+def states_fixture(seed, n_max=14, wide=False):
+    rng = np.random.default_rng(seed)
+    states = []
+    for s in random_jobs(rng, n_max=n_max, wide=wide):
+        js = JobState(spec=s)
+        js.vt = float(rng.uniform(0.1, 500.0))
+        states.append(js)
+    n_nodes = int(rng.integers(2, 20))
+    return states, n_nodes
+
+
+# --------------------------------------------------------------------------- #
+# §4.6 yield kernels vs reference — bitwise                                    #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(60))
+def test_maxmin_yields_bitwise_equals_reference(seed):
+    specs, maps, n_nodes = placed_fixture(seed)
+    if not specs:
+        return
+    a = maxmin_yields(specs, maps, n_nodes)
+    b = ref.maxmin_yields(specs, maps, n_nodes)
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_avg_yields_bitwise_equals_reference(seed):
+    specs, maps, n_nodes = placed_fixture(seed)
+    if not specs:
+        return
+    a = avg_yields(specs, maps, n_nodes)
+    b = ref.avg_yields(specs, maps, n_nodes)
+    assert np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_greedy_place_bitwise_equals_reference(seed):
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(1, 10))
+    pa, pb = NodePool(n_nodes), NodePool(n_nodes)
+    for s in random_jobs(rng):
+        ma = greedy_place(pa, s)
+        mb = ref.greedy_place(pb, s)
+        assert ma == mb
+        assert np.array_equal(pa.load, pb.load)
+        assert np.array_equal(pa.mem_free, pb.mem_free)
+
+
+# --------------------------------------------------------------------------- #
+# MCB8 fast pack vs reference pack                                             #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(40))
+def test_mcb8_pack_equals_reference(seed):
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 20))
+    y = float(rng.uniform(0.01, 1.0))
+    jobs = [(i, min(1.0, s.cpu_need * y), s.mem_req, s.n_tasks)
+            for i, s in enumerate(random_jobs(rng, n_max=20, wide=True))]
+    fast = mcb8_pack(n_nodes, jobs)
+    with reference_kernels():
+        slow = mcb8_pack(n_nodes, jobs)
+    assert fast == slow
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_mcb8_full_equals_reference(seed):
+    states, n_nodes = states_fixture(seed, n_max=16, wide=True)
+    pinned = {}
+    if len(states) >= 2 and states[0].spec.n_tasks <= n_nodes:
+        pinned[states[0].spec.jid] = list(range(states[0].spec.n_tasks))
+    fast = mcb8(states, n_nodes, now=1000.0, pinned=pinned)
+    with reference_kernels():
+        slow = mcb8(states, n_nodes, now=1000.0, pinned=pinned)
+    assert fast.mappings == slow.mappings
+    assert fast.yld == slow.yld
+    assert fast.removed == slow.removed
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_mcb8_stretch_equals_reference(seed):
+    states, n_nodes = states_fixture(seed, n_max=16, wide=True)
+    fast = mcb8_stretch(states, n_nodes, now=1000.0, period=600.0)
+    with reference_kernels():
+        slow = mcb8_stretch(states, n_nodes, now=1000.0, period=600.0)
+    assert fast.mappings == slow.mappings
+    assert fast.yields == slow.yields
+    assert fast.target == slow.target
+    assert fast.removed == slow.removed
+
+
+# --------------------------------------------------------------------------- #
+# §4.7 post-passes vs reference                                                #
+# --------------------------------------------------------------------------- #
+def _stretch_fixture(seed):
+    rng = np.random.default_rng(seed)
+    n_nodes = int(rng.integers(2, 12))
+    pool = NodePool(n_nodes)
+    jobs, mappings, yields = [], {}, {}
+    for s in random_jobs(rng, n_max=10):
+        m = ref.greedy_place(pool, s)
+        if m is None:
+            continue
+        js = JobState(spec=s)
+        js.vt = float(rng.uniform(0.1, 500.0))
+        jobs.append(js)
+        mappings[s.jid] = m
+        yields[s.jid] = float(rng.uniform(0.0, 0.6))
+    return jobs, mappings, yields, n_nodes
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_improve_max_stretch_bitwise_equals_reference(seed):
+    jobs, mappings, yields, n_nodes = _stretch_fixture(seed)
+    a = improve_max_stretch(jobs, mappings, dict(yields), n_nodes,
+                            now=700.0, period=600.0)
+    b = ref.improve_max_stretch(jobs, mappings, dict(yields), n_nodes,
+                                now=700.0, period=600.0)
+    assert a == b
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_improve_avg_stretch_bitwise_equals_reference(seed):
+    jobs, mappings, yields, n_nodes = _stretch_fixture(seed)
+    a = improve_avg_stretch(jobs, mappings, dict(yields), n_nodes,
+                            now=700.0, period=600.0)
+    b = ref.improve_avg_stretch(jobs, mappings, dict(yields), n_nodes,
+                                now=700.0, period=600.0)
+    assert a == b
+
+
+# --------------------------------------------------------------------------- #
+# incremental incidence == from-scratch CSR                                    #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(20))
+def test_node_incidence_matches_from_scratch_build(seed):
+    rng = np.random.default_rng(seed)
+    n_nodes, n_jobs = int(rng.integers(2, 10)), int(rng.integers(1, 12))
+    cpu = rng.choice(CPU_CHOICES, size=n_jobs)
+    inc = NodeIncidence(n_nodes, cpu)
+    current = {}
+    for _ in range(40):
+        if current and rng.random() < 0.4:           # remove one
+            j = int(rng.choice(list(current)))
+            inc.remove(j, current.pop(j))
+        else:                                        # place one
+            j = int(rng.integers(0, n_jobs))
+            if j in current:
+                continue
+            mapping = rng.integers(0, n_nodes,
+                                   size=int(rng.integers(1, 6))).tolist()
+            current[j] = mapping
+            inc.place(j, mapping)
+        snap = inc.csr()
+        mappings = [current.get(j, []) for j in range(n_jobs)]
+        scratch = build_csr(cpu, mappings, n_nodes)
+        assert np.array_equal(snap.indptr, scratch.indptr)
+        assert np.array_equal(snap.indices, scratch.indices)
+        assert np.array_equal(snap.data, scratch.data)
+
+
+def test_engine_incidence_consistent_after_run():
+    """After a full simulation every job is complete — the incrementally
+    maintained incidence must be empty again (no leaked entries)."""
+    specs = make_trace(WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=0))
+    eng = Engine(specs, "GreedyPM */per/OPT=MIN/MINVT=600",
+                 SimParams(n_nodes=16))
+    eng.run()
+    snap = eng.state.inc.csr()
+    assert snap.indices.size == 0
+    assert all(not r for r in eng.state.inc.rows)
+
+
+# --------------------------------------------------------------------------- #
+# golden end-to-end equivalence: 17 cells, vectorized vs reference engine      #
+# --------------------------------------------------------------------------- #
+GOLDEN_POLICIES = ["FCFS", "EASY", "GreedyP */OPT=MIN",
+                   "GreedyPM */per/OPT=MIN/MINVT=600"]
+GOLDEN_WORKLOADS = [WorkloadSpec("lublin", n_jobs=40, n_nodes=16, seed=0),
+                    WorkloadSpec("hpc2n", n_jobs=40, n_nodes=128, seed=1)]
+GOLDEN_CASES = [(w, p, sc)
+                for w in GOLDEN_WORKLOADS
+                for p in GOLDEN_POLICIES
+                for sc in ("baseline", "rack_failure")]
+GOLDEN_CASES.append((GOLDEN_WORKLOADS[0], "/stretch-per/OPT=MAX", "baseline"))
+
+
+def test_golden_case_count():
+    assert len(GOLDEN_CASES) == 17
+
+
+@pytest.mark.parametrize(
+    "workload,policy,scenario", GOLDEN_CASES,
+    ids=[f"{w.name}-{p}-{sc}" for w, p, sc in GOLDEN_CASES])
+def test_golden_simresult_bitwise_equivalence(workload, policy, scenario):
+    specs = make_trace(workload)
+    specs, events = apply_scenario(scenario, specs, workload.n_nodes,
+                                   seed=workload.seed)
+    params = SimParams(n_nodes=workload.n_nodes)
+    fast = Engine(specs, policy, params, cluster_events=events).run()
+    with reference_kernels():
+        slow = Engine(specs, policy, params, cluster_events=events).run()
+    assert dataclasses.asdict(fast) == dataclasses.asdict(slow)

@@ -1,0 +1,87 @@
+"""Hypothesis property tests: vectorized allocation kernels vs the
+pre-vectorization reference oracle (bitwise equality on arbitrary inputs).
+
+Complements tests/test_alloc_kernels.py (seeded, runs on minimal installs):
+hypothesis explores the input space adversarially — degenerate single-node
+clusters, yield-capped jobs, saturated memory — and shrinks any mismatch to
+a minimal counterexample.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alloc_reference as ref
+from repro.core.greedy import greedy_place
+from repro.core.job import JobSpec, NodePool
+from repro.core.mcb8 import mcb8_pack
+from repro.core.alloc_kernels import reference_kernels
+from repro.core.yield_alloc import avg_yields, maxmin_yields
+
+job_st = st.builds(
+    JobSpec,
+    jid=st.integers(0, 10_000),
+    release=st.floats(0, 1e5),
+    proc_time=st.floats(1.0, 1e5),
+    n_tasks=st.integers(1, 16),
+    cpu_need=st.sampled_from([0.25, 0.5, 1.0]),
+    mem_req=st.sampled_from([0.1, 0.2, 0.3, 0.5, 0.8, 1.0]),
+)
+
+
+def _place_all(specs, n_nodes):
+    pool = NodePool(n_nodes)
+    placed, maps = [], []
+    for i, s in enumerate(specs):
+        spec = JobSpec(jid=i, release=0.0, proc_time=s.proc_time,
+                       n_tasks=s.n_tasks, cpu_need=s.cpu_need,
+                       mem_req=s.mem_req)
+        m = ref.greedy_place(pool, spec)
+        if m is not None:
+            placed.append(spec)
+            maps.append(m)
+    return placed, maps
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=14), st.integers(1, 10))
+def test_maxmin_yields_matches_reference(specs, n_nodes):
+    placed, maps = _place_all(specs, n_nodes)
+    if not placed:
+        return
+    assert np.array_equal(maxmin_yields(placed, maps, n_nodes),
+                          ref.maxmin_yields(placed, maps, n_nodes))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=10), st.integers(1, 8))
+def test_avg_yields_matches_reference(specs, n_nodes):
+    placed, maps = _place_all(specs, n_nodes)
+    if not placed:
+        return
+    assert np.array_equal(avg_yields(placed, maps, n_nodes),
+                          ref.avg_yields(placed, maps, n_nodes))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=14), st.integers(1, 10))
+def test_greedy_place_matches_reference(specs, n_nodes):
+    pa, pb = NodePool(n_nodes), NodePool(n_nodes)
+    for s in specs:
+        assert greedy_place(pa, s) == ref.greedy_place(pb, s)
+        assert np.array_equal(pa.load, pb.load)
+        assert np.array_equal(pa.mem_free, pb.mem_free)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=18), st.integers(2, 16),
+       st.floats(0.01, 1.0))
+def test_mcb8_pack_matches_reference(specs, n_nodes, y):
+    jobs = [(i, min(1.0, s.cpu_need * y), s.mem_req, s.n_tasks)
+            for i, s in enumerate(specs)]
+    fast = mcb8_pack(n_nodes, jobs)
+    with reference_kernels():
+        slow = mcb8_pack(n_nodes, jobs)
+    assert fast == slow
