@@ -20,8 +20,7 @@ import os
 from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
-from repro.sched.engine import SimParams
-from repro.sched.sweep import Cell, record_matches, run_grid
+from repro.sched.sweep import RecordCache, record_matches
 from repro.workloads.registry import WorkloadSpec
 
 RESULTS_DIR = "experiments/results"
@@ -96,10 +95,6 @@ def records_for(records: Sequence[dict], kind: str, **kv) -> List[dict]:
     return [r for r in records if sel(r) and record_matches(r, kv)]
 
 
-#: a cell's cache identity inside one benchmark process
-CellKey = Tuple[WorkloadSpec, str, float, str]
-
-
 class Bench:
     """Shared sweep-record cache across all paper benchmarks.
 
@@ -108,13 +103,15 @@ class Bench:
     cache are simulated, in a single ``run_grid`` fan-out across worker
     processes.  Tables 2/3/4 and figures 1/3/4 overlap heavily on the
     default-period grid — with this cache a full ``benchmarks.run`` pays for
-    each shared cell exactly once (the pre-sweep ``Bench`` re-simulated them
-    once per table because its memo was keyed per serial code path).
+    each shared cell exactly once.  The caching itself is
+    ``repro.sched.sweep.RecordCache``; pass ``cache_path`` (or
+    ``benchmarks.run --cache``) to persist the records on disk, making
+    interrupted benchmark runs resumable across processes.
     """
 
-    def __init__(self, scale: Scale):
+    def __init__(self, scale: Scale, cache_path: Optional[str] = None):
         self.scale = scale
-        self._records: Dict[CellKey, Dict[str, Any]] = {}
+        self._cache = RecordCache(cache_path)
         self._workloads: Dict[str, List[WorkloadSpec]] = {}
 
     def workloads(self, kind: str) -> List[WorkloadSpec]:
@@ -131,20 +128,10 @@ class Bench:
         n_workers: Optional[int] = None,
     ) -> List[Dict[str, Any]]:
         """Records for the full cross product, simulating only cache misses."""
-        want: List[CellKey] = [
-            (w, p, float(per), sc)
-            for per in periods for w in workloads
-            for p in policies for sc in scenarios
-        ]
-        missing = [k for k in dict.fromkeys(want) if k not in self._records]
-        if missing:
-            cells = [Cell(w, p, sc, params=SimParams(period=per))
-                     for (w, p, per, sc) in missing]
-            res = run_grid(cells, n_workers=n_workers or N_WORKERS,
-                           compute_bound=True)
-            for key, rec in zip(missing, res.records):
-                self._records[key] = rec
-        return [self._records[k] for k in want]
+        return self._cache.sweep(
+            workloads, policies, periods, scenarios,
+            n_workers=n_workers or N_WORKERS, compute_bound=True,
+        )
 
 
 def write_csv(name: str, header: Sequence[str], rows: Sequence[Sequence]) -> str:

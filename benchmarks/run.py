@@ -33,10 +33,13 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale study")
     ap.add_argument("--only", default="", help="comma-separated bench names")
+    ap.add_argument("--cache", default=None, metavar="PATH",
+                    help="persist the shared sweep-record cache to PATH "
+                         "(resumable across interrupted runs)")
     args = ap.parse_args()
 
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
-    bench = Bench(FULL if args.full else QUICK)
+    bench = Bench(FULL if args.full else QUICK, cache_path=args.cache)
     failed = []
     t_all = time.time()
     for name in names:

@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.bound import max_stretch_lower_bound
-from repro.sched.simulator import SimParams, simulate
+from repro.api import SimParams, max_stretch_lower_bound, simulate
 from repro.workloads.jobgen import tpu_job_types, tpu_trace
 
 from .common import BEST_POLICIES, Bench, fmt_table, write_csv

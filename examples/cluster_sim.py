@@ -10,8 +10,7 @@ applied to this repo's own models.
 """
 import sys
 
-from repro.core.bound import max_stretch_lower_bound
-from repro.sched.simulator import SimParams, simulate
+from repro.api import SimParams, max_stretch_lower_bound, simulate
 from repro.workloads.jobgen import tpu_job_types, tpu_trace
 
 sys.path.insert(0, ".")

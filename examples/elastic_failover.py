@@ -14,10 +14,9 @@ import tempfile
 
 import jax
 
+from repro.api import (SimParams, apply_scenario, max_stretch_lower_bound,
+                       simulate)
 from repro.configs import get_reduced
-from repro.core.bound import max_stretch_lower_bound
-from repro.sched.scenarios import apply_scenario
-from repro.sched.simulator import SimParams, simulate
 from repro.train.data import data_for
 from repro.train.ft import FailureInjector, run_restartable
 from repro.train.optimizer import OptConfig

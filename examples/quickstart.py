@@ -2,34 +2,37 @@
 
     PYTHONPATH=src python examples/quickstart.py
 
-Generates a Lublin-Feitelson trace at load 0.7, computes the Theorem-1 lower
-bound, runs FCFS / EASY / the paper's best DFRS policy, and prints the
-max-bounded-stretch comparison — the paper's headline result in one screen.
+Everything through the ``repro.api`` facade: a declarative workload
+(Lublin-Feitelson trace at load 0.7), the Theorem-1 lower bound, the batch
+baselines, the paper's best DFRS policy, and one policy the paper's grammar
+cannot spell — the registered hybrid composition ``EASY+OPT=MIN``
+(fractional backfilling arbitrated by OPT=MIN water-filling).  The
+max-bounded-stretch comparison is the paper's headline result in one screen.
 """
 import sys
 
-from repro.core.bound import max_stretch_lower_bound
-from repro.sched.simulator import SimParams, simulate
-from repro.workloads.lublin import lublin_trace, scale_to_load
+from repro import api
 
 
 def main() -> int:
-    n_nodes, n_jobs, load = 64, 300, 0.7
-    print(f"cluster: {n_nodes} nodes; workload: {n_jobs} jobs at load {load}")
-    specs = scale_to_load(lublin_trace(n_jobs, n_nodes, seed=42), n_nodes, load)
-    bound = max_stretch_lower_bound(specs, n_nodes)
+    workload = api.WorkloadSpec("lublin", n_jobs=300, n_nodes=64, seed=42,
+                                load=0.7)
+    print(f"cluster: {workload.n_nodes} nodes; workload: {workload.name}")
+    specs = api.make_trace(workload)
+    bound = api.max_stretch_lower_bound(specs, workload.n_nodes)
     print(f"Theorem-1 lower bound on optimal max stretch: {bound:.2f}\n")
 
     policies = [
         "FCFS",
         "EASY",
+        "EASY+OPT=MIN",                         # registered hybrid composition
         "GreedyP */OPT=MIN",
         "GreedyPM */per/OPT=MIN/MINVT=600",
     ]
     print(f"{'policy':40s} {'max stretch':>12s} {'vs bound':>9s} "
           f"{'pmtn/job':>9s} {'mig/job':>8s} {'underut':>8s}")
     for pol in policies:
-        r = simulate(specs, pol, SimParams(n_nodes=n_nodes))
+        r = api.simulate(workload, pol)
         print(f"{pol:40s} {r.max_stretch:12.1f} {r.max_stretch/bound:9.1f} "
               f"{r.pmtn_per_job:9.2f} {r.mig_per_job:8.2f} "
               f"{r.underutilization:8.3f}")

@@ -3,37 +3,43 @@ through the parallel sweep subsystem.
 
     PYTHONPATH=src python examples/sweep_grid.py
 
-Builds 16 cells — two workloads (synthetic Lublin, HPC2N-like), four
-policies (both batch baselines + two DFRS policies), two cluster scenarios
-(baseline, rack failure) — fans them over 4 worker processes, writes the
-JSON artifact, and prints the per-policy aggregates.  This is the paper's
-§6 evaluation methodology as a single API call.
+Builds 20 cells — two workloads (synthetic Lublin, HPC2N-like), five
+policies (both batch baselines, two DFRS policies, and the registered
+hybrid composition ``EASY+OPT=MIN``), two cluster scenarios (baseline,
+rack failure) — fans them over 4 worker processes via ``repro.api.sweep``,
+and prints the per-policy aggregates.  The on-disk record cache makes
+re-runs incremental: interrupt the sweep, run again, and only the missing
+cells are simulated.
 """
 import sys
 
-from repro.sched.sweep import grid, run_grid
-from repro.workloads.registry import WorkloadSpec
+from repro import api
+
+CACHE = "experiments/results/sweep_grid_cache.json"
+ARTIFACT = "experiments/results/sweep_grid.json"
 
 
 def main() -> int:
     workloads = [
-        WorkloadSpec("lublin", n_jobs=150, n_nodes=32, seed=0, load=0.7),
-        WorkloadSpec("hpc2n", n_jobs=150, n_nodes=128, seed=0),
+        api.WorkloadSpec("lublin", n_jobs=150, n_nodes=32, seed=0, load=0.7),
+        api.WorkloadSpec("hpc2n", n_jobs=150, n_nodes=128, seed=0),
     ]
     policies = [
         "FCFS",
         "EASY",
+        "EASY+OPT=MIN",
         "GreedyP */OPT=MIN",
         "GreedyPM */per/OPT=MIN/MINVT=600",
     ]
     scenarios = ["baseline", "rack_failure"]
-    cells = grid(workloads, policies, scenarios)
-    print(f"sweeping {len(cells)} cells "
+    n_cells = len(workloads) * len(policies) * len(scenarios)
+    print(f"sweeping {n_cells} cells "
           f"({len(workloads)} workloads x {len(policies)} policies x "
           f"{len(scenarios)} scenarios) on 4 workers ...")
-    res = run_grid(cells, n_workers=4, compute_bound=True,
-                   json_path="experiments/results/sweep_grid.json")
-    print(f"done: {res.wall_s:.1f}s, {res.cells_per_sec:.2f} cells/s\n")
+    res = api.sweep(workloads, policies, scenarios, n_workers=4,
+                    compute_bound=True, cache_path=CACHE, json_path=ARTIFACT)
+    print(f"done: {res.wall_s:.1f}s, {res.cells_per_sec:.2f} cells/s "
+          f"(cache: {CACHE})\n")
 
     print(f"{'policy':36s} {'scenario':14s} {'mean deg':>9s} {'max deg':>9s}")
     for policy in policies:
@@ -43,7 +49,7 @@ def main() -> int:
             note = "" if all(r["scenario_applied"] for r in recs) \
                 else "  (events ignored: batch)"
             print(f"{policy:36s} {sc:14s} {d.mean():9.1f} {d.max():9.1f}{note}")
-    print("\nfull records: experiments/results/sweep_grid.json")
+    print(f"\nfull records: {ARTIFACT}")
     return 0
 
 

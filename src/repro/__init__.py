@@ -1,0 +1,19 @@
+"""repro — Dynamic Fractional Resource Scheduling vs. Batch Scheduling.
+
+Reproduction of Casanova/Stillwell/Vivien (cs.DC 2011) grown into a
+JAX/Pallas-era cluster-scheduling playground.  The supported public
+surface is :mod:`repro.api` (also scriptable as ``python -m repro``);
+the layer modules (``repro.core``, ``repro.sched``, ``repro.workloads``)
+remain importable for fine-grained use.
+"""
+from __future__ import annotations
+
+__all__ = ["api"]
+
+
+def __getattr__(name):
+    # lazy: `import repro` stays cheap; `repro.api` loads on first touch
+    if name == "api":
+        import importlib
+        return importlib.import_module(".api", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

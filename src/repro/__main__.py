@@ -1,0 +1,240 @@
+"""``python -m repro`` — the scheduling stack from the command line.
+
+Subcommands (all built on :mod:`repro.api`):
+
+* ``policies``  — the policy surface: Table-1 grammar strings, registered
+  component compositions, the component registry, the §6.1 space size.
+* ``scenarios`` — the named cluster-scenario scripts.
+* ``simulate``  — one (workload × policy × scenario) cell; prints the
+  headline metrics (optionally against the Theorem-1 bound).
+* ``sweep``     — a (workload × policy × period × scenario) grid across
+  worker processes, with optional resumable on-disk record caching.
+
+Examples::
+
+    python -m repro policies
+    python -m repro simulate --policy "GreedyPM */per/OPT=MIN/MINVT=600" \\
+        --workload lublin --jobs 100 --nodes 32 --load 0.7 --bound
+    python -m repro sweep --policies "FCFS,EASY,EASY+OPT=MIN" \\
+        --workload lublin --jobs 60 --nodes 16 --seeds 0,1 \\
+        --scenarios baseline,rack_failure --workers 4 \\
+        --out sweep.json --cache cache.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import List, Optional
+
+from . import api
+
+_METRICS = [
+    ("max_stretch", "max bounded stretch", "{:.2f}"),
+    ("mean_stretch", "mean bounded stretch", "{:.2f}"),
+    ("makespan", "makespan (s)", "{:.1f}"),
+    ("underutilization", "normalized underutilization", "{:.4f}"),
+    ("pmtn_per_job", "preemptions / job", "{:.3f}"),
+    ("mig_per_job", "migrations / job", "{:.3f}"),
+    ("bandwidth_gbps", "pmtn/mig bandwidth (GB/s)", "{:.4f}"),
+    ("events", "engine events", "{:d}"),
+]
+
+
+def _workloads_from_args(args: argparse.Namespace) -> List["api.WorkloadSpec"]:
+    try:
+        seeds = [int(s) for s in str(args.seeds).split(",") if s.strip() != ""]
+        if not seeds:
+            raise ValueError("no seeds given (use --seeds 0,1,...)")
+        loads: List[Optional[float]] = (
+            [float(x) for x in args.loads.split(",") if x.strip() != ""]
+            if args.loads else []) or [None]
+        return [
+            api.WorkloadSpec(args.workload, n_jobs=args.jobs,
+                             n_nodes=args.nodes, seed=seed, load=load)
+            for seed in seeds for load in loads
+        ]
+    except ValueError as e:
+        # covers malformed --seeds/--loads values and WorkloadSpec's own
+        # validation (e.g. load scaling on non-lublin workloads)
+        print(f"invalid workload arguments: {e}", file=sys.stderr)
+        raise SystemExit(2)
+
+
+def _csv(text: str) -> List[str]:
+    return [p.strip() for p in text.split(",") if p.strip()]
+
+
+def _cmd_policies(args: argparse.Namespace) -> int:
+    info = api.list_policies(include_paper_space=args.all)
+    if args.json:
+        print(json.dumps(info, indent=1))
+        return 0
+    print("Table-1 policies (canonical grammar strings):")
+    for name in info["table1"]:
+        print(f"  {name}")
+    print(f"\nfull §6.1 policy space: {info['n_paper_space']} combinations"
+          + ("" if args.all else "  (--all to list)"))
+    if args.all:
+        for name in info["paper_space"]:
+            print(f"  {name}")
+    print("\nregistered compositions (beyond the grammar):")
+    if not info["registered"]:
+        print("  (none)")
+    for name, desc in info["registered"].items():
+        print(f"  {name}")
+        if desc:
+            print(f"      {desc}")
+    print("\ncomponent registry (kind: names):")
+    for kind, names in info["components"].items():
+        print(f"  {kind:9s} {', '.join(names)}")
+    return 0
+
+
+def _cmd_scenarios(args: argparse.Namespace) -> int:
+    names = api.list_scenarios()
+    if args.json:
+        print(json.dumps(names, indent=1))
+        return 0
+    for name in names:
+        print(name)
+    return 0
+
+
+def _cmd_simulate(args: argparse.Namespace) -> int:
+    workloads = _workloads_from_args(args)
+    if len(workloads) > 1:
+        print("simulate runs one cell — pass a single --seeds/--loads value "
+              "(use the sweep subcommand for grids)", file=sys.stderr)
+        return 2
+    workload = workloads[0]
+    overrides = {}
+    if args.period is not None:
+        overrides["period"] = args.period
+    if args.penalty is not None:
+        overrides["penalty"] = args.penalty
+    r = api.simulate(workload, args.policy, scenario=args.scenario,
+                     **overrides)
+    if args.json:
+        import dataclasses
+        print(json.dumps(dataclasses.asdict(r), indent=1))
+        return 0
+    scen = f" × {args.scenario}" if args.scenario else ""
+    print(f"cell: {workload.name} × {r.policy}{scen}")
+    for key, label, fmt in _METRICS:
+        print(f"  {label:28s} {fmt.format(getattr(r, key))}")
+    if args.bound:
+        specs = api.make_trace(workload)
+        if args.scenario:
+            specs, _ = api.apply_scenario(args.scenario, specs,
+                                          workload.n_nodes,
+                                          seed=workload.seed)
+        bound = api.max_stretch_lower_bound(specs, workload.n_nodes)
+        deg = r.max_stretch / bound if bound > 0 else float("inf")
+        print(f"  {'Theorem-1 lower bound':28s} {bound:.2f}")
+        print(f"  {'degradation from bound':28s} {deg:.2f}")
+    return 0
+
+
+def _cmd_sweep(args: argparse.Namespace) -> int:
+    workloads = _workloads_from_args(args)
+    policies = _csv(args.policies)
+    if args.table1:
+        policies = [api.parse_policy(p).name
+                    for p in api.TABLE1_POLICIES] + policies
+    if not policies:
+        print("no policies selected (use --policies and/or --table1)",
+              file=sys.stderr)
+        return 2
+    scenarios = _csv(args.scenarios)
+    periods = [float(p) for p in _csv(args.periods)]
+    res = api.sweep(workloads, policies, scenarios, periods=periods,
+                    n_workers=args.workers, compute_bound=args.bound,
+                    cache_path=args.cache, json_path=args.out)
+    print(f"{res.n_cells} cells in {res.wall_s:.1f}s "
+          f"({res.cells_per_sec:.2f} cells/s, {res.n_workers} workers)")
+    summary = res.summary(by=args.by)
+    width = max(len(g) for g in summary)
+    print(f"{'group':{width}s}  {'cells':>5s}  {'mean stretch':>12s}  "
+          f"{'max stretch':>11s}")
+    for group, agg in summary.items():
+        print(f"{group:{width}s}  {agg['n_cells']:5d}  "
+              f"{agg['mean_mean_stretch']:12.2f}  {agg['max_max_stretch']:11.2f}")
+    if args.out:
+        print(f"artifact: {args.out}")
+    if args.cache:
+        print(f"record cache: {args.cache}")
+    return 0
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="DFRS vs batch scheduling: policies, cells, sweeps.")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("policies", help="list the policy surface")
+    p.add_argument("--all", action="store_true",
+                   help="expand the full 116-combination §6.1 space")
+    p.add_argument("--json", action="store_true", help="machine-readable")
+    p.set_defaults(fn=_cmd_policies)
+
+    p = sub.add_parser("scenarios", help="list named cluster scenarios")
+    p.add_argument("--json", action="store_true", help="machine-readable")
+    p.set_defaults(fn=_cmd_scenarios)
+
+    def add_workload_args(p: argparse.ArgumentParser, seeds_default: str):
+        p.add_argument("--workload", default="lublin",
+                       choices=list(api.WORKLOAD_KINDS),
+                       help="workload generator kind")
+        p.add_argument("--jobs", type=int, default=100, help="jobs per trace")
+        p.add_argument("--nodes", type=int, default=32, help="cluster nodes")
+        p.add_argument("--seeds", default=seeds_default,
+                       help="comma-separated trace seeds")
+        p.add_argument("--loads", default="",
+                       help="comma-separated target loads (lublin only)")
+
+    p = sub.add_parser("simulate", help="run one simulation cell")
+    p.add_argument("--policy", required=True,
+                   help="grammar string or registered composition name")
+    add_workload_args(p, seeds_default="0")
+    p.add_argument("--scenario", default=None, help="named cluster scenario")
+    p.add_argument("--period", type=float, default=None,
+                   help="periodic-pass period (s)")
+    p.add_argument("--penalty", type=float, default=None,
+                   help="rescheduling penalty (s)")
+    p.add_argument("--bound", action="store_true",
+                   help="also compute the Theorem-1 lower bound")
+    p.add_argument("--json", action="store_true", help="full SimResult JSON")
+    p.set_defaults(fn=_cmd_simulate)
+
+    p = sub.add_parser("sweep", help="run a policy × workload × scenario grid")
+    p.add_argument("--policies", default="",
+                   help="comma-separated policy strings / composition names")
+    p.add_argument("--table1", action="store_true",
+                   help="include all 14 Table-1 policies")
+    add_workload_args(p, seeds_default="0")
+    p.add_argument("--scenarios", default="baseline",
+                   help="comma-separated scenario names")
+    p.add_argument("--periods", default="600",
+                   help="comma-separated periodic-pass periods (s)")
+    p.add_argument("--workers", type=int, default=1, help="worker processes")
+    p.add_argument("--bound", action="store_true",
+                   help="compute per-cell Theorem-1 bounds")
+    p.add_argument("--by", default="policy",
+                   help="summary grouping key (default: policy)")
+    p.add_argument("--out", default=None, metavar="PATH",
+                   help="write the repro.sweep/v1 JSON artifact")
+    p.add_argument("--cache", default=None, metavar="PATH",
+                   help="resumable on-disk record cache (JSON)")
+    p.set_defaults(fn=_cmd_sweep)
+    return ap
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

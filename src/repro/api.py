@@ -1,0 +1,170 @@
+"""repro.api — the one-import facade over the whole scheduling stack.
+
+Everything the paper's evaluation needs — policy specs (grammar *and*
+component compositions), workloads, scenarios, single-cell simulation,
+parallel sweeps with resumable on-disk caching — through one module:
+
+    from repro import api
+
+    # one cell: policy grammar, a registered composition, or a Policy object
+    r = api.simulate(api.WorkloadSpec("lublin", n_jobs=300, n_nodes=64),
+                     "GreedyPM */per/OPT=MIN/MINVT=600")
+    print(r.max_stretch, r.pmtn_per_job)
+
+    # a grid, fanned over processes, cached on disk (resumable)
+    res = api.sweep(
+        [api.WorkloadSpec("lublin", n_jobs=250, n_nodes=64, seed=s)
+         for s in range(3)],
+        ["FCFS", "EASY", "GreedyP */OPT=MIN", "EASY+OPT=MIN"],
+        scenarios=["baseline", "rack_failure"],
+        n_workers=8, cache_path="experiments/results/cache.json")
+    print(res.summary(by="policy"))
+
+    # extend the policy space through the component registry
+    api.register_policy("my-hybrid", lambda: api.compose(
+        "my-hybrid", MySubmit(), api.get_component("opt", "MIN")()))
+
+The same surface is scriptable as ``python -m repro`` (``simulate``,
+``sweep``, ``policies``, ``scenarios`` subcommands).
+"""
+from __future__ import annotations
+
+import time as _time
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+
+from .core.bound import max_stretch_lower_bound
+from .core.job import JobSpec
+from .core.policies import (PolicySpec, TABLE1_POLICIES, all_paper_policies,
+                            parse_policy, render_policy)
+from .sched.cluster import ClusterEvent
+from .sched.components import (ComposedPolicy, Component, compose,
+                               compose_from_spec, get_component,
+                               list_components, register_component,
+                               register_policy, registered_policies,
+                               resolve_policy)
+from .sched.engine import Engine, Policy, SimParams, SimResult
+from .sched.scenarios import apply_scenario, list_scenarios, register_scenario
+from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_grid)
+from .workloads.registry import WORKLOAD_KINDS, WorkloadSpec, make_trace
+
+__all__ = [
+    # one-call entry points
+    "simulate", "sweep", "list_policies",
+    # policy surface
+    "PolicySpec", "parse_policy", "render_policy", "TABLE1_POLICIES",
+    "all_paper_policies", "Policy", "ComposedPolicy", "Component",
+    "compose", "compose_from_spec", "get_component", "list_components",
+    "register_component", "register_policy", "registered_policies",
+    "resolve_policy",
+    # engine + metrics
+    "Engine", "SimParams", "SimResult", "max_stretch_lower_bound",
+    # workloads + scenarios
+    "JobSpec", "WorkloadSpec", "WORKLOAD_KINDS", "make_trace",
+    "ClusterEvent", "apply_scenario", "list_scenarios", "register_scenario",
+    # sweep subsystem
+    "Cell", "SweepResult", "RecordCache", "grid", "run_grid",
+]
+
+Trace = Union[WorkloadSpec, Sequence[JobSpec]]
+PolicyLike = Union[str, PolicySpec, Policy]
+
+
+def simulate(
+    trace: Trace,
+    policy: PolicyLike,
+    params: Optional[SimParams] = None,
+    *,
+    scenario: Optional[str] = None,
+    cluster_events: Sequence[ClusterEvent] = (),
+    seed: Optional[int] = None,
+    **param_overrides: Any,
+) -> SimResult:
+    """Run one simulation cell through the unified engine.
+
+    ``trace`` is a declarative :class:`WorkloadSpec` (materialized and
+    memoized, cluster size taken from the spec — as in sweep cells) or an
+    explicit ``JobSpec`` sequence (then pass ``params`` or ``n_nodes=``).
+    ``policy`` is a grammar string (canonicalized), a registered
+    composition name, a :class:`PolicySpec`, or any :class:`Policy`
+    instance.  A named ``scenario`` perturbs the cell deterministically —
+    seeded by ``seed``, which defaults to the workload's own seed (sweep
+    cell semantics) or 0 for a raw spec list.  Extra keyword arguments
+    override :class:`SimParams` fields (e.g. ``period=1200``).
+    """
+    if scenario is not None and cluster_events:
+        raise ValueError("pass either scenario= or cluster_events=, not both")
+    explicit_n = param_overrides.pop("n_nodes", None)
+    if isinstance(trace, WorkloadSpec):
+        specs: List[JobSpec] = make_trace(trace)
+        n_nodes = explicit_n or trace.n_nodes
+        if seed is None:
+            seed = trace.seed
+    else:
+        specs = list(trace)
+        n_nodes = explicit_n or (params.n_nodes if params is not None else None)
+        if n_nodes is None:
+            raise ValueError("pass SimParams (or n_nodes=) when simulating "
+                             "a raw JobSpec list")
+        if seed is None:
+            seed = 0
+    events: Sequence[ClusterEvent] = tuple(cluster_events)
+    if scenario is not None:
+        specs, events = apply_scenario(scenario, specs, n_nodes, seed=seed)
+    if params is None:
+        params = SimParams(n_nodes=n_nodes, **param_overrides)
+    else:
+        from dataclasses import replace
+        params = replace(params, n_nodes=n_nodes, **param_overrides)
+    return Engine(specs, policy, params, cluster_events=events).run()
+
+
+def sweep(
+    workloads: Iterable[WorkloadSpec],
+    policies: Iterable[str],
+    scenarios: Iterable[str] = ("baseline",),
+    *,
+    periods: Iterable[float] = (600.0,),
+    params: Optional[SimParams] = None,
+    n_workers: int = 1,
+    compute_bound: bool = True,
+    cache_path: Optional[str] = None,
+    json_path: Optional[str] = None,
+) -> SweepResult:
+    """Evaluate a (workload × policy × period × scenario) grid in parallel.
+
+    Records are memoized in a :class:`~repro.sched.sweep.RecordCache`
+    (equivalent policy spellings share one simulated cell).  With
+    ``cache_path`` the cache lives in a JSON file rewritten atomically
+    after every miss batch, so interrupted sweeps resume where they
+    stopped and repeated sweeps over overlapping grids are incremental.
+    ``json_path`` additionally writes the plain ``repro.sweep/v1``
+    artifact.
+    """
+    workloads, policies = list(workloads), list(policies)
+    scenarios, periods = list(scenarios), [float(p) for p in periods]
+    t0 = _time.perf_counter()
+    cache = RecordCache(cache_path)
+    records = cache.sweep(workloads, policies, periods, scenarios,
+                          params=params, n_workers=n_workers,
+                          compute_bound=compute_bound)
+    res = SweepResult(records=list(records),
+                      wall_s=_time.perf_counter() - t0,
+                      n_workers=n_workers)
+    if json_path is not None:
+        res.save_json(json_path)
+    return res
+
+
+def list_policies(include_paper_space: bool = False) -> Dict[str, Any]:
+    """The policy surface: Table-1 strings (canonicalized), registered
+    component compositions, the component registry, and the size of the
+    full §6.1 space (expanded with ``include_paper_space``)."""
+    out: Dict[str, Any] = {
+        "table1": [parse_policy(p).name for p in TABLE1_POLICIES],
+        "registered": registered_policies(),
+        "components": list_components(),
+        "n_paper_space": len(all_paper_policies()),
+    }
+    if include_paper_space:
+        out["paper_space"] = [parse_policy(p).name for p in all_paper_policies()]
+    return out

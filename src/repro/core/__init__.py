@@ -12,7 +12,8 @@ from .mcb8 import mcb8, mcb8_pack, MCB8Result
 from .stretch_opt import mcb8_stretch, improve_max_stretch, improve_avg_stretch, StretchResult
 from .equipartition import equipartition_schedule, max_stretch, thm4_instance
 from .bound import max_stretch_lower_bound, stretch_feasible
-from .policies import PolicySpec, parse_policy, TABLE1_POLICIES, all_paper_policies
+from .policies import (PolicySpec, parse_policy, render_policy,
+                       TABLE1_POLICIES, all_paper_policies)
 
 __all__ = [
     "JobSpec", "JobState", "NodePool", "EngineState", "JobView",
@@ -23,5 +24,6 @@ __all__ = [
     "mcb8_stretch", "improve_max_stretch", "improve_avg_stretch", "StretchResult",
     "equipartition_schedule", "max_stretch", "thm4_instance",
     "max_stretch_lower_bound", "stretch_feasible",
-    "PolicySpec", "parse_policy", "TABLE1_POLICIES", "all_paper_policies",
+    "PolicySpec", "parse_policy", "render_policy", "TABLE1_POLICIES",
+    "all_paper_policies",
 ]

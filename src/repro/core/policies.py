@@ -13,6 +13,12 @@
 * ``MINVT``/``MINFT``: grace bound (seconds of virtual/flow time) under
   which MCB8 may pause a running job but must not *move* it.
 
+The grammar is *sugar* over the declarative :class:`PolicySpec`:
+:func:`parse_policy` canonicalizes every accepted spelling (case,
+whitespace, component order, implicit ``/OPT=MIN``) so that equivalent
+strings produce *equal* specs carrying one canonical ``name`` —
+``parse_policy(render_policy(spec)) == spec`` round-trips by construction.
+
 The 116-combination space of the paper is
 ``{none, Greedy, GreedyP, GreedyPM} x {*, } x {per, } x {OPT} x {MIN*}``
 plus the ``/stretch-per`` family; `all_paper_policies()` enumerates it.
@@ -22,9 +28,19 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional
 
-__all__ = ["PolicySpec", "parse_policy", "all_paper_policies", "TABLE1_POLICIES"]
+__all__ = [
+    "PolicySpec",
+    "parse_policy",
+    "render_policy",
+    "all_paper_policies",
+    "TABLE1_POLICIES",
+]
 
 _SUBMIT = {"": None, "greedy": "greedy", "greedyp": "greedyP", "greedypm": "greedyPM", "mcb8": "mcb8"}
+
+#: canonical spelling of each submit component (inverse of ``_SUBMIT``)
+_SUBMIT_CANON = {None: "", "greedy": "Greedy", "greedyP": "GreedyP",
+                 "greedyPM": "GreedyPM", "mcb8": "MCB8"}
 
 
 @dataclass(frozen=True)
@@ -47,10 +63,51 @@ class PolicySpec:
     def is_batch(self) -> bool:
         return self.name.upper() in ("FCFS", "EASY")
 
+    @classmethod
+    def make(
+        cls,
+        on_submit: Optional[str] = None,
+        opportunistic: bool = False,
+        periodic: Optional[str] = None,
+        opt: str = "MIN",
+        minvt: Optional[float] = None,
+        minft: Optional[float] = None,
+    ) -> "PolicySpec":
+        """Construct a spec with its canonical ``name`` computed for you."""
+        spec = cls("", on_submit, opportunistic, periodic, opt, minvt, minft)
+        return cls(render_policy(spec), on_submit, opportunistic, periodic,
+                   opt, minvt, minft)
+
+
+def render_policy(spec: PolicySpec) -> str:
+    """The canonical string spelling of ``spec`` (grammar sugar inverse).
+
+    Canonical form: ``Submit[ *][/per|/stretch-per]/OPT=X[/MINVT=s|/MINFT=s]``
+    with the submit part in its reference capitalization and ``OPT`` always
+    explicit.  ``parse_policy(render_policy(spec)) == spec`` for every spec
+    produced by :func:`parse_policy` or :meth:`PolicySpec.make`.
+    """
+    if spec.is_batch:
+        return spec.name.upper()
+    head = _SUBMIT_CANON[spec.on_submit]
+    if spec.opportunistic:
+        head = f"{head} *" if head else "*"
+    parts = [head]
+    if spec.periodic == "mcb8":
+        parts.append("per")
+    elif spec.periodic == "mcb8-stretch":
+        parts.append("stretch-per")
+    parts.append(f"OPT={spec.opt}")
+    if spec.minvt is not None:
+        parts.append(f"MINVT={spec.minvt:g}")
+    if spec.minft is not None:
+        parts.append(f"MINFT={spec.minft:g}")
+    return "/".join(parts)
+
 
 def parse_policy(name: str) -> PolicySpec:
-    if name.upper() in ("FCFS", "EASY"):
-        return PolicySpec(name.upper(), None, False, None)
+    if name.strip().upper() in ("FCFS", "EASY"):
+        return PolicySpec(name.strip().upper(), None, False, None)
     parts = name.split("/")
     head = parts[0].strip()
     opportunistic = head.endswith("*")
@@ -71,7 +128,7 @@ def parse_policy(name: str) -> PolicySpec:
         elif low == "stretch-per":
             periodic = "mcb8-stretch"
         elif low.startswith("opt="):
-            opt = p.split("=", 1)[1].upper()
+            opt = p.split("=", 1)[1].strip().upper()
         elif low.startswith("minvt="):
             minvt = float(p.split("=", 1)[1])
         elif low.startswith("minft="):
@@ -82,7 +139,8 @@ def parse_policy(name: str) -> PolicySpec:
         raise ValueError(f"unknown OPT {opt!r}")
     if opt == "MAX" and periodic != "mcb8-stretch":
         raise ValueError("OPT=MAX is only defined for /stretch-per")
-    return PolicySpec(name, on_submit, opportunistic, periodic, opt, minvt, minft)
+    return PolicySpec.make(on_submit, opportunistic, periodic, opt,
+                           minvt, minft)
 
 
 #: the 14 Table-1 combinations (with the paper's recommended parameters)
@@ -116,6 +174,5 @@ def all_paper_policies() -> List[str]:
         opts = ("MAX", "AVG") if base == "/stretch-per" else ("MIN", "AVG")
         for opt in opts:
             for lim in limits:
-                sep = "/per" if base == "" else base
                 out.append(f"{base}/OPT={opt}{lim}")
     return out

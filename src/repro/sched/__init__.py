@@ -1,7 +1,21 @@
 """repro.sched — unified scheduling engine (DFRS policies + FCFS/EASY batch
-baselines behind one event loop), evaluation metrics, cluster model, named
-cluster scenarios, and the parallel scenario-sweep subsystem."""
-from .engine import BatchPolicy, DFRSPolicy, Engine, Policy, SimParams, SimResult
+baselines behind one event loop), the composable policy-component registry,
+evaluation metrics, cluster model, named cluster scenarios, and the parallel
+scenario-sweep subsystem."""
+from .engine import (BatchPolicy, DFRSPolicy, Engine, Policy, SimParams,
+                     SimResult, make_policy, make_seed_policy)
+from .components import (
+    ComposedPolicy,
+    Component,
+    compose,
+    compose_from_spec,
+    get_component,
+    list_components,
+    register_component,
+    register_policy,
+    registered_policies,
+    resolve_policy,
+)
 from .simulator import DFRSSimulator, simulate
 from .batch import batch_schedule
 from .metrics import (
@@ -12,15 +26,19 @@ from .metrics import (
 )
 from .cluster import ClusterEvent, failure_trace
 from .scenarios import apply_scenario, list_scenarios, register_scenario
-from .sweep import Cell, SweepResult, grid, run_grid
+from .sweep import Cell, RecordCache, SweepResult, grid, run_grid
 
 __all__ = [
     "Engine", "Policy", "DFRSPolicy", "BatchPolicy",
+    "make_policy", "make_seed_policy",
+    "ComposedPolicy", "Component", "compose", "compose_from_spec",
+    "get_component", "list_components", "register_component",
+    "register_policy", "registered_policies", "resolve_policy",
     "DFRSSimulator", "SimParams", "SimResult", "simulate",
     "batch_schedule",
     "bounded_stretch", "max_bounded_stretch", "degradation_from_bound",
     "normalized_underutilization",
     "ClusterEvent", "failure_trace",
     "apply_scenario", "list_scenarios", "register_scenario",
-    "Cell", "SweepResult", "grid", "run_grid",
+    "Cell", "RecordCache", "SweepResult", "grid", "run_grid",
 ]

@@ -1,0 +1,29 @@
+"""One-shot deprecation warnings for the legacy scheduling entry points.
+
+``repro.api`` is the supported surface; the historical wrappers
+(``simulate``, ``DFRSSimulator``, ``batch_schedule``) keep working but
+announce themselves exactly once per process so long-running sweeps are
+not flooded.
+"""
+from __future__ import annotations
+
+import warnings
+
+_WARNED: set = set()
+
+
+def warn_once(name: str, replacement: str = "repro.api") -> None:
+    """Emit one DeprecationWarning per ``name`` per process."""
+    if name in _WARNED:
+        return
+    _WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use {replacement} instead",
+        DeprecationWarning,
+        stacklevel=3,
+    )
+
+
+def reset() -> None:
+    """Forget prior warnings (test hook)."""
+    _WARNED.clear()

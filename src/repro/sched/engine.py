@@ -46,7 +46,8 @@ from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_st
 from ..core.yield_alloc import allocate, allocate_incidence
 from .cluster import ClusterEvent
 
-__all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy", "BatchPolicy"]
+__all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy",
+           "BatchPolicy", "make_policy", "make_seed_policy"]
 
 _EPS = 1e-9
 
@@ -285,20 +286,25 @@ class DFRSPolicy(Policy):
         if self._stretch_yields_set:
             self._stretch_yields_set = False
             return
-        e = self.e
-        st = e.state
-        run = st.running_indices()
         opt = self.spec.opt if self.spec.opt in ("MIN", "AVG") else "MIN"
-        if alloc_kernels.reference_kernels_active():
-            views = [st.views[i] for i in run]
-            ylds = allocate([js.spec for js in views],
-                            [js.mapping for js in views],
-                            e.params.n_nodes, opt=opt)
-        else:
-            # hot path: the incrementally maintained incidence matrix already
-            # holds every running task — no mapping rescan, no table rebuild
-            ylds = allocate_incidence(st.inc.csr(), run, opt=opt)
-        st.yld[run] = ylds
+        _reallocate_yields(self.e, opt)
+
+
+def _reallocate_yields(e: "Engine", opt: str) -> None:
+    """The §4.6 yield recomputation for every running job (shared by
+    ``DFRSPolicy`` and the ``opt`` policy components)."""
+    st = e.state
+    run = st.running_indices()
+    if alloc_kernels.reference_kernels_active():
+        views = [st.views[i] for i in run]
+        ylds = allocate([js.spec for js in views],
+                        [js.mapping for js in views],
+                        e.params.n_nodes, opt=opt)
+    else:
+        # hot path: the incrementally maintained incidence matrix already
+        # holds every running task — no mapping rescan, no table rebuild
+        ylds = allocate_incidence(st.inc.csr(), run, opt=opt)
+    st.yld[run] = ylds
 
 
 class BatchPolicy(Policy):
@@ -400,6 +406,15 @@ class BatchPolicy(Policy):
 
 
 def make_policy(spec: PolicySpec) -> Policy:
+    """The engine's default policy for a spec: the canonical component
+    composition (``repro.sched.components``).  The monolithic seed classes
+    above remain importable as the bit-identity oracle."""
+    from .components import compose_from_spec
+    return compose_from_spec(spec)
+
+
+def make_seed_policy(spec: PolicySpec) -> Policy:
+    """The pre-redesign monolithic classes (golden-equivalence oracle)."""
     return BatchPolicy(spec.name) if spec.is_batch else DFRSPolicy(spec)
 
 
@@ -421,9 +436,17 @@ class Engine:
             self.policy_spec = None
             self.policy = policy
         else:
-            spec = parse_policy(policy) if isinstance(policy, str) else policy
-            self.policy_spec = spec
-            self.policy = make_policy(spec)
+            named = None
+            if isinstance(policy, str):
+                from .components import resolve_policy
+                named = resolve_policy(policy)
+            if named is not None:
+                self.policy_spec = None
+                self.policy = named
+            else:
+                spec = parse_policy(policy) if isinstance(policy, str) else policy
+                self.policy_spec = spec
+                self.policy = make_policy(spec)
         self.state = EngineState(
             sorted(specs, key=lambda s: (s.release, s.jid)),
             self.params.n_nodes,
@@ -628,12 +651,12 @@ class Engine:
         svals = list(stretches.values())
         if self.policy_spec is not None:
             name = self.policy_spec.name
-        elif isinstance(self.policy, BatchPolicy):
-            name = self.policy.algo
-        elif isinstance(self.policy, DFRSPolicy):
-            name = self.policy.spec.name
         else:
-            name = self.policy.__class__.__name__
+            # ComposedPolicy carries .name, BatchPolicy .algo, DFRSPolicy .spec
+            name = (getattr(self.policy, "name", None)
+                    or getattr(self.policy, "algo", None)
+                    or getattr(getattr(self.policy, "spec", None), "name", None)
+                    or self.policy.__class__.__name__)
         return SimResult(
             policy=name,
             completions=completions,

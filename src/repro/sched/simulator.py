@@ -4,7 +4,8 @@ Historically this module held the DFRS discrete-event simulator; the event
 loop, fluid-progress model and metrics now live in :class:`Engine`, which
 runs DFRS policies and the FCFS/EASY batch baselines through one code path.
 ``DFRSSimulator`` and ``simulate`` are kept as thin wrappers so existing
-callers and tests keep working unchanged.
+callers and tests keep working unchanged — new code should use
+``repro.api`` (both wrappers emit one DeprecationWarning per process).
 """
 from __future__ import annotations
 
@@ -12,6 +13,7 @@ from typing import Optional, Sequence
 
 from ..core.job import JobSpec
 from ..core.policies import PolicySpec, parse_policy
+from ._compat import warn_once
 from .cluster import ClusterEvent
 from .engine import Engine, SimParams, SimResult
 
@@ -28,6 +30,7 @@ class DFRSSimulator(Engine):
         params: Optional[SimParams] = None,
         cluster_events: Sequence[ClusterEvent] = (),
     ):
+        warn_once("repro.sched.simulator.DFRSSimulator")
         spec = parse_policy(policy) if isinstance(policy, str) else policy
         if spec.is_batch:
             raise ValueError("use repro.sched.batch for FCFS/EASY")
@@ -45,4 +48,5 @@ def simulate(
     Cluster events are ignored for the batch baselines (they do not model
     failures), matching the historical behaviour of this entry point.
     """
+    warn_once("repro.sched.simulator.simulate")
     return Engine(specs, policy, params, cluster_events).run()

@@ -27,17 +27,20 @@ import multiprocessing as mp
 import os
 import sys
 import time
+import dataclasses
 from dataclasses import dataclass, replace
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.bound import max_stretch_lower_bound
+from ..core.policies import parse_policy
 from ..workloads.registry import WorkloadSpec, make_trace
 from .engine import Engine, SimParams
 from .scenarios import apply_scenario
 
-__all__ = ["Cell", "SweepResult", "grid", "run_grid", "record_matches"]
+__all__ = ["Cell", "SweepResult", "RecordCache", "grid", "run_grid",
+           "record_matches"]
 
 
 def record_matches(record: Dict[str, Any], kv: Dict[str, Any]) -> bool:
@@ -120,12 +123,27 @@ class SweepResult:
         }
 
     def save_json(self, path: str) -> str:
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
-            json.dump(self.to_dict(), f, indent=1)
-        return path
+        """Write the artifact atomically (tmp file + rename), creating
+        parent directories — parallel benchmark runs never observe a torn
+        or partially written file."""
+        return _atomic_write_json(path, self.to_dict())
+
+
+def _atomic_write_json(path: str, payload: Any) -> str:
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = f"{path}.tmp.{os.getpid()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=1)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    return path
 
 
 # --------------------------------------------------------------------------- #
@@ -259,3 +277,159 @@ def run_grid(
     if json_path is not None:
         res.save_json(json_path)
     return res
+
+
+# --------------------------------------------------------------------------- #
+# resumable record cache                                                       #
+# --------------------------------------------------------------------------- #
+CACHE_SCHEMA = "repro.sweep-cache/v1"
+
+
+def _canonical_policy(policy: str) -> str:
+    """Cache identity of a policy string: the canonical grammar spelling
+    (so ``"greedy *"`` and ``"Greedy */OPT=MIN"`` share a cache slot) or
+    the verbatim name for registered compositions."""
+    try:
+        return parse_policy(policy).name
+    except ValueError:
+        return policy
+
+
+def _params_key(params: SimParams) -> Dict[str, Any]:
+    """The SimParams fields that are part of a cell's cache identity:
+    everything except ``n_nodes`` (always taken from the workload) and
+    ``period`` (already a key dimension of its own)."""
+    d = dataclasses.asdict(params)
+    d.pop("n_nodes")
+    d.pop("period")
+    return d
+
+
+def _record_key(rec: Dict[str, Any]) -> Tuple:
+    return (rec["kind"], rec["n_jobs"], rec["n_nodes"], rec["seed"],
+            rec["load"], _canonical_policy(rec["policy"]), rec["scenario"],
+            float(rec["period"]),
+            tuple(sorted(rec["sim_params"].items())))
+
+
+class RecordCache:
+    """Memoized sweep records, optionally persisted to one JSON file.
+
+    Each (workload × policy × period × scenario × SimParams template) cell
+    is simulated at most once per cache; :meth:`sweep` fans only the misses
+    through :func:`run_grid` and — when constructed with a ``path`` —
+    writes the cache back atomically after every miss batch, so an
+    interrupted benchmark run resumes where it stopped and parallel runs
+    never observe torn artifacts.  Policy strings are canonicalized for
+    cache identity, so equivalent grammar spellings share one record.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._records: Dict[Tuple, Dict[str, Any]] = {}
+        if path is not None and os.path.exists(path):
+            with open(path) as f:
+                payload = json.load(f)
+            schema = payload.get("schema") if isinstance(payload, dict) else None
+            if schema != CACHE_SCHEMA:
+                raise ValueError(
+                    f"{path} is not a {CACHE_SCHEMA} record cache (schema: "
+                    f"{schema!r}); refusing to overwrite it — pass a fresh "
+                    f"path (sweep artifacts from --out/json_path are a "
+                    f"different format)")
+            for rec in payload["records"]:
+                if "sim_params" not in rec:
+                    continue        # pre-sim_params record: re-simulate it
+                self._records[_record_key(rec)] = rec
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    @property
+    def records(self) -> List[Dict[str, Any]]:
+        return list(self._records.values())
+
+    def save(self) -> Optional[str]:
+        if self.path is None:
+            return None
+        return _atomic_write_json(self.path, {
+            "schema": CACHE_SCHEMA,
+            "n_records": len(self._records),
+            "records": self.records,
+        })
+
+    def sweep(
+        self,
+        workloads: Iterable[WorkloadSpec],
+        policies: Iterable[str],
+        periods: Iterable[float] = (600.0,),
+        scenarios: Iterable[str] = ("baseline",),
+        params: Optional[SimParams] = None,
+        n_workers: int = 1,
+        chunksize: Optional[int] = None,
+        compute_bound: bool = True,
+    ) -> List[Dict[str, Any]]:
+        """Records for the full cross product, simulating only cache misses.
+
+        A cached record without a Theorem-1 ``bound`` counts as a miss when
+        ``compute_bound`` is requested (it is re-simulated with the bound).
+        """
+        base = params or SimParams()
+        pkey_dict = _params_key(base)
+        pkey = tuple(sorted(pkey_dict.items()))
+        # materialize up front: one-pass iterables would silently empty the
+        # inner loops after the first period otherwise
+        workloads, policies = list(workloads), list(policies)
+        periods, scenarios = list(periods), list(scenarios)
+        want: List[Tuple[WorkloadSpec, str, float, str]] = [
+            (w, p, float(per), sc)
+            for per in periods for w in workloads
+            for p in policies for sc in scenarios
+        ]
+
+        def key_of(w: WorkloadSpec, p: str, per: float, sc: str) -> Tuple:
+            return (w.kind, w.n_jobs, w.n_nodes, w.seed, w.load,
+                    _canonical_policy(p), sc, per, pkey)
+
+        def hit(k: Tuple) -> bool:
+            rec = self._records.get(k)
+            return rec is not None and (not compute_bound or "bound" in rec)
+
+        # dedup misses by *canonical* key — equivalent spellings (and
+        # verbatim duplicates) of one cell must be simulated once
+        missing: List[Tuple[WorkloadSpec, str, float, str]] = []
+        missing_keys: List[Tuple] = []
+        seen: set = set()
+        for t in want:
+            k = key_of(*t)
+            if k in seen or hit(k):
+                continue
+            seen.add(k)
+            missing.append(t)
+            missing_keys.append(k)
+        # with a disk path, checkpoint the cache every few miss chunks so an
+        # interrupted sweep resumes mid-batch, not only between sweep() calls
+        step = len(missing) if self.path is None else max(4 * n_workers, 8)
+        for lo in range(0, len(missing), max(step, 1)):
+            batch = missing[lo:lo + step]
+            batch_keys = missing_keys[lo:lo + step]
+            cells = [Cell(w, p, sc, params=replace(base, period=per))
+                     for (w, p, per, sc) in batch]
+            res = run_grid(cells, n_workers=n_workers, chunksize=chunksize,
+                           compute_bound=compute_bound)
+            for k, rec in zip(batch_keys, res.records):
+                rec["sim_params"] = dict(pkey_dict)   # disk-key round-trip
+                self._records[k] = rec
+            self.save()
+        # returned records mirror run_grid semantics: "policy" is the
+        # spelling the caller asked for (so filter/summary keys match the
+        # request even when an equivalent spelling filled the cache) and
+        # "cell" is the want-order index (stable, collision-free artifacts
+        # across resumed sweeps)
+        out: List[Dict[str, Any]] = []
+        for i, t in enumerate(want):
+            rec = dict(self._records[key_of(*t)])
+            rec["policy"] = t[1]
+            rec["cell"] = i
+            out.append(rec)
+        return out

@@ -1,0 +1,360 @@
+"""repro.api facade + ``python -m repro`` CLI + compat-shim tests."""
+import dataclasses
+import json
+import os
+import warnings
+
+import pytest
+
+from repro import api
+from repro.__main__ import main as cli_main
+from repro.sched import _compat
+from repro.sched.engine import Engine, SimParams
+from repro.workloads.registry import WorkloadSpec, make_trace
+
+W_SMALL = WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=0)
+
+
+# --------------------------------------------------------------------------- #
+# facade                                                                       #
+# --------------------------------------------------------------------------- #
+def test_api_simulate_workloadspec_matches_engine():
+    r = api.simulate(W_SMALL, "GreedyP */OPT=MIN")
+    direct = Engine(make_trace(W_SMALL), "GreedyP */OPT=MIN",
+                    SimParams(n_nodes=16)).run()
+    assert dataclasses.asdict(r) == dataclasses.asdict(direct)
+
+
+def test_api_simulate_scenario_and_param_overrides():
+    r = api.simulate(W_SMALL, "/per/OPT=MIN", scenario="rack_failure",
+                     period=300.0)
+    assert set(r.completions) == set(range(30))
+    base = api.simulate(W_SMALL, "/per/OPT=MIN", period=6000.0)
+    assert r.events != base.events
+
+
+def test_api_simulate_raw_specs_needs_n_nodes():
+    specs = make_trace(W_SMALL)
+    with pytest.raises(ValueError, match="n_nodes"):
+        api.simulate(specs, "FCFS")
+    r = api.simulate(specs, "FCFS", n_nodes=16)
+    assert r.policy == "FCFS"
+
+
+def test_api_simulate_rejects_scenario_plus_events():
+    with pytest.raises(ValueError, match="not both"):
+        api.simulate(W_SMALL, "FCFS", scenario="baseline",
+                     cluster_events=[api.ClusterEvent(1.0, "fail", (0,))])
+
+
+def test_api_list_policies_surface():
+    info = api.list_policies()
+    assert len(info["table1"]) == 14
+    assert info["n_paper_space"] == 116
+    assert "EASY+OPT=MIN" in info["registered"]
+    assert set(info["components"]) == {"submit", "complete", "periodic", "opt"}
+    full = api.list_policies(include_paper_space=True)
+    assert len(full["paper_space"]) == 116
+
+
+def test_api_sweep_plain(tmp_path):
+    path = str(tmp_path / "art.json")
+    res = api.sweep([W_SMALL], ["FCFS", "GreedyP */OPT=MIN"],
+                    n_workers=1, json_path=path)
+    assert res.n_cells == 2
+    assert json.loads(open(path).read())["schema"] == "repro.sweep/v1"
+
+
+def test_api_sweep_cache_resumes_without_resimulating(tmp_path, monkeypatch):
+    cache = str(tmp_path / "cache.json")
+    res = api.sweep([W_SMALL], ["FCFS", "EASY"], cache_path=cache,
+                    n_workers=1)
+    assert res.n_cells == 2 and os.path.exists(cache)
+
+    import repro.sched.sweep as sweep_mod
+
+    def boom(*a, **kw):
+        raise AssertionError("cache miss: run_grid called on a warm cache")
+
+    monkeypatch.setattr(sweep_mod, "run_grid", boom)
+    warm = api.sweep([W_SMALL], ["FCFS", "EASY"], cache_path=cache,
+                     n_workers=1)
+    assert [r["policy"] for r in warm.records] == ["FCFS", "EASY"]
+    for a, b in zip(res.records, warm.records):
+        assert a == b
+
+
+def test_api_simulate_scenario_seed_is_respected():
+    """seed= overrides the workload's own seed for the scenario script."""
+    w = WorkloadSpec("lublin", n_jobs=60, n_nodes=16, seed=0, load=0.9)
+    a = api.simulate(w, "GreedyP */OPT=MIN", scenario="rolling_failures")
+    b = api.simulate(w, "GreedyP */OPT=MIN", scenario="rolling_failures",
+                     seed=w.seed)
+    assert dataclasses.asdict(a) == dataclasses.asdict(b)   # default = w.seed
+    outcomes = {api.simulate(w, "GreedyP */OPT=MIN",
+                             scenario="rolling_failures", seed=s).makespan
+                for s in range(6)}
+    assert len(outcomes) > 1        # varying seed= moves the failure script
+
+
+def test_record_cache_simulates_equivalent_spellings_once():
+    from repro.sched.sweep import RecordCache, _run_cell
+    import repro.sched.sweep as sweep_mod
+
+    calls = []
+    orig = _run_cell
+
+    def counting(task):
+        calls.append(task[1].policy)
+        return orig(task)
+
+    cache = RecordCache()
+    try:
+        sweep_mod._run_cell = counting
+        recs = cache.sweep([W_SMALL], ["Greedy *", "Greedy */OPT=MIN"],
+                           n_workers=1, compute_bound=False)
+    finally:
+        sweep_mod._run_cell = orig
+    assert len(calls) == 1            # one canonical cell simulated
+    # each returned record mirrors its *requested* spelling + want-order cell
+    assert [r["policy"] for r in recs] == ["Greedy *", "Greedy */OPT=MIN"]
+    assert [r["cell"] for r in recs] == [0, 1]
+    a, b = ({k: v for k, v in r.items() if k not in ("policy", "cell")}
+            for r in recs)
+    assert a == b                     # same simulated cell underneath
+
+
+def test_record_cache_params_template_is_part_of_identity(tmp_path):
+    """Different SimParams templates must not alias to one cached record."""
+    cache = str(tmp_path / "c.json")
+    a = api.sweep([W_SMALL], ["GreedyP */OPT=MIN"], cache_path=cache,
+                  params=api.SimParams(stretch_tau=10.0), n_workers=1)
+    b = api.sweep([W_SMALL], ["GreedyP */OPT=MIN"], cache_path=cache,
+                  params=api.SimParams(stretch_tau=100.0), n_workers=1)
+    assert a.records[0]["max_stretch"] != b.records[0]["max_stretch"]
+    # both templates now live in the cache; re-asking either is a hit
+    again = api.sweep([W_SMALL], ["GreedyP */OPT=MIN"], cache_path=cache,
+                      params=api.SimParams(stretch_tau=10.0), n_workers=1)
+    assert again.records[0]["max_stretch"] == a.records[0]["max_stretch"]
+
+
+def test_record_cache_refuses_foreign_json(tmp_path):
+    from repro.sched.sweep import RecordCache
+    art = tmp_path / "artifact.json"
+    res = api.run_grid(api.grid([W_SMALL], ["FCFS"]), n_workers=1)
+    res.save_json(str(art))           # a repro.sweep/v1 artifact, not a cache
+    with pytest.raises(ValueError, match="record cache"):
+        RecordCache(str(art))
+    assert json.loads(art.read_text())["schema"] == "repro.sweep/v1"  # intact
+
+
+def test_api_sweep_cache_canonicalizes_policy_spellings(tmp_path, monkeypatch):
+    cache = str(tmp_path / "cache.json")
+    api.sweep([W_SMALL], ["GreedyP */OPT=MIN"], cache_path=cache, n_workers=1)
+
+    import repro.sched.sweep as sweep_mod
+    monkeypatch.setattr(
+        sweep_mod, "run_grid",
+        lambda *a, **kw: pytest.fail("equivalent spelling missed the cache"))
+    warm = api.sweep([W_SMALL], ["greedyp */opt=min"], cache_path=cache,
+                     n_workers=1)
+    # served from cache, reported under the spelling this caller asked for
+    assert warm.records[0]["policy"] == "greedyp */opt=min"
+    assert warm.filter(policy="greedyp */opt=min")
+
+
+# --------------------------------------------------------------------------- #
+# atomic sweep artifacts                                                       #
+# --------------------------------------------------------------------------- #
+def test_save_json_creates_parents_atomically(tmp_path):
+    res = api.run_grid(api.grid([W_SMALL], ["FCFS"]), n_workers=1)
+    path = str(tmp_path / "deep" / "nested" / "sweep.json")
+    out = res.save_json(path)
+    assert out == path and os.path.exists(path)
+    assert json.loads(open(path).read())["n_cells"] == 1
+    leftovers = [f for f in os.listdir(os.path.dirname(path))
+                 if ".tmp." in f]
+    assert not leftovers          # tmp file renamed away, never left behind
+
+
+# --------------------------------------------------------------------------- #
+# deprecation shims                                                            #
+# --------------------------------------------------------------------------- #
+def _deprecations(record):
+    return [w for w in record
+            if issubclass(w.category, DeprecationWarning)
+            and "repro.api" in str(w.message)]
+
+
+def test_legacy_entry_points_warn_exactly_once():
+    from repro.sched.batch import batch_schedule
+    from repro.sched.simulator import DFRSSimulator, simulate
+
+    specs = make_trace(W_SMALL)
+    _compat.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        simulate(specs, "FCFS", SimParams(n_nodes=16))
+        simulate(specs, "EASY", SimParams(n_nodes=16))
+    assert len(_deprecations(rec)) == 1
+
+    _compat.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        batch_schedule(specs, "FCFS", SimParams(n_nodes=16))
+        batch_schedule(specs, "EASY", SimParams(n_nodes=16))
+    assert len(_deprecations(rec)) == 1
+
+    _compat.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        DFRSSimulator(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=16))
+        DFRSSimulator(specs, "GreedyP */OPT=MIN", SimParams(n_nodes=16))
+    assert len(_deprecations(rec)) == 1
+
+
+def test_api_entry_points_do_not_warn():
+    _compat.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        api.simulate(W_SMALL, "FCFS")
+    assert not _deprecations(rec)
+
+
+# --------------------------------------------------------------------------- #
+# CLI                                                                          #
+# --------------------------------------------------------------------------- #
+def test_cli_policies(capsys):
+    assert cli_main(["policies"]) == 0
+    out = capsys.readouterr().out
+    assert "GreedyPM */per/OPT=MIN" in out
+    assert "116 combinations" in out
+    assert "EASY+OPT=MIN" in out
+    assert "fcfs-queue" in out
+
+
+def test_cli_policies_json(capsys):
+    assert cli_main(["policies", "--all", "--json"]) == 0
+    info = json.loads(capsys.readouterr().out)
+    assert len(info["paper_space"]) == 116
+
+
+def test_cli_scenarios(capsys):
+    assert cli_main(["scenarios"]) == 0
+    out = capsys.readouterr().out.split()
+    assert "baseline" in out and "rack_failure" in out
+
+
+def test_cli_simulate(capsys):
+    assert cli_main([
+        "simulate", "--policy", "GreedyP */OPT=MIN",
+        "--workload", "lublin", "--jobs", "25", "--nodes", "16",
+        "--bound"]) == 0
+    out = capsys.readouterr().out
+    assert "max bounded stretch" in out and "Theorem-1 lower bound" in out
+
+
+def test_cli_simulate_json_roundtrips(capsys):
+    assert cli_main([
+        "simulate", "--policy", "EASY+OPT=MIN", "--workload", "lublin",
+        "--jobs", "20", "--nodes", "16", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["policy"] == "EASY+OPT=MIN"
+    assert len(payload["completions"]) == 20
+
+
+def test_cli_sweep_with_cache(tmp_path, capsys):
+    out_json = str(tmp_path / "sweep.json")
+    cache = str(tmp_path / "cache.json")
+    argv = ["sweep", "--policies", "FCFS,EASY+OPT=MIN",
+            "--workload", "lublin", "--jobs", "20", "--nodes", "16",
+            "--seeds", "0,1", "--out", out_json, "--cache", cache]
+    assert cli_main(argv) == 0
+    first = capsys.readouterr().out
+    assert "4 cells" in first
+    art = json.loads(open(out_json).read())
+    assert art["n_cells"] == 4
+    assert {r["policy"] for r in art["records"]} == {"FCFS", "EASY+OPT=MIN"}
+    # resumed run serves everything from the cache
+    assert cli_main(argv) == 0
+    assert "4 cells" in capsys.readouterr().out
+    assert json.loads(open(cache).read())["n_records"] == 4
+
+
+def test_cli_sweep_requires_policies(capsys):
+    assert cli_main(["sweep", "--workload", "lublin"]) == 2
+
+
+def test_cli_rejects_empty_seeds(capsys):
+    with pytest.raises(SystemExit) as exc:
+        cli_main(["simulate", "--policy", "FCFS", "--seeds", ","])
+    assert exc.value.code == 2
+    assert "no seeds" in capsys.readouterr().err
+
+
+def test_record_cache_accepts_one_pass_iterables():
+    from repro.sched.sweep import RecordCache
+    recs = RecordCache().sweep(
+        (w for w in [W_SMALL]), iter(["FCFS"]),
+        periods=iter([600.0, 1200.0]), n_workers=1, compute_bound=False)
+    assert len(recs) == 2             # generator inputs must not truncate
+
+
+def test_cli_simulate_rejects_multiple_seeds(capsys):
+    assert cli_main(["simulate", "--policy", "FCFS",
+                     "--seeds", "0,1,2"]) == 2
+    assert "one cell" in capsys.readouterr().err
+
+
+def test_cli_rejects_invalid_loads(capsys):
+    with pytest.raises(SystemExit) as exc:
+        cli_main(["simulate", "--policy", "FCFS", "--workload", "hpc2n",
+                  "--loads", "0.7"])
+    assert exc.value.code == 2
+    assert "lublin" in capsys.readouterr().err
+
+
+def test_record_cache_checkpoints_mid_batch(tmp_path, monkeypatch):
+    """With a disk path, a sweep interrupted mid-batch keeps the chunks
+    already simulated — the re-run resumes instead of starting over."""
+    from repro.sched.sweep import RecordCache
+    import repro.sched.sweep as sweep_mod
+
+    cache_path = str(tmp_path / "c.json")
+    workloads = [WorkloadSpec("lublin", n_jobs=15, n_nodes=16, seed=s)
+                 for s in range(3)]
+    orig = sweep_mod.run_grid
+    calls = []
+
+    def failing_second_chunk(cells, **kw):
+        calls.append(len(cells))
+        if len(calls) == 2:
+            raise KeyboardInterrupt("simulated ctrl-c mid-sweep")
+        return orig(cells, **kw)
+
+    # chunk size floor is max(4*n_workers, 8) = 8 -> 9 cells = 2 chunks
+    monkeypatch.setattr(sweep_mod, "run_grid", failing_second_chunk)
+    with pytest.raises(KeyboardInterrupt):
+        RecordCache(cache_path).sweep(
+            workloads, ["FCFS", "EASY", "GreedyP */OPT=MIN"],
+            n_workers=1, compute_bound=False)
+    assert len(json.loads(open(cache_path).read())["records"]) == 8
+
+    monkeypatch.setattr(sweep_mod, "run_grid", orig)
+    resumed = RecordCache(cache_path)
+    assert len(resumed) == 8          # first chunk survived the interrupt
+    recs = resumed.sweep(workloads, ["FCFS", "EASY", "GreedyP */OPT=MIN"],
+                         n_workers=1, compute_bound=False)
+    assert len(recs) == 9             # only the last cell was re-simulated
+
+
+def test_resumed_sweep_grows_artifact_with_unique_cells(tmp_path):
+    cache = str(tmp_path / "c.json")
+    api.sweep([W_SMALL], ["FCFS", "EASY"], cache_path=cache, n_workers=1)
+    grown = api.sweep([W_SMALL], ["FCFS", "EASY", "GreedyP */OPT=MIN"],
+                      cache_path=cache, n_workers=1,
+                      json_path=str(tmp_path / "art.json"))
+    art = json.loads(open(tmp_path / "art.json").read())
+    cells = [r["cell"] for r in art["records"]]
+    assert cells == [0, 1, 2]         # want-order, no stale/colliding ids
+    assert len(grown.filter(policy="GreedyP */OPT=MIN")) == 1
