@@ -21,7 +21,7 @@ from dataclasses import dataclass
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.sched.sweep import RecordCache, record_matches
-from repro.workloads.registry import WorkloadSpec
+from repro.workloads.registry import WorkloadSpec, parse_workload
 
 RESULTS_DIR = "experiments/results"
 
@@ -68,12 +68,18 @@ FULL = Scale(n_traces=10, n_jobs=1000, n_nodes=128,
              fig_loads=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9))
 
 
-def workload_specs(kind: str, scale: Scale) -> List[WorkloadSpec]:
+def workload_specs(kind: str, scale: Scale,
+                   swf_path: Optional[str] = None) -> List[WorkloadSpec]:
     """The paper's three trace sets (§5.3) as declarative sweep workloads:
-    ``real`` (HPC2N-like on 128 nodes), ``unscaled`` (Lublin), ``scaled``
-    (Lublin rescaled to each target load)."""
+    ``real`` (HPC2N-like on 128 nodes — or the actual log when an swf path
+    is given, as in ``benchmarks.run --swf``), ``unscaled`` (Lublin),
+    ``scaled`` (Lublin rescaled to each target load)."""
     s = scale
     if kind == "real":
+        if swf_path:
+            # one deterministic real trace replaces the synthetic seeds
+            return [parse_workload(f"swf:{swf_path}", n_jobs=s.n_jobs,
+                                   n_nodes=128)]
         return [WorkloadSpec("hpc2n", n_jobs=s.n_jobs, n_nodes=128, seed=seed)
                 for seed in range(s.n_traces)]
     if kind == "unscaled":
@@ -88,8 +94,12 @@ def workload_specs(kind: str, scale: Scale) -> List[WorkloadSpec]:
 
 
 def records_for(records: Sequence[dict], kind: str, **kv) -> List[dict]:
-    """Filter sweep records down to one of the trace sets of §5.3."""
-    sel = {"real": lambda r: r["kind"] == "hpc2n",
+    """Filter sweep records down to one of the trace sets of §5.3.
+
+    The "real" set is the synthetic hpc2n generator by default and the
+    actual log (kind ``swf``) under ``benchmarks.run --swf`` — both count.
+    """
+    sel = {"real": lambda r: r["kind"] in ("hpc2n", "swf"),
            "unscaled": lambda r: r["kind"] == "lublin" and r["load"] is None,
            "scaled": lambda r: r["kind"] == "lublin" and r["load"] is not None}[kind]
     return [r for r in records if sel(r) and record_matches(r, kv)]
@@ -109,14 +119,17 @@ class Bench:
     interrupted benchmark runs resumable across processes.
     """
 
-    def __init__(self, scale: Scale, cache_path: Optional[str] = None):
+    def __init__(self, scale: Scale, cache_path: Optional[str] = None,
+                 swf_path: Optional[str] = None):
         self.scale = scale
+        self.swf_path = swf_path
         self._cache = RecordCache(cache_path)
         self._workloads: Dict[str, List[WorkloadSpec]] = {}
 
     def workloads(self, kind: str) -> List[WorkloadSpec]:
         if kind not in self._workloads:
-            self._workloads[kind] = workload_specs(kind, self.scale)
+            self._workloads[kind] = workload_specs(kind, self.scale,
+                                                   swf_path=self.swf_path)
         return self._workloads[kind]
 
     def sweep(

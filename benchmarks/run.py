@@ -4,6 +4,11 @@ TPU-cluster benches.
     PYTHONPATH=src python -m benchmarks.run            # quick scale
     PYTHONPATH=src python -m benchmarks.run --full     # paper scale
     PYTHONPATH=src python -m benchmarks.run --only table2,roofline
+    PYTHONPATH=src python -m benchmarks.run --swf /data/HPC2N-2002-2.2-cln.swf
+
+With ``--swf`` the "real" trace set is the actual Parallel Workloads
+Archive log (through the §5.3.1 preprocessing) instead of the synthetic
+HPC2N-like generator.
 """
 from __future__ import annotations
 
@@ -36,10 +41,14 @@ def main() -> int:
     ap.add_argument("--cache", default=None, metavar="PATH",
                     help="persist the shared sweep-record cache to PATH "
                          "(resumable across interrupted runs)")
+    ap.add_argument("--swf", default=None, metavar="PATH",
+                    help="use this real Parallel Workloads Archive log as "
+                         "the 'real' trace set (hpc2n synthetic otherwise)")
     args = ap.parse_args()
 
     names = [n.strip() for n in args.only.split(",") if n.strip()] or list(BENCHES)
-    bench = Bench(FULL if args.full else QUICK, cache_path=args.cache)
+    bench = Bench(FULL if args.full else QUICK, cache_path=args.cache,
+                  swf_path=args.swf)
     failed = []
     t_all = time.time()
     for name in names:

@@ -2,22 +2,35 @@
 
 Subcommands (all built on :mod:`repro.api`):
 
-* ``policies``  — the policy surface: Table-1 grammar strings, registered
+* ``policies``    — the policy surface: Table-1 grammar strings, registered
   component compositions, the component registry, the §6.1 space size.
-* ``scenarios`` — the named cluster-scenario scripts.
-* ``simulate``  — one (workload × policy × scenario) cell; prints the
+* ``workloads``   — the registered workload kinds (the Trace-IR registry)
+  with their knob contracts.
+* ``scenarios``   — the named cluster-scenario transforms (composable with
+  the ``+`` chain grammar).
+* ``simulate``    — one (workload × policy × scenario) cell; prints the
   headline metrics (optionally against the Theorem-1 bound).
-* ``sweep``     — a (workload × policy × period × scenario) grid across
+* ``sweep``       — a (workload × policy × period × scenario) grid across
   worker processes, with optional resumable on-disk record caching.
+* ``trace-smoke`` — materialize every registered workload kind × every
+  scenario at a small size and emit the content fingerprints (CI runs it
+  in two processes and diffs the output).
+
+The ``--workload`` argument accepts any registered kind, including the
+``kind:<arg>`` spelling (``swf:<path>`` = a real Parallel Workloads Archive
+log); ``--scenarios`` accepts ``+``-composed chains.
 
 Examples::
 
     python -m repro policies
+    python -m repro workloads
     python -m repro simulate --policy "GreedyPM */per/OPT=MIN/MINVT=600" \\
         --workload lublin --jobs 100 --nodes 32 --load 0.7 --bound
+    python -m repro simulate --policy EASY --workload swf:tests/data/mini.swf \\
+        --nodes 128 --scenario rack_failure+arrival_burst
     python -m repro sweep --policies "FCFS,EASY,EASY+OPT=MIN" \\
         --workload lublin --jobs 60 --nodes 16 --seeds 0,1 \\
-        --scenarios baseline,rack_failure --workers 4 \\
+        --scenarios baseline,rack_failure+arrival_burst --workers 4 \\
         --out sweep.json --cache cache.json
 """
 from __future__ import annotations
@@ -50,13 +63,14 @@ def _workloads_from_args(args: argparse.Namespace) -> List["api.WorkloadSpec"]:
             [float(x) for x in args.loads.split(",") if x.strip() != ""]
             if args.loads else []) or [None]
         return [
-            api.WorkloadSpec(args.workload, n_jobs=args.jobs,
-                             n_nodes=args.nodes, seed=seed, load=load)
+            api.parse_workload(args.workload, n_jobs=args.jobs,
+                               n_nodes=args.nodes, seed=seed, load=load)
             for seed in seeds for load in loads
         ]
     except ValueError as e:
         # covers malformed --seeds/--loads values and WorkloadSpec's own
-        # validation (e.g. load scaling on non-lublin workloads)
+        # validation (e.g. load scaling on kinds that ignore it, unknown
+        # kinds, missing kind params like swf's path)
         print(f"invalid workload arguments: {e}", file=sys.stderr)
         raise SystemExit(2)
 
@@ -92,12 +106,81 @@ def _cmd_policies(args: argparse.Namespace) -> int:
 
 
 def _cmd_scenarios(args: argparse.Namespace) -> int:
-    names = api.list_scenarios()
+    docs = api.scenario_docs()
     if args.json:
-        print(json.dumps(names, indent=1))
+        print(json.dumps(docs, indent=1))
         return 0
-    for name in names:
-        print(name)
+    width = max(len(n) for n in docs)
+    for name, doc in docs.items():
+        print(f"{name:{width}s}  {doc}")
+    print("\nscenarios compose with '+': e.g. rack_failure+arrival_burst "
+          "(applied left to right, cluster scripts concatenated)")
+    return 0
+
+
+def _cmd_workloads(args: argparse.Namespace) -> int:
+    kinds = {}
+    for name in api.list_workloads():
+        wk = api.workload_kind(name)
+        kinds[name] = {
+            "doc": wk.doc,
+            "supports_load": wk.supports_load,
+            "params": list(wk.params),
+            "required": list(wk.required),
+            "cli": f"{name}:<{wk.path_param}>" if wk.path_param else name,
+        }
+    if args.json:
+        print(json.dumps(kinds, indent=1))
+        return 0
+    width = max(len(v["cli"]) for v in kinds.values())
+    for name, info in kinds.items():
+        flags = []
+        if info["supports_load"]:
+            flags.append("load=")
+        flags += [f"params[{p}]=" for p in info["params"]]
+        suffix = f"  ({', '.join(flags)})" if flags else ""
+        print(f"{info['cli']:{width}s}  {info['doc']}{suffix}")
+    return 0
+
+
+def _cmd_trace_smoke(args: argparse.Namespace) -> int:
+    """Materialize every registered workload kind × every scenario at a
+    small size; emit {cell: fingerprint} JSON (stable across processes) to
+    stdout and the materialization wall time to stderr."""
+    import time
+
+    workloads, skipped = [], []
+    for kind in api.list_workloads():
+        wk = api.workload_kind(kind)
+        if wk.required:
+            if kind == "swf" and args.swf:
+                workloads.append(api.parse_workload(
+                    f"swf:{args.swf}", n_jobs=args.jobs, n_nodes=args.nodes))
+            else:
+                # required-param kinds cannot be materialized blind — say
+                # so instead of silently shrinking the smoke matrix
+                skipped.append(f"{kind} (requires params "
+                               f"{list(wk.required)})")
+            continue
+        workloads.append(api.WorkloadSpec(kind, n_jobs=args.jobs,
+                                          n_nodes=args.nodes, seed=0))
+    if skipped:
+        print(f"skipped kinds: {', '.join(skipped)}", file=sys.stderr)
+    scenarios = api.list_scenarios() + [args.chain]
+    fingerprints = {}
+    t0 = time.perf_counter()
+    for w in workloads:
+        base = api.make_trace_ir(w)
+        fingerprints[f"{w.name} × (workload)"] = base.fingerprint
+        for sc in scenarios:
+            tr, _events = api.apply_scenario_trace(sc, base, w.n_nodes,
+                                                   seed=w.seed)
+            fingerprints[f"{w.name} × {sc}"] = tr.fingerprint
+    wall = time.perf_counter() - t0
+    print(json.dumps(fingerprints, indent=1))
+    print(f"{len(fingerprints)} traces ({len(workloads)} workloads x "
+          f"{len(scenarios)} scenarios) materialized in {wall:.2f}s",
+          file=sys.stderr)
     return 0
 
 
@@ -183,10 +266,26 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--json", action="store_true", help="machine-readable")
     p.set_defaults(fn=_cmd_scenarios)
 
+    p = sub.add_parser("workloads", help="list registered workload kinds")
+    p.add_argument("--json", action="store_true", help="machine-readable")
+    p.set_defaults(fn=_cmd_workloads)
+
+    p = sub.add_parser(
+        "trace-smoke",
+        help="materialize every workload kind x scenario; print fingerprints")
+    p.add_argument("--jobs", type=int, default=25, help="jobs per trace")
+    p.add_argument("--nodes", type=int, default=16, help="cluster nodes")
+    p.add_argument("--swf", default=None, metavar="PATH",
+                   help="also smoke the swf kind against this log")
+    p.add_argument("--chain", default="rack_failure+arrival_burst",
+                   help="composed scenario chain to include")
+    p.set_defaults(fn=_cmd_trace_smoke)
+
     def add_workload_args(p: argparse.ArgumentParser, seeds_default: str):
         p.add_argument("--workload", default="lublin",
-                       choices=list(api.WORKLOAD_KINDS),
-                       help="workload generator kind")
+                       help="registered workload kind, optionally with a "
+                            "kind:<arg> payload (e.g. swf:<path>); see "
+                            "`python -m repro workloads`")
         p.add_argument("--jobs", type=int, default=100, help="jobs per trace")
         p.add_argument("--nodes", type=int, default=32, help="cluster nodes")
         p.add_argument("--seeds", default=seeds_default,
@@ -198,7 +297,9 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--policy", required=True,
                    help="grammar string or registered composition name")
     add_workload_args(p, seeds_default="0")
-    p.add_argument("--scenario", default=None, help="named cluster scenario")
+    p.add_argument("--scenario", default=None,
+                   help="named cluster scenario, composable with '+' "
+                        "(e.g. rack_failure+arrival_burst)")
     p.add_argument("--period", type=float, default=None,
                    help="periodic-pass period (s)")
     p.add_argument("--penalty", type=float, default=None,
@@ -215,7 +316,8 @@ def build_parser() -> argparse.ArgumentParser:
                    help="include all 14 Table-1 policies")
     add_workload_args(p, seeds_default="0")
     p.add_argument("--scenarios", default="baseline",
-                   help="comma-separated scenario names")
+                   help="comma-separated scenario names; each may be a "
+                        "'+' chain (e.g. rack_failure+arrival_burst)")
     p.add_argument("--periods", default="600",
                    help="comma-separated periodic-pass periods (s)")
     p.add_argument("--workers", type=int, default=1, help="worker processes")

@@ -11,12 +11,15 @@ parallel sweeps with resumable on-disk caching — through one module:
                      "GreedyPM */per/OPT=MIN/MINVT=600")
     print(r.max_stretch, r.pmtn_per_job)
 
-    # a grid, fanned over processes, cached on disk (resumable)
+    # a grid, fanned over processes, cached on disk (resumable); workloads
+    # come from the open registry (swf:<path> = a real PWA log), scenarios
+    # compose with the "+" chain grammar
     res = api.sweep(
         [api.WorkloadSpec("lublin", n_jobs=250, n_nodes=64, seed=s)
-         for s in range(3)],
+         for s in range(3)]
+        + [api.parse_workload("swf:/data/HPC2N-2002.swf", n_nodes=128)],
         ["FCFS", "EASY", "GreedyP */OPT=MIN", "EASY+OPT=MIN"],
-        scenarios=["baseline", "rack_failure"],
+        scenarios=["baseline", "rack_failure+arrival_burst"],
         n_workers=8, cache_path="experiments/results/cache.json")
     print(res.summary(by="policy"))
 
@@ -30,7 +33,7 @@ The same surface is scriptable as ``python -m repro`` (``simulate``,
 from __future__ import annotations
 
 import time as _time
-from typing import Any, Dict, Iterable, List, Optional, Sequence, Union
+from typing import Any, Dict, Iterable, Optional, Sequence, Union
 
 from .core.bound import max_stretch_lower_bound
 from .core.job import JobSpec
@@ -43,9 +46,23 @@ from .sched.components import (ComposedPolicy, Component, compose,
                                register_policy, registered_policies,
                                resolve_policy)
 from .sched.engine import Engine, Policy, SimParams, SimResult
-from .sched.scenarios import apply_scenario, list_scenarios, register_scenario
+from .sched.scenarios import (apply_scenario, apply_scenario_trace,
+                              list_scenarios, parse_scenario_chain,
+                              register_scenario, scenario_docs)
 from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_grid)
-from .workloads.registry import WORKLOAD_KINDS, WorkloadSpec, make_trace
+from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
+                                 make_trace_ir, parse_workload,
+                                 register_workload, workload_kind)
+from .workloads.trace import Trace, as_trace
+
+
+def __getattr__(name):
+    # live view over the open registry: kinds registered after this module
+    # imported still appear (a static re-export would freeze a snapshot)
+    if name == "WORKLOAD_KINDS":
+        from .workloads.registry import WORKLOAD_KINDS
+        return WORKLOAD_KINDS
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     # one-call entry points
@@ -58,19 +75,23 @@ __all__ = [
     "resolve_policy",
     # engine + metrics
     "Engine", "SimParams", "SimResult", "max_stretch_lower_bound",
-    # workloads + scenarios
-    "JobSpec", "WorkloadSpec", "WORKLOAD_KINDS", "make_trace",
-    "ClusterEvent", "apply_scenario", "list_scenarios", "register_scenario",
+    # workloads (columnar Trace IR + open registry) + scenarios
+    "JobSpec", "Trace", "as_trace", "WorkloadSpec", "WORKLOAD_KINDS",
+    "make_trace", "make_trace_ir", "parse_workload", "register_workload",
+    "workload_kind", "list_workloads",
+    "ClusterEvent", "apply_scenario", "apply_scenario_trace",
+    "parse_scenario_chain", "list_scenarios", "scenario_docs",
+    "register_scenario",
     # sweep subsystem
     "Cell", "SweepResult", "RecordCache", "grid", "run_grid",
 ]
 
-Trace = Union[WorkloadSpec, Sequence[JobSpec]]
+TraceLike = Union[WorkloadSpec, Trace, Sequence[JobSpec]]
 PolicyLike = Union[str, PolicySpec, Policy]
 
 
 def simulate(
-    trace: Trace,
+    trace: TraceLike,
     policy: PolicyLike,
     params: Optional[SimParams] = None,
     *,
@@ -82,40 +103,42 @@ def simulate(
     """Run one simulation cell through the unified engine.
 
     ``trace`` is a declarative :class:`WorkloadSpec` (materialized and
-    memoized, cluster size taken from the spec — as in sweep cells) or an
-    explicit ``JobSpec`` sequence (then pass ``params`` or ``n_nodes=``).
-    ``policy`` is a grammar string (canonicalized), a registered
-    composition name, a :class:`PolicySpec`, or any :class:`Policy`
-    instance.  A named ``scenario`` perturbs the cell deterministically —
-    seeded by ``seed``, which defaults to the workload's own seed (sweep
-    cell semantics) or 0 for a raw spec list.  Extra keyword arguments
-    override :class:`SimParams` fields (e.g. ``period=1200``).
+    memoized, cluster size taken from the spec — as in sweep cells), a
+    columnar :class:`Trace`, or an explicit ``JobSpec`` sequence (for the
+    latter two pass ``params`` or ``n_nodes=``).  ``policy`` is a grammar
+    string (canonicalized), a registered composition name, a
+    :class:`PolicySpec`, or any :class:`Policy` instance.  A named
+    ``scenario`` — possibly a ``"a+b"`` chain — perturbs the cell
+    deterministically via vectorized Trace transforms, seeded by ``seed``,
+    which defaults to the workload's own seed (sweep cell semantics) or 0
+    for a raw trace.  Extra keyword arguments override :class:`SimParams`
+    fields (e.g. ``period=1200``).
     """
     if scenario is not None and cluster_events:
         raise ValueError("pass either scenario= or cluster_events=, not both")
     explicit_n = param_overrides.pop("n_nodes", None)
     if isinstance(trace, WorkloadSpec):
-        specs: List[JobSpec] = make_trace(trace)
+        tr = make_trace_ir(trace)
         n_nodes = explicit_n or trace.n_nodes
         if seed is None:
             seed = trace.seed
     else:
-        specs = list(trace)
+        tr = as_trace(trace)
         n_nodes = explicit_n or (params.n_nodes if params is not None else None)
         if n_nodes is None:
             raise ValueError("pass SimParams (or n_nodes=) when simulating "
-                             "a raw JobSpec list")
+                             "a raw trace")
         if seed is None:
             seed = 0
     events: Sequence[ClusterEvent] = tuple(cluster_events)
     if scenario is not None:
-        specs, events = apply_scenario(scenario, specs, n_nodes, seed=seed)
+        tr, events = apply_scenario_trace(scenario, tr, n_nodes, seed=seed)
     if params is None:
         params = SimParams(n_nodes=n_nodes, **param_overrides)
     else:
         from dataclasses import replace
         params = replace(params, n_nodes=n_nodes, **param_overrides)
-    return Engine(specs, policy, params, cluster_events=events).run()
+    return Engine(tr, policy, params, cluster_events=events).run()
 
 
 def sweep(

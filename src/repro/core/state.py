@@ -11,9 +11,19 @@ Policy modules (``core.greedy``, ``core.mcb8``, ``core.stretch_opt``) are
 written against the ``JobState`` object interface; ``JobView`` is a
 zero-copy proxy with the same attribute surface whose reads/writes go
 straight to the arrays, so policies run unchanged on top of the SoA core.
+
+``EngineState.from_trace`` is the array-native constructor: a columnar
+:class:`repro.workloads.trace.Trace` shares its layout with this state, so
+the hot-loop arrays (proc_time / cpu_need / demand) ingest whole columns —
+sorting is one ``lexsort``, demand one vectorized product — with no
+per-spec Python loop.  The ``JobSpec`` object graph survives only at the
+policy boundary (``JobView.spec``) and is rebuilt once per *trace* (not per
+engine): traces are frozen and content-hashed, so the spec lists memoize
+safely across the policy cells of a sweep.
 """
 from __future__ import annotations
 
+from functools import lru_cache
 from typing import List, Optional, Sequence
 
 import numpy as np
@@ -159,6 +169,14 @@ class JobView:
         return int(self._st.status[self.i]) == S_RUNNING
 
 
+@lru_cache(maxsize=64)
+def _specs_of(trace) -> tuple:
+    """Policy-boundary ``JobSpec`` objects for a (sorted) trace, memoized by
+    the trace's content fingerprint — the cells of a policy sweep share one
+    spec list per trace instead of rebuilding the object graph per engine."""
+    return tuple(trace.to_specs())
+
+
 class EngineState:
     """All dynamic job state of one simulation, as flat arrays.
 
@@ -169,13 +187,29 @@ class EngineState:
 
     def __init__(self, specs: Sequence[JobSpec], n_nodes: int):
         self.specs = list(specs)
-        n = len(self.specs)
         self.proc_time = np.array([s.proc_time for s in self.specs], dtype=np.float64)
         self.cpu_need = np.array([s.cpu_need for s in self.specs], dtype=np.float64)
         # per-job demand, n_tasks * cpu_need — reused every advance
         self.demand = np.array(
             [s.n_tasks * s.cpu_need for s in self.specs], dtype=np.float64)
+        self._init_dynamic(n_nodes)
 
+    @classmethod
+    def from_trace(cls, trace, n_nodes: int) -> "EngineState":
+        """Array-native construction from a columnar Trace: the hot-loop
+        arrays are whole-column copies (ordering by one lexsort), and the
+        policy-facing ``JobSpec`` list is memoized per trace fingerprint."""
+        trace = trace.sorted_by_release()
+        st = cls.__new__(cls)
+        st.specs = list(_specs_of(trace))
+        st.proc_time = trace.proc_time.astype(np.float64)     # writable copy
+        st.cpu_need = trace.cpu_need.astype(np.float64)
+        st.demand = trace.n_tasks * trace.cpu_need
+        st._init_dynamic(n_nodes)
+        return st
+
+    def _init_dynamic(self, n_nodes: int) -> None:
+        n = len(self.specs)
         self.vt = np.zeros(n)
         self.yld = np.zeros(n)
         self.penalty_until = np.full(n, -np.inf)

@@ -25,7 +25,9 @@ from .metrics import (
     normalized_underutilization,
 )
 from .cluster import ClusterEvent, failure_trace
-from .scenarios import apply_scenario, list_scenarios, register_scenario
+from .scenarios import (apply_scenario, apply_scenario_trace,
+                        list_scenarios, parse_scenario_chain,
+                        register_scenario, scenario_docs)
 from .sweep import Cell, RecordCache, SweepResult, grid, run_grid
 
 __all__ = [
@@ -39,6 +41,7 @@ __all__ = [
     "bounded_stretch", "max_bounded_stretch", "degradation_from_bound",
     "normalized_underutilization",
     "ClusterEvent", "failure_trace",
-    "apply_scenario", "list_scenarios", "register_scenario",
+    "apply_scenario", "apply_scenario_trace", "parse_scenario_chain",
+    "list_scenarios", "scenario_docs", "register_scenario",
     "Cell", "RecordCache", "SweepResult", "grid", "run_grid",
 ]

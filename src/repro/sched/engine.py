@@ -44,6 +44,7 @@ from ..core.policies import PolicySpec, parse_policy
 from ..core.state import EngineState, JobView, S_COMPLETED, S_PENDING
 from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
 from ..core.yield_alloc import allocate, allocate_incidence
+from ..workloads.trace import Trace
 from .cluster import ClusterEvent
 
 __all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy",
@@ -426,7 +427,7 @@ class Engine:
 
     def __init__(
         self,
-        specs: Sequence[JobSpec],
+        specs: Sequence[JobSpec] | Trace,
         policy: PolicySpec | str | Policy,
         params: Optional[SimParams] = None,
         cluster_events: Sequence[ClusterEvent] = (),
@@ -447,10 +448,14 @@ class Engine:
                 spec = parse_policy(policy) if isinstance(policy, str) else policy
                 self.policy_spec = spec
                 self.policy = make_policy(spec)
-        self.state = EngineState(
-            sorted(specs, key=lambda s: (s.release, s.jid)),
-            self.params.n_nodes,
-        )
+        if isinstance(specs, Trace):
+            # array-native ingest: columns feed the SoA state directly
+            self.state = EngineState.from_trace(specs, self.params.n_nodes)
+        else:
+            self.state = EngineState(
+                sorted(specs, key=lambda s: (s.release, s.jid)),
+                self.params.n_nodes,
+            )
         self.cluster_events = sorted(cluster_events, key=lambda e: e.time)
         self.bytes_moved_gb = 0.0
         self.n_pmtn = 0

@@ -1,10 +1,21 @@
-"""Named cluster-scenario scripts for sweeps, benchmarks and examples.
+"""Named cluster-scenario transforms for sweeps, benchmarks and examples.
 
-A *scenario* perturbs one simulation cell deterministically (given a seed):
-it may inject :class:`ClusterEvent` scripts (node failures, elastic capacity
-changes) and/or transform the trace itself (arrival bursts, memory
-pressure).  Benchmarks and examples refer to scenarios by name instead of
-hand-rolling ``ClusterEvent`` lists, and sweep cells carry just the name.
+A *scenario* perturbs one simulation cell deterministically (given a seed).
+Since the Trace-IR refactor a builder is a **vectorized transform over the
+columnar trace**: ``(Trace, n_nodes, rng) -> (Trace, [ClusterEvent])`` — it
+may inject :class:`ClusterEvent` scripts (node failures, elastic capacity
+changes) and/or rewrite whole trace columns (arrival bursts, memory
+pressure) without any per-job Python loop.  Benchmarks and examples refer
+to scenarios by name instead of hand-rolling ``ClusterEvent`` lists, and
+sweep cells carry just the name.
+
+Scenario names **compose with the ``+`` chain grammar**: the cell name
+``"rack_failure+arrival_burst"`` applies ``rack_failure`` to the workload
+trace, then ``arrival_burst`` to the result, concatenating the cluster
+scripts.  Each link draws from its own name-salted RNG stream, so a link
+produces the same perturbation whether it runs alone or inside a chain,
+and every timing is relative to the span of the trace the link *receives*
+(later links see earlier links' rewrites).
 
 Built-ins (all timed relative to the trace's release span, so they scale
 with any workload):
@@ -23,36 +34,44 @@ with any workload):
 * ``mem_pressure``      — a random half of the jobs needs 1.5× memory
                           (capped at a full node), stressing the packer.
 
-Use :func:`apply_scenario` to materialize ``(specs, cluster_events)`` for a
-cell, or :func:`register_scenario` to add project-specific scripts.
+Use :func:`apply_scenario_trace` (columnar) or :func:`apply_scenario`
+(``JobSpec``-list compatibility wrapper) to materialize a cell, and
+:func:`register_scenario` to add project-specific transforms.
 """
 from __future__ import annotations
 
-from dataclasses import replace
 from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from ..core.job import JobSpec
+from ..workloads.trace import Trace
 from .cluster import ClusterEvent, failure_trace
 
 __all__ = [
     "SCENARIOS",
     "apply_scenario",
+    "apply_scenario_trace",
+    "parse_scenario_chain",
     "register_scenario",
     "list_scenarios",
+    "scenario_docs",
 ]
 
-# a scenario builder: (specs, n_nodes, rng) -> (specs, cluster_events)
+# a scenario builder: (trace, n_nodes, rng) -> (trace, cluster_events)
 Builder = Callable[
-    [List[JobSpec], int, np.random.Generator],
-    Tuple[List[JobSpec], List[ClusterEvent]],
+    [Trace, int, np.random.Generator],
+    Tuple[Trace, List[ClusterEvent]],
 ]
 
 SCENARIOS: Dict[str, Builder] = {}
 
 
 def register_scenario(name: str):
+    if "+" in name:
+        raise ValueError(f"scenario names must not contain '+' (reserved "
+                         f"for the chain grammar): {name!r}")
+
     def deco(fn: Builder) -> Builder:
         if name in SCENARIOS:
             raise ValueError(f"scenario {name!r} already registered")
@@ -65,17 +84,62 @@ def list_scenarios() -> List[str]:
     return sorted(SCENARIOS)
 
 
+def scenario_docs() -> Dict[str, str]:
+    """name -> first docstring line of the registered builder."""
+    return {name: (fn.__doc__ or "").strip().split("\n")[0]
+            for name, fn in sorted(SCENARIOS.items())}
+
+
+def parse_scenario_chain(name: str) -> List[str]:
+    """Split a ``"a+b+c"`` chain and validate every link is registered."""
+    links = [part.strip() for part in name.split("+")]
+    if not links or any(not p for p in links):
+        raise KeyError(f"malformed scenario chain {name!r}")
+    for link in links:
+        if link not in SCENARIOS:
+            raise KeyError(
+                f"unknown scenario {link!r}; known: {list_scenarios()}")
+    return links
+
+
+def apply_scenario_trace(
+    name: str,
+    trace: Trace,
+    n_nodes: int,
+    seed: int = 0,
+) -> Tuple[Trace, List[ClusterEvent]]:
+    """Materialize scenario chain ``name`` for one cell, deterministically.
+
+    Each link of the ``+`` chain gets its own ``[seed, salt(link)]`` RNG
+    stream (repeated links are further salted by occurrence), so a link's
+    perturbation does not depend on its chain position; cluster scripts
+    concatenate and are returned time-sorted.
+    """
+    links = parse_scenario_chain(name)
+    events: List[ClusterEvent] = []
+    seen: Dict[str, int] = {}
+    for link in links:
+        k = seen.get(link, 0)
+        seen[link] = k + 1
+        words = [seed, _code(link)] + ([k] if k else [])
+        rng = np.random.default_rng(np.random.SeedSequence(words))
+        trace, evs = SCENARIOS[link](trace, n_nodes, rng)
+        events.extend(evs)
+    if len(links) > 1:
+        events.sort(key=lambda e: e.time)
+    return trace, events
+
+
 def apply_scenario(
     name: str,
     specs: Sequence[JobSpec],
     n_nodes: int,
     seed: int = 0,
 ) -> Tuple[List[JobSpec], List[ClusterEvent]]:
-    """Materialize scenario ``name`` for one cell, deterministically."""
-    if name not in SCENARIOS:
-        raise KeyError(f"unknown scenario {name!r}; known: {list_scenarios()}")
-    rng = np.random.default_rng(np.random.SeedSequence([seed, _code(name)]))
-    return SCENARIOS[name](list(specs), n_nodes, rng)
+    """``JobSpec``-list wrapper around :func:`apply_scenario_trace`."""
+    trace, events = apply_scenario_trace(
+        name, Trace.from_specs(specs), n_nodes, seed=seed)
+    return trace.to_specs(), events
 
 
 def _code(name: str) -> int:
@@ -83,38 +147,33 @@ def _code(name: str) -> int:
     return sum((i + 1) * ord(c) for i, c in enumerate(name)) % (2**31)
 
 
-def _span(specs: Sequence[JobSpec]) -> Tuple[float, float]:
-    if not specs:
-        return 0.0, 1.0
-    lo = min(s.release for s in specs)
-    hi = max(s.release for s in specs)
-    return lo, max(hi - lo, 1.0)
-
-
 # --------------------------------------------------------------------------- #
 # built-ins                                                                    #
 # --------------------------------------------------------------------------- #
 @register_scenario("baseline")
-def _baseline(specs, n_nodes, rng):
-    return specs, []
+def _baseline(trace, n_nodes, rng):
+    """Unperturbed cell: the workload trace as generated, no cluster script."""
+    return trace, []
 
 
 @register_scenario("rack_failure")
-def _rack_failure(specs, n_nodes, rng):
-    lo, span = _span(specs)
+def _rack_failure(trace, n_nodes, rng):
+    """A contiguous quarter of the nodes fails mid-span, rejoins after 10%."""
+    lo, span = trace.span()
     k = max(1, n_nodes // 4)
     first = int(rng.integers(0, max(1, n_nodes - k + 1)))
     rack = tuple(range(first, first + k))
     t_fail = lo + 0.5 * span
-    return specs, [
+    return trace, [
         ClusterEvent(time=t_fail, kind="fail", nodes=rack),
         ClusterEvent(time=t_fail + 0.1 * span, kind="join", nodes=rack),
     ]
 
 
 @register_scenario("rolling_failures")
-def _rolling_failures(specs, n_nodes, rng):
-    lo, span = _span(specs)
+def _rolling_failures(trace, n_nodes, rng):
+    """Poisson single-node failures (~6 over the span), deterministic repair."""
+    lo, span = trace.span()
     events = failure_trace(
         n_nodes,
         horizon=span,
@@ -124,38 +183,36 @@ def _rolling_failures(specs, n_nodes, rng):
     )
     # failure_trace generates on [0, horizon); shift onto the release span
     shifted = [ClusterEvent(ev.time + lo, ev.kind, ev.nodes) for ev in events]
-    return specs, shifted
+    return trace, shifted
 
 
 @register_scenario("elastic")
-def _elastic(specs, n_nodes, rng):
-    lo, span = _span(specs)
+def _elastic(trace, n_nodes, rng):
+    """A third of the cluster is reclaimed at 30% of the span, back at 70%."""
+    lo, span = trace.span()
     k = max(1, n_nodes // 3)
     block = tuple(range(n_nodes - k, n_nodes))
-    return specs, [
+    return trace, [
         ClusterEvent(time=lo + 0.3 * span, kind="fail", nodes=block),
         ClusterEvent(time=lo + 0.7 * span, kind="join", nodes=block),
     ]
 
 
 @register_scenario("arrival_burst")
-def _arrival_burst(specs, n_nodes, rng):
-    lo, span = _span(specs)
+def _arrival_burst(trace, n_nodes, rng):
+    """The middle half of the arrivals compresses into a 10x-narrower window."""
+    lo, span = trace.span()
     a, b = lo + 0.25 * span, lo + 0.75 * span
-    out = []
-    for s in specs:
-        if a <= s.release <= b:
-            out.append(replace(s, release=a + (s.release - a) / 10.0))
-        else:
-            out.append(s)
-    return out, []
+    rel = trace.release
+    hit = (rel >= a) & (rel <= b)
+    return trace.replace(
+        release=np.where(hit, a + (rel - a) / 10.0, rel)), []
 
 
 @register_scenario("mem_pressure")
-def _mem_pressure(specs, n_nodes, rng):
-    hit = rng.random(len(specs)) < 0.5
-    out = [
-        replace(s, mem_req=min(1.0, 1.5 * s.mem_req)) if h else s
-        for s, h in zip(specs, hit)
-    ]
-    return out, []
+def _mem_pressure(trace, n_nodes, rng):
+    """A random half of the jobs needs 1.5x memory (capped at a full node)."""
+    hit = rng.random(len(trace)) < 0.5
+    return trace.replace(
+        mem_req=np.where(hit, np.minimum(1.0, 1.5 * trace.mem_req),
+                         trace.mem_req)), []

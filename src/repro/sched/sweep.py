@@ -35,9 +35,9 @@ import numpy as np
 
 from ..core.bound import max_stretch_lower_bound
 from ..core.policies import parse_policy
-from ..workloads.registry import WorkloadSpec, make_trace
+from ..workloads.registry import WorkloadSpec, make_trace_ir
 from .engine import Engine, SimParams
-from .scenarios import apply_scenario
+from .scenarios import apply_scenario_trace, parse_scenario_chain
 
 __all__ = ["Cell", "SweepResult", "RecordCache", "grid", "run_grid",
            "record_matches"]
@@ -149,21 +149,25 @@ def _atomic_write_json(path: str, payload: Any) -> str:
 # --------------------------------------------------------------------------- #
 # worker side                                                                  #
 # --------------------------------------------------------------------------- #
-# per-process memo: (workload, scenario) -> (specs, events, bound-or-None)
+# per-process memo:
+# (workload, scenario) -> (trace, events, bound-or-None, workload fingerprint)
 _CELL_CACHE: Dict[Tuple[WorkloadSpec, str, bool], Tuple] = {}
 
 
 def _materialize(workload: WorkloadSpec, scenario: str, compute_bound: bool):
+    """Columnar cell inputs: the workload trace (memoized per process by the
+    registry), the scenario chain applied as vectorized Trace transforms,
+    and the workload trace's content fingerprint for cache identity."""
     key = (workload, scenario, compute_bound)
     hit = _CELL_CACHE.get(key)
     if hit is not None:
         return hit
-    specs = make_trace(workload)
-    specs, events = apply_scenario(scenario, specs, workload.n_nodes,
-                                   seed=workload.seed)
-    bound = (max_stretch_lower_bound(specs, workload.n_nodes)
+    base = make_trace_ir(workload)
+    trace, events = apply_scenario_trace(scenario, base, workload.n_nodes,
+                                         seed=workload.seed)
+    bound = (max_stretch_lower_bound(trace.to_specs(), workload.n_nodes)
              if compute_bound else None)
-    out = (specs, events, bound)
+    out = (trace, events, bound, base.fingerprint)
     if len(_CELL_CACHE) > 32:       # sweeps iterate policies per workload
         _CELL_CACHE.clear()
     _CELL_CACHE[key] = out
@@ -172,12 +176,12 @@ def _materialize(workload: WorkloadSpec, scenario: str, compute_bound: bool):
 
 def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
     idx, cell, compute_bound = task
-    specs, events, bound = _materialize(cell.workload, cell.scenario,
-                                        compute_bound)
+    trace, events, bound, fingerprint = _materialize(
+        cell.workload, cell.scenario, compute_bound)
     base = cell.params or SimParams()
     params = replace(base, n_nodes=cell.workload.n_nodes)
     t0 = time.perf_counter()
-    engine = Engine(specs, cell.policy, params, cluster_events=events)
+    engine = Engine(trace, cell.policy, params, cluster_events=events)
     # batch baselines drop ClusterEvents (they don't model failures) — flag
     # the record so failure-scenario cells aren't read as simulated for them
     applied = engine.policy.handles_cluster_events or not events
@@ -187,6 +191,7 @@ def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
         "cell": idx,
         "workload": cell.workload.name,
         **cell.workload.to_dict(),
+        "trace_fingerprint": fingerprint,
         "policy": cell.policy,
         "scenario": cell.scenario,
         "scenario_applied": applied,
@@ -295,6 +300,16 @@ def _canonical_policy(policy: str) -> str:
         return policy
 
 
+def _canonical_scenario(scenario: str) -> str:
+    """Cache identity of a scenario chain: whitespace-insensitive link
+    spelling (``"a + b"`` and ``"a+b"`` share a record); unknown names pass
+    through verbatim so stale cached records never crash a load."""
+    try:
+        return "+".join(parse_scenario_chain(scenario))
+    except KeyError:
+        return scenario
+
+
 def _params_key(params: SimParams) -> Dict[str, Any]:
     """The SimParams fields that are part of a cell's cache identity:
     everything except ``n_nodes`` (always taken from the workload) and
@@ -305,9 +320,16 @@ def _params_key(params: SimParams) -> Dict[str, Any]:
     return d
 
 
+def _params_tuple(params: Dict[str, Any]) -> Tuple:
+    return tuple(sorted(params.items()))
+
+
 def _record_key(rec: Dict[str, Any]) -> Tuple:
     return (rec["kind"], rec["n_jobs"], rec["n_nodes"], rec["seed"],
-            rec["load"], _canonical_policy(rec["policy"]), rec["scenario"],
+            rec["load"], _params_tuple(rec["params"]),
+            rec["trace_fingerprint"],
+            _canonical_policy(rec["policy"]),
+            _canonical_scenario(rec["scenario"]),
             float(rec["period"]),
             tuple(sorted(rec["sim_params"].items())))
 
@@ -321,7 +343,10 @@ class RecordCache:
     writes the cache back atomically after every miss batch, so an
     interrupted benchmark run resumes where it stopped and parallel runs
     never observe torn artifacts.  Policy strings are canonicalized for
-    cache identity, so equivalent grammar spellings share one record.
+    cache identity, so equivalent grammar spellings share one record; keys
+    also carry the workload trace's content fingerprint, so records cached
+    before a generator refactor (same spec, different jobs) are re-simulated
+    instead of silently reused.
     """
 
     def __init__(self, path: Optional[str] = None):
@@ -338,8 +363,9 @@ class RecordCache:
                     f"path (sweep artifacts from --out/json_path are a "
                     f"different format)")
             for rec in payload["records"]:
-                if "sim_params" not in rec:
-                    continue        # pre-sim_params record: re-simulate it
+                if not {"sim_params", "params", "trace_fingerprint"} <= set(rec):
+                    continue        # pre-Trace-IR/-sim_params record:
+                    # missing identity fields — re-simulate it
                 self._records[_record_key(rec)] = rec
 
     def __len__(self) -> int:
@@ -387,9 +413,17 @@ class RecordCache:
             for p in policies for sc in scenarios
         ]
 
+        for sc in scenarios:
+            parse_scenario_chain(sc)    # fail fast, driver-side
+        # one fingerprint per distinct workload, materialized driver-side
+        # exactly once (the per-process trace memo is an LRU — recomputing
+        # inside key_of would thrash it on paper-scale grids)
+        fps = {w: make_trace_ir(w).fingerprint for w in set(workloads)}
+
         def key_of(w: WorkloadSpec, p: str, per: float, sc: str) -> Tuple:
-            return (w.kind, w.n_jobs, w.n_nodes, w.seed, w.load,
-                    _canonical_policy(p), sc, per, pkey)
+            return (w.kind, w.n_jobs, w.n_nodes, w.seed, w.load, w.params,
+                    fps[w], _canonical_policy(p), _canonical_scenario(sc),
+                    per, pkey)
 
         def hit(k: Tuple) -> bool:
             rec = self._records.get(k)
@@ -421,15 +455,16 @@ class RecordCache:
                 rec["sim_params"] = dict(pkey_dict)   # disk-key round-trip
                 self._records[k] = rec
             self.save()
-        # returned records mirror run_grid semantics: "policy" is the
-        # spelling the caller asked for (so filter/summary keys match the
-        # request even when an equivalent spelling filled the cache) and
-        # "cell" is the want-order index (stable, collision-free artifacts
-        # across resumed sweeps)
+        # returned records mirror run_grid semantics: "policy"/"scenario"
+        # are the spellings the caller asked for (so filter/summary keys
+        # match the request even when an equivalent spelling filled the
+        # cache) and "cell" is the want-order index (stable, collision-free
+        # artifacts across resumed sweeps)
         out: List[Dict[str, Any]] = []
         for i, t in enumerate(want):
             rec = dict(self._records[key_of(*t)])
             rec["policy"] = t[1]
+            rec["scenario"] = t[3]
             rec["cell"] = i
             out.append(rec)
         return out

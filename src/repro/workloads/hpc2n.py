@@ -14,7 +14,13 @@ The archive is not redistributable inside this container, so
 ``hpc2n_like_trace`` synthesizes swf rows with the trace's published
 marginals (job sizes heavy at small powers of two, > 95 % of jobs under
 40 % memory, runtimes seconds→days) and runs them through the *same*
-preprocessing — benchmarks accept a real swf path when one is available.
+preprocessing.  A real log, when available, enters through the ``swf``
+workload kind — ``repro.workloads.registry.parse_workload("swf:<path>")``,
+``python -m repro {simulate,sweep} --workload swf:<path>``, or
+``python -m benchmarks.run --swf <path>`` (which swaps it in as the
+"real" trace set) — and is exercised against the checked-in miniature
+``tests/data/mini.swf`` fixture by the golden tests in
+``tests/test_hpc2n_swf.py``.
 """
 from __future__ import annotations
 

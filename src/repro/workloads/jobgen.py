@@ -27,7 +27,8 @@ import numpy as np
 
 from ..core.job import JobSpec
 
-__all__ = ["TpuJobType", "tpu_job_types", "tpu_trace", "HBM_BYTES"]
+__all__ = ["TpuJobType", "tpu_job_types", "tpu_trace", "HBM_BYTES",
+           "DEFAULT_TPU_JOB_TYPES"]
 
 HBM_BYTES = 16 * 1024**3   # v5e-class chip
 
@@ -68,6 +69,24 @@ def tpu_job_types(
             )
         )
     return out
+
+
+#: Deterministic fallback job-type mix for the ``tpu`` workload kind when no
+#: dry-run roofline artifact is available: values follow the same derivation
+#: as ``tpu_job_types`` (cpu_need = compute fraction of the dominant roofline
+#: term, mem_req = HBM footprint fraction) for archetypal cells — a
+#: compute-bound trainer, a mid-size fine-tune, a bandwidth-bound decode
+#: server (the fractional-use case DFRS exploits) and a prefill burst.
+DEFAULT_TPU_JOB_TYPES = (
+    TpuJobType("trainer-large", cpu_need=0.92, mem_req=0.78, n_tasks=16,
+               typical_duration=14_400.0),
+    TpuJobType("finetune-mid", cpu_need=0.85, mem_req=0.45, n_tasks=4,
+               typical_duration=3_600.0),
+    TpuJobType("serve-decode", cpu_need=0.18, mem_req=0.62, n_tasks=2,
+               typical_duration=1_800.0),
+    TpuJobType("serve-prefill", cpu_need=0.70, mem_req=0.30, n_tasks=1,
+               typical_duration=600.0),
+)
 
 
 def tpu_trace(

@@ -1,0 +1,175 @@
+"""Golden-file tests for the real-log path: ``parse_swf`` +
+``hpc2n_preprocess`` against the checked-in ``tests/data/mini.swf``
+fixture (field mapping, the multi-threaded detection rule, the 10 %
+memory floor), plus the ``swf`` workload kind and the registry's
+kind-specific knob validation.
+"""
+import os
+
+import pytest
+
+from repro.workloads.hpc2n import hpc2n_preprocess, parse_swf
+from repro.workloads.registry import (WorkloadSpec, list_workloads,
+                                      make_trace, make_trace_ir,
+                                      parse_workload, workload_kind)
+
+MINI_SWF = os.path.join(os.path.dirname(__file__), "data", "mini.swf")
+
+
+# --------------------------------------------------------------------------- #
+# parse_swf: field mapping + row filtering                                     #
+# --------------------------------------------------------------------------- #
+def test_parse_swf_fixture_field_mapping():
+    jobs = parse_swf(MINI_SWF)
+    # 13 data lines: job 5 (run=0), job 6 (procs=-1) and the short line 12
+    # are dropped
+    assert [j.jid for j in jobs] == [1, 2, 3, 4, 7, 8, 9, 10, 11, 13]
+    by = {j.jid: j for j in jobs}
+    j1 = by[1]
+    assert (j1.submit, j1.run, j1.procs) == (10.0, 3600.0, 4)
+    assert (j1.used_mem_kb, j1.req_mem_kb) == (262144.0, -1.0)
+    j11 = by[11]                       # decimal KB fields parse as floats
+    assert (j11.used_mem_kb, j11.req_mem_kb) == (419430.4, 838860.8)
+
+
+def test_parse_swf_accepts_text_blob():
+    text = "; comment\n1 0 0 50 2 -1 0 2 60 -1 1 1 1 -1 1 -1 -1 -1\n"
+    jobs = parse_swf(text)
+    assert len(jobs) == 1 and jobs[0].run == 50.0
+
+
+# --------------------------------------------------------------------------- #
+# hpc2n_preprocess: the §5.3.1 transformation, golden values                   #
+# --------------------------------------------------------------------------- #
+def test_preprocess_fixture_golden():
+    specs = hpc2n_preprocess(parse_swf(MINI_SWF))
+    assert len(specs) == 10
+    # sorted by submit; jids renumbered densely in that order
+    assert [s.jid for s in specs] == list(range(10))
+    assert [s.release for s in specs] == [5.0, 10.0, 15.0, 20.0, 30.0,
+                                          60.0, 70.0, 80.0, 90.0, 100.0]
+    rows = {s.release: s for s in specs}
+
+    # swf 2 (odd procs): tasks = procs, one core each, memory unchanged
+    s = rows[5.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (3, 0.5, 0.25)
+    # swf 1 (even procs, 12.5% < 50%): multi-threaded — tasks halved,
+    # CPU need 1.0 (both cores), memory doubled
+    s = rows[10.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (2, 1.0, 0.25)
+    assert s.proc_time == 3600.0
+    # swf 13 (-1 memory sentinels): 10% floor
+    assert rows[15.0].mem_req == 0.10
+    # swf 3 (zero memory): 10% floor
+    s = rows[20.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (1, 0.5, 0.10)
+    # swf 4 (even procs but exactly 50% memory): NOT multi-threaded
+    s = rows[30.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (2, 0.5, 0.5)
+    # swf 7 (used=0 but requested 25%): max(used, req) rule, then doubled
+    s = rows[60.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (4, 1.0, 0.5)
+    # swf 8 (128 procs, 12.5%): the wide job keeps 64 two-core tasks
+    s = rows[70.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (64, 1.0, 0.25)
+    # swf 9 (150% of node memory): capped at a full node, not multi-threaded
+    s = rows[80.0]
+    assert (s.n_tasks, s.cpu_need, s.mem_req) == (2, 0.5, 1.0)
+    # swf 10 (9.77% memory): floored to 10% *before* the rule, so the even
+    # job is multi-threaded and lands at exactly 2x the floor
+    s = rows[90.0]
+    assert (s.n_tasks, s.cpu_need) == (3, 1.0)
+    assert s.mem_req == pytest.approx(0.2)
+    # swf 11: max(used, req) on decimal KB (40%), doubled to 80%
+    s = rows[100.0]
+    assert (s.n_tasks, s.cpu_need) == (2, 1.0)
+    assert s.mem_req == pytest.approx(0.8)
+
+
+# --------------------------------------------------------------------------- #
+# the swf workload kind                                                        #
+# --------------------------------------------------------------------------- #
+def test_swf_kind_materializes_fixture():
+    w = parse_workload(f"swf:{MINI_SWF}", n_jobs=0, n_nodes=128)
+    specs = make_trace(w)
+    assert specs == hpc2n_preprocess(parse_swf(MINI_SWF))
+    # same spec -> same memoized trace object, stable fingerprint
+    assert make_trace_ir(w) is make_trace_ir(w)
+
+
+def test_swf_kind_caps_prefix_and_drops_wide_jobs():
+    capped = make_trace(parse_workload(f"swf:{MINI_SWF}", n_jobs=3,
+                                       n_nodes=128))
+    assert len(capped) == 3
+    assert [s.release for s in capped] == [5.0, 10.0, 15.0]
+    narrow = make_trace(parse_workload(f"swf:{MINI_SWF}", n_jobs=0,
+                                       n_nodes=16))
+    assert all(s.n_tasks <= 16 for s in narrow)
+    assert len(narrow) == 9            # the 64-task job is dropped
+
+
+def test_swf_spec_requires_path():
+    with pytest.raises(ValueError, match="requires params"):
+        WorkloadSpec("swf")
+    wk = workload_kind("swf")
+    assert wk.required == ("path",) and wk.path_param == "path"
+
+
+def test_swf_cell_simulates_end_to_end():
+    from repro import api
+    w = parse_workload(f"swf:{MINI_SWF}", n_jobs=0, n_nodes=128)
+    r = api.simulate(w, "GreedyP */OPT=MIN")
+    assert len(r.completions) == 10 and not r.hit_max_events
+
+
+# --------------------------------------------------------------------------- #
+# registry knob validation                                                     #
+# --------------------------------------------------------------------------- #
+def test_registered_kinds_present():
+    assert {"lublin", "hpc2n", "swf", "tpu"} <= set(list_workloads())
+
+
+def test_load_rejected_for_kinds_that_ignore_it():
+    for kind, params in [("hpc2n", ()), ("swf", {"path": MINI_SWF})]:
+        with pytest.raises(ValueError, match="ignores load="):
+            WorkloadSpec(kind, load=0.5, params=params)
+    # load-aware kinds accept it
+    WorkloadSpec("lublin", load=0.5)
+    WorkloadSpec("tpu", load=0.5)
+
+
+def test_unknown_and_missing_params_rejected():
+    with pytest.raises(ValueError, match="does not accept params"):
+        WorkloadSpec("lublin", params={"path": "/x"})
+    with pytest.raises(ValueError, match="JSON scalar"):
+        WorkloadSpec("swf", params={"path": ["not", "a", "scalar"]})
+    with pytest.raises(ValueError, match="unknown workload kind"):
+        WorkloadSpec("marsaglia")
+
+
+def test_parse_workload_grammar():
+    w = parse_workload(f"swf:{MINI_SWF}", n_jobs=50, n_nodes=128, seed=2)
+    assert w.kind == "swf" and w.param("path") == MINI_SWF
+    assert w.n_jobs == 50 and w.seed == 2
+    assert "swf" in w.name and "path=" in w.name
+    with pytest.raises(ValueError, match="takes no"):
+        parse_workload("lublin:whatever")
+    assert parse_workload("lublin", load=0.3).load == 0.3
+
+
+def test_workload_spec_params_hashable_and_json_round_trip():
+    w = parse_workload(f"swf:{MINI_SWF}", n_nodes=128)
+    assert hash(w) == hash(parse_workload(f"swf:{MINI_SWF}", n_nodes=128))
+    d = w.to_dict()
+    assert d["params"] == {"path": MINI_SWF}
+    import json
+    assert json.loads(json.dumps(d)) == d
+
+
+def test_tpu_kind_default_mix_deterministic():
+    w = WorkloadSpec("tpu", n_jobs=40, n_nodes=64, seed=5)
+    a, b = make_trace_ir(w), make_trace_ir(w)
+    assert a.fingerprint == b.fingerprint and len(a) == 40
+    # load knob maps to the target offered load
+    hot = WorkloadSpec("tpu", n_jobs=40, n_nodes=64, seed=5, load=0.9)
+    assert make_trace_ir(hot).fingerprint != a.fingerprint

@@ -6,6 +6,7 @@ artifact, with parallel results identical to the serial run.
 """
 import json
 
+import numpy as np
 import pytest
 
 from repro.sched.engine import SimParams
@@ -160,3 +161,113 @@ def test_cell_params_template_propagates():
                           params=SimParams(period=6000.0))], n_workers=1)
     # more frequent MCB8 passes do strictly more events
     assert fast.records[0]["events"] > slow.records[0]["events"]
+
+
+# --------------------------------------------------------------------------- #
+# Trace-IR sweep path: worker-count identity, memoization, fingerprints         #
+# --------------------------------------------------------------------------- #
+def test_run_grid_worker_counts_produce_identical_record_sets():
+    """workers=1 and workers=4 must yield the same records (ordering-
+    independent) on a grid spanning registry kinds (swf included) and a
+    composed scenario chain."""
+    import os
+    mini_swf = os.path.join(os.path.dirname(__file__), "data", "mini.swf")
+    from repro.workloads.registry import parse_workload
+    workloads = [WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=0),
+                 parse_workload(f"swf:{mini_swf}", n_jobs=0, n_nodes=128),
+                 WorkloadSpec("tpu", n_jobs=25, n_nodes=64, seed=1)]
+    cells = grid(workloads, ["FCFS", "GreedyP */OPT=MIN"],
+                 ["baseline", "rack_failure+arrival_burst"])
+    ser = run_grid(cells, n_workers=1, compute_bound=True)
+    par = run_grid(cells, n_workers=4, compute_bound=True)
+    assert ser.n_cells == par.n_cells == 12
+
+    def strip(recs):
+        return sorted((tuple(sorted((k, str(v)) for k, v in r.items()
+                                    if k != "wall_s")) for r in recs))
+    assert strip(ser.records) == strip(par.records)
+    for rec in ser.records:
+        assert rec["trace_fingerprint"]
+        assert "params" in rec
+
+
+def test_make_trace_memoization_hits_under_registry():
+    """Per-process trace materialization memoizes by WorkloadSpec: repeated
+    cells of a policy sweep share one frozen Trace object."""
+    from repro.workloads.registry import (make_trace_ir, make_trace,
+                                          trace_cache_info)
+    w = WorkloadSpec("lublin", n_jobs=12, n_nodes=8, seed=987654)
+    t1 = make_trace_ir(w)
+    before = trace_cache_info().hits
+    t2 = make_trace_ir(w)
+    assert t2 is t1                    # the same frozen object, not a copy
+    assert trace_cache_info().hits == before + 1
+    # the spec-list view is a fresh list per call (callers may mutate it)
+    a, b = make_trace(w), make_trace(w)
+    assert a == b and a is not b
+
+
+def test_scenario_chain_through_run_grid():
+    w = WorkloadSpec("lublin", n_jobs=25, n_nodes=16, seed=2)
+    res = run_grid(grid([w], ["GreedyPM */per/OPT=MIN/MINVT=600"],
+                        ["rack_failure+mem_pressure"]), n_workers=1)
+    rec = res.records[0]
+    assert rec["scenario"] == "rack_failure+mem_pressure"
+    assert rec["scenario_applied"] and rec["makespan"] > 0
+
+
+def test_record_cache_fingerprint_guards_generator_refactors(tmp_path,
+                                                             monkeypatch):
+    """A cached record is reused only while the workload trace's content
+    fingerprint matches: refactoring a generator (same spec, different
+    jobs) must re-simulate, not serve stale records."""
+    import dataclasses as dc
+    from repro.sched.sweep import RecordCache
+    import repro.sched.sweep as sweep_mod
+    from repro.workloads import registry as reg
+
+    path = str(tmp_path / "cache.json")
+    w = WorkloadSpec("lublin", n_jobs=15, n_nodes=16, seed=0)
+    RecordCache(path).sweep([w], ["FCFS"], n_workers=1, compute_bound=False)
+
+    # warm resume with the unchanged generator: no simulation
+    monkeypatch.setattr(sweep_mod, "run_grid",
+                        lambda *a, **kw: pytest.fail("warm cache missed"))
+    warm = RecordCache(path).sweep([w], ["FCFS"], n_workers=1,
+                                   compute_bound=False)
+    assert len(warm) == 1
+    monkeypatch.undo()
+
+    # "refactor" the lublin generator: same spec now yields different jobs
+    orig_kind = reg._REGISTRY["lublin"]
+    patched = dc.replace(
+        orig_kind,
+        fn=lambda spec: orig_kind.fn(spec).select(np.arange(spec.n_jobs - 1)))
+    monkeypatch.setitem(reg._REGISTRY, "lublin", patched)
+    reg.trace_cache_clear()
+    try:
+        calls = []
+        orig_run = sweep_mod.run_grid
+        monkeypatch.setattr(
+            sweep_mod, "run_grid",
+            lambda cells, **kw: calls.append(len(cells)) or orig_run(cells, **kw))
+        recs = RecordCache(path).sweep([w], ["FCFS"], n_workers=1,
+                                       compute_bound=False)
+        assert calls == [1]            # fingerprint moved -> re-simulated
+        assert len(recs) == 1
+    finally:
+        reg.trace_cache_clear()
+
+
+def test_record_cache_skips_pre_fingerprint_records(tmp_path):
+    """Records written before the Trace-IR refactor (no trace_fingerprint /
+    params fields) load as misses instead of poisoning the key space."""
+    from repro.sched.sweep import RecordCache
+    path = str(tmp_path / "cache.json")
+    w = WorkloadSpec("lublin", n_jobs=12, n_nodes=16, seed=1)
+    RecordCache(path).sweep([w], ["FCFS"], n_workers=1, compute_bound=False)
+    payload = json.loads(open(path).read())
+    for rec in payload["records"]:
+        rec.pop("trace_fingerprint")
+    open(path, "w").write(json.dumps(payload))
+    assert len(RecordCache(path)) == 0

@@ -1,0 +1,217 @@
+"""Columnar Trace IR tests.
+
+Three layers:
+
+* the IR itself: construction + vectorized validation, spec round-trips,
+  npz/json serialization, fingerprint semantics, transforms;
+* scenario transforms over the IR: chain grammar, per-link determinism,
+  equivalence with the JobSpec-list wrapper;
+* the golden contract: the array-native engine path (``Engine(Trace)``)
+  produces *bit-identical* ``SimResult``s to the JobSpec-list path on all
+  14 Table-1 policies and the 17-cell acceptance grid.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.policies import TABLE1_POLICIES
+from repro.sched.engine import Engine, SimParams
+from repro.sched.scenarios import (apply_scenario, apply_scenario_trace,
+                                   parse_scenario_chain, list_scenarios,
+                                   scenario_docs)
+from repro.workloads.registry import WorkloadSpec, make_trace, make_trace_ir
+from repro.workloads.trace import Trace
+
+
+def mini_trace_ir(n=40, nodes=16, seed=0) -> Trace:
+    return make_trace_ir(WorkloadSpec("lublin", n_jobs=n, n_nodes=nodes,
+                                      seed=seed))
+
+
+# --------------------------------------------------------------------------- #
+# the IR                                                                       #
+# --------------------------------------------------------------------------- #
+def test_from_specs_to_specs_round_trip_exact():
+    specs = make_trace(WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=2))
+    tr = Trace.from_specs(specs)
+    assert len(tr) == 30
+    assert tr.to_specs() == specs          # exact values, same order
+
+
+def test_columns_are_read_only_and_trace_frozen():
+    tr = mini_trace_ir()
+    with pytest.raises(ValueError):
+        tr.release[0] = 99.0
+    with pytest.raises(AttributeError):
+        tr.release = np.zeros(len(tr))
+
+
+def test_vectorized_validation_matches_jobspec_invariants():
+    ok = dict(jid=[0], release=[0.0], proc_time=[10.0], n_tasks=[1],
+              cpu_need=[0.5], mem_req=[0.5])
+    Trace(**{k: np.asarray(v) for k, v in ok.items()})    # sanity
+    for field, bad in [("cpu_need", 0.0), ("cpu_need", 1.5),
+                       ("mem_req", 0.0), ("mem_req", 2.0),
+                       ("n_tasks", 0), ("proc_time", 0.0),
+                       ("release", np.inf)]:
+        cols = {k: np.asarray(v) for k, v in ok.items()}
+        cols[field] = np.asarray([bad], dtype=cols[field].dtype)
+        with pytest.raises(ValueError):
+            Trace(**cols)
+
+
+def test_fingerprint_content_identity():
+    a, b = mini_trace_ir(seed=0), mini_trace_ir(seed=0)
+    assert a.fingerprint == b.fingerprint and a == b
+    c = mini_trace_ir(seed=1)
+    assert a.fingerprint != c.fingerprint and a != c
+    # any column change moves the fingerprint
+    d = a.replace(mem_req=np.minimum(1.0, a.mem_req * 1.5))
+    assert d.fingerprint != a.fingerprint
+    # hashable: usable directly as a cache key
+    assert len({a, b, c, d}) == 3
+
+
+def test_npz_and_json_round_trips(tmp_path):
+    tr = mini_trace_ir(n=25)
+    npz = str(tmp_path / "t.npz")
+    tr.save_npz(npz)
+    back = Trace.load_npz(npz)
+    assert back == tr and back.to_specs() == tr.to_specs()
+
+    js = str(tmp_path / "t.json")
+    tr.save_json(js)
+    back = Trace.load_json(js)
+    assert back == tr and back.to_specs() == tr.to_specs()
+
+
+def test_load_npz_rejects_foreign_file(tmp_path):
+    path = str(tmp_path / "x.npz")
+    np.savez(path, a=np.zeros(3))
+    with pytest.raises(ValueError, match="repro.trace"):
+        Trace.load_npz(path)
+
+
+def test_select_replace_and_sort():
+    tr = mini_trace_ir(n=30)
+    wide = tr.select(tr.n_tasks >= 2)
+    assert len(wide) < len(tr) and (wide.n_tasks >= 2).all()
+    with pytest.raises(ValueError, match="unknown Trace columns"):
+        tr.replace(nope=tr.release)
+    # sorted_by_release matches the engine's (release, jid) tuple sort
+    shuffled = tr.select(np.random.default_rng(0).permutation(len(tr)))
+    specs = sorted(shuffled.to_specs(), key=lambda s: (s.release, s.jid))
+    assert shuffled.sorted_by_release().to_specs() == specs
+
+
+def test_span_and_total_work():
+    tr = mini_trace_ir(n=20)
+    specs = tr.to_specs()
+    lo, span = tr.span()
+    assert lo == min(s.release for s in specs)
+    assert span == max(max(s.release for s in specs) - lo, 1.0)
+    assert tr.total_work == pytest.approx(sum(s.total_work for s in specs))
+
+
+# --------------------------------------------------------------------------- #
+# scenario transforms over the IR                                              #
+# --------------------------------------------------------------------------- #
+def test_scenario_trace_matches_spec_wrapper():
+    tr = mini_trace_ir(n=30)
+    specs = tr.to_specs()
+    for name in list_scenarios():
+        t_tr, e_tr = apply_scenario_trace(name, tr, 16, seed=4)
+        s_ls, e_ls = apply_scenario(name, specs, 16, seed=4)
+        assert t_tr.to_specs() == s_ls
+        assert e_tr == e_ls
+
+
+def test_chain_grammar_composes_left_to_right():
+    tr = mini_trace_ir(n=40)
+    chained, events = apply_scenario_trace(
+        "mem_pressure+arrival_burst", tr, 16, seed=7)
+    step1, e1 = apply_scenario_trace("mem_pressure", tr, 16, seed=7)
+    step2, e2 = apply_scenario_trace("arrival_burst", step1, 16, seed=7)
+    assert chained == step2
+    assert events == e1 + e2
+
+
+def test_chain_links_are_position_independent():
+    """A link draws from its own name-salted stream: same perturbation
+    alone or inside a chain (baseline+x == x)."""
+    tr = mini_trace_ir(n=30)
+    a, ea = apply_scenario_trace("mem_pressure", tr, 16, seed=3)
+    b, eb = apply_scenario_trace("baseline+mem_pressure", tr, 16, seed=3)
+    assert a == b and ea == eb
+
+
+def test_chain_events_are_time_sorted():
+    tr = mini_trace_ir(n=40)
+    _, events = apply_scenario_trace(
+        "elastic+rolling_failures+rack_failure", tr, 16, seed=1)
+    times = [e.time for e in events]
+    assert times == sorted(times) and len(events) > 4
+
+
+def test_parse_scenario_chain_validation():
+    assert parse_scenario_chain("rack_failure+arrival_burst") == [
+        "rack_failure", "arrival_burst"]
+    with pytest.raises(KeyError):
+        parse_scenario_chain("rack_failure+meteor_strike")
+    with pytest.raises(KeyError):
+        parse_scenario_chain("rack_failure+")
+
+
+def test_scenario_docs_one_liners():
+    docs = scenario_docs()
+    assert set(docs) == set(list_scenarios())
+    for name, doc in docs.items():
+        assert doc and "\n" not in doc, name
+
+
+def test_chained_cell_simulates_end_to_end():
+    w = WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=3)
+    from repro import api
+    r = api.simulate(w, "GreedyPM */per/OPT=MIN/MINVT=600",
+                     scenario="rack_failure+arrival_burst")
+    assert set(r.completions) == {s.jid for s in make_trace(w)}
+    assert not r.hit_max_events
+
+
+# --------------------------------------------------------------------------- #
+# golden contract: the Trace-native engine path is bit-identical               #
+# --------------------------------------------------------------------------- #
+GOLDEN_POLICIES = ["FCFS", "EASY", "GreedyP */OPT=MIN",
+                   "GreedyPM */per/OPT=MIN/MINVT=600"]
+GOLDEN_WORKLOADS = [WorkloadSpec("lublin", n_jobs=40, n_nodes=16, seed=0),
+                    WorkloadSpec("hpc2n", n_jobs=40, n_nodes=128, seed=1)]
+GOLDEN_CASES = [(w, p, sc)
+                for w in GOLDEN_WORKLOADS
+                for p in GOLDEN_POLICIES
+                for sc in ("baseline", "rack_failure")]
+GOLDEN_CASES.append((GOLDEN_WORKLOADS[0], "/stretch-per/OPT=MAX", "baseline"))
+
+
+@pytest.mark.parametrize(
+    "workload,policy,scenario", GOLDEN_CASES,
+    ids=[f"{w.name}-{p}-{sc}" for w, p, sc in GOLDEN_CASES])
+def test_golden_trace_native_vs_spec_list_simresult(workload, policy, scenario):
+    trace, events = apply_scenario_trace(
+        scenario, make_trace_ir(workload), workload.n_nodes,
+        seed=workload.seed)
+    params = SimParams(n_nodes=workload.n_nodes)
+    native = Engine(trace, policy, params, cluster_events=events).run()
+    via_specs = Engine(trace.to_specs(), policy, params,
+                       cluster_events=events).run()
+    assert dataclasses.asdict(native) == dataclasses.asdict(via_specs)
+
+
+@pytest.mark.parametrize("policy", TABLE1_POLICIES)
+def test_every_table1_policy_trace_native_equals_spec_list(policy):
+    w = WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=0)
+    trace = make_trace_ir(w)
+    params = SimParams(n_nodes=16)
+    native = Engine(trace, policy, params).run()
+    via_specs = Engine(trace.to_specs(), policy, params).run()
+    assert dataclasses.asdict(native) == dataclasses.asdict(via_specs)
