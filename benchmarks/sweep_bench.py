@@ -51,8 +51,15 @@ def run(bench: Bench, verbose: bool = True):
     cells = grid(workloads, POLICIES, SCENARIOS)
     res = run_grid(cells, n_workers=N_WORKERS)
 
-    per_policy = res.summary(by="policy",
-                             keys=("mean_stretch", "max_stretch", "wall_s"))
+    per_policy = res.summary(
+        by="policy",
+        keys=("mean_stretch", "max_stretch", "wall_s", "sim_wall_s",
+              "n_events"))
+    # cells/s variance on a throttled box is mostly event-count variance:
+    # record the grid's total engine events and events/s so trajectory
+    # comparisons can normalize for it
+    total_events = sum(r["n_events"] for r in res.records)
+    sim_wall = sum(r["sim_wall_s"] for r in res.records)
     payload = {
         "bench": "sweep",
         "n_cells": res.n_cells,
@@ -60,6 +67,9 @@ def run(bench: Bench, verbose: bool = True):
         "wall_s": round(res.wall_s, 3),
         "trace_materialization_s": round(trace_s, 3),
         "cells_per_sec": round(res.cells_per_sec, 4),
+        "total_events": total_events,
+        "events_per_sec": round(total_events / max(res.wall_s, 1e-9), 1),
+        "sim_wall_s_total": round(sim_wall, 3),
         "grid": {"workloads": [w.name for w in workloads],
                  "policies": POLICIES, "scenarios": SCENARIOS},
         "per_policy": per_policy,
@@ -75,6 +85,7 @@ def run(bench: Bench, verbose: bool = True):
         print(fmt_table(["policy", "mean_stretch", "max_stretch", "cell_s"],
                         rows, "Sweep bench (16 cells, 4 workers)"))
         print(f"  {res.n_cells} cells in {res.wall_s:.1f}s = "
-              f"{res.cells_per_sec:.2f} cells/s "
+              f"{res.cells_per_sec:.2f} cells/s, {total_events} engine "
+              f"events ({payload['events_per_sec']:.0f} ev/s) "
               f"(+{trace_s:.2f}s cold trace materialization) -> {BENCH_JSON}")
     return payload

@@ -1,0 +1,67 @@
+"""What-if branching: compare policies from an identical *mid-run* state.
+
+    PYTHONPATH=src python examples/whatif_branch.py
+
+A closed-world sweep can only compare policies from t=0.  A streaming
+session can do something no batch run can: run the cluster under one
+policy, stop at a live mid-run moment — queue built up, jobs running at
+fractional yields, a rack freshly failed — snapshot it, and fork the
+*identical* state under several candidate policies to see which one digs
+out of that exact situation best.
+
+The script opens a session under GreedyP, lets load build, injects a rack
+failure conditioned on the observed queue, snapshots at the worst of it,
+then branches the snapshot across four policies with
+``api.run_branches``.  The snapshot's own policy continues bit-identically
+(``exact_continuation``); the others adopt the live state.
+"""
+import sys
+
+from repro import api
+
+
+def main() -> int:
+    n_nodes = 32
+    ses = api.open_session(n_nodes, "GreedyP */OPT=MIN")
+    ses.submit(api.WorkloadSpec("lublin", n_jobs=150, n_nodes=n_nodes,
+                                seed=7, load=1.1))
+
+    # let the cluster warm up to a genuinely busy moment (observed, not
+    # scheduled: step until a third of the jobs are done and work remains)
+    while not ses.exhausted:
+        ses.step(25)
+        obs = ses.observe()
+        if obs["n_completed"] >= 30 and obs["n_running"] > 0:
+            break
+    print(f"t={obs['t']:.0f}s  running={obs['n_running']} "
+          f"queued={obs['queue_depth']} completed={obs['n_completed']}")
+    rack = list(range(n_nodes // 4))
+    ses.inject({"kind": "fail", "t": ses.now + 60.0, "nodes": rack})
+    ses.inject({"kind": "join", "t": ses.now + 1800.0, "nodes": rack})
+    ses.step_until(ses.now + 600.0)          # 10 min into the outage
+    obs = ses.observe()
+    print(f"t={obs['t']:.0f}s  rack down: alive={obs['alive_nodes']} "
+          f"queued={obs['queue_depth']} preemptions={obs['n_pmtn']}\n")
+
+    snap = ses.snapshot()
+    print(f"forking snapshot {snap.fingerprint[:12]}… at t={snap.time:.0f}s")
+    res = api.run_branches(snap, [
+        "GreedyP */OPT=MIN",                 # the incumbent, continued
+        "GreedyPM */OPT=MIN",                # + migration
+        "GreedyPM */per/OPT=MIN/MINVT=600",  # + periodic repacking
+        "EASY",                              # hand the mess to the baseline
+    ])
+    print(f"\n{'policy':36s} {'cont.':>5s} {'max stretch':>12s} "
+          f"{'mean':>7s} {'mig/job':>8s}")
+    for rec in res.records:
+        cont = "yes" if rec["exact_continuation"] else "fork"
+        print(f"{rec['policy']:36s} {cont:>5s} {rec['max_stretch']:12.2f} "
+              f"{rec['mean_stretch']:7.2f} {rec['mig_per_job']:8.2f}")
+    print("\nEvery branch resumed from the same live queue, the same "
+          "fractional yields,\nthe same dead rack — only the policy "
+          "differs from here on out.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -12,6 +12,11 @@ Subcommands (all built on :mod:`repro.api`):
   headline metrics (optionally against the Theorem-1 bound).
 * ``sweep``       — a (workload × policy × period × scenario) grid across
   worker processes, with optional resumable on-disk record caching.
+* ``session``     — a *streaming* simulation: drive an open
+  :class:`repro.sched.session.SimSession` from a JSONL event script
+  (online submits, ``step_until``/``step``, live fail/join/period
+  injection, snapshots) and stream per-step JSONL metrics out.  With
+  ``--restore`` the session resumes from a saved snapshot bit-identically.
 * ``trace-smoke`` — materialize every registered workload kind × every
   scenario at a small size and emit the content fingerprints (CI runs it
   in two processes and diffs the output).
@@ -32,6 +37,14 @@ Examples::
         --workload lublin --jobs 60 --nodes 16 --seeds 0,1 \\
         --scenarios baseline,rack_failure+arrival_burst --workers 4 \\
         --out sweep.json --cache cache.json
+    printf '%s\\n' \\
+        '{"op": "submit", "workload": "lublin", "jobs": 50}' \\
+        '{"op": "step_until", "t": 3600}' \\
+        '{"op": "inject", "kind": "fail", "t": 4000, "nodes": [0, 1]}' \\
+        '{"op": "snapshot", "path": "snap.json"}' \\
+        '{"op": "run"}' '{"op": "result"}' \\
+        | python -m repro session --script - \\
+              --policy "GreedyP */OPT=MIN" --nodes 32
 """
 from __future__ import annotations
 
@@ -107,14 +120,18 @@ def _cmd_policies(args: argparse.Namespace) -> int:
 
 def _cmd_scenarios(args: argparse.Namespace) -> int:
     docs = api.scenario_docs()
+    reactive = api.reactive_docs()
     if args.json:
-        print(json.dumps(docs, indent=1))
+        print(json.dumps({"trace": docs, "reactive": reactive}, indent=1))
         return 0
-    width = max(len(n) for n in docs)
+    width = max(len(n) for n in list(docs) + list(reactive))
     for name, doc in docs.items():
         print(f"{name:{width}s}  {doc}")
     print("\nscenarios compose with '+': e.g. rack_failure+arrival_burst "
           "(applied left to right, cluster scripts concatenated)")
+    print("\nreactive scenarios (api.run_reactive over a live session):")
+    for name, doc in reactive.items():
+        print(f"{name:{width}s}  {doc}")
     return 0
 
 
@@ -219,6 +236,113 @@ def _cmd_simulate(args: argparse.Namespace) -> int:
     return 0
 
 
+def _session_submit(ses, ev: dict):
+    """Materialize a session-script submit op into submittable jobs."""
+    if "specs" in ev:
+        return [api.JobSpec(**s) for s in ev["specs"]]
+    return api.parse_workload(
+        ev["workload"],
+        n_jobs=int(ev.get("jobs", 100)),
+        n_nodes=int(ev.get("nodes", ses.engine.params.n_nodes)),
+        seed=int(ev.get("seed", 0)),
+        load=ev.get("load"),
+    )
+
+
+def _cmd_session(args: argparse.Namespace) -> int:
+    """Drive a streaming SimSession from a JSONL event script.
+
+    Script ops (one JSON object per line; blank lines and ``#`` comments
+    skipped): ``open`` (when no --policy/--restore was given), ``submit``
+    (a registered workload or inline ``specs``, optional ``shift``),
+    ``step_until``/``step``/``run``, ``inject`` (fail/join/period),
+    ``snapshot`` and ``result``.  Every op streams one JSONL metrics line
+    (``kind``: submit/step/inject/snapshot/result) to stdout or
+    ``--metrics``.
+    """
+    import dataclasses
+
+    out = open(args.metrics, "w") if args.metrics else sys.stdout
+
+    def emit(obj: dict) -> None:
+        print(json.dumps(obj), file=out, flush=True)
+
+    ses = None
+    if args.restore:
+        ses = api.SimSession.restore(args.restore)
+    elif args.policy:
+        overrides = {}
+        if args.period is not None:
+            overrides["period"] = args.period
+        if args.penalty is not None:
+            overrides["penalty"] = args.penalty
+        ses = api.open_session(args.nodes, args.policy, **overrides)
+
+    script = sys.stdin if args.script == "-" else open(args.script)
+    try:
+        for lineno, raw in enumerate(script, start=1):
+            raw = raw.strip()
+            if not raw or raw.startswith("#"):
+                continue
+            try:
+                ev = json.loads(raw)
+                op = ev.get("op")
+                if op == "open":
+                    if ses is not None:
+                        raise ValueError("session already open")
+                    ses = api.open_session(
+                        int(ev.get("nodes", args.nodes)), ev["policy"],
+                        **{k: ev[k] for k in ("period", "penalty")
+                           if k in ev})
+                    emit({"kind": "open", "policy": ses.policy_name,
+                          **ses.observe()})
+                    continue
+                if ses is None:
+                    raise ValueError("no session open (pass --policy or "
+                                     "--restore, or start with an "
+                                     "{\"op\": \"open\"} line)")
+                if op == "submit":
+                    idx = ses.submit(_session_submit(ses, ev),
+                                     shift=ev.get("shift"))
+                    emit({"kind": "submit", "n_submitted": len(idx),
+                          **ses.observe()})
+                elif op == "step_until":
+                    ses.step_until(float(ev["t"]))
+                    emit({"kind": "step", **ses.observe()})
+                elif op == "step":
+                    n = ses.step(int(ev.get("n", 1)))
+                    emit({"kind": "step", "steps": n, **ses.observe()})
+                elif op == "run":
+                    ses.run_to_exhaustion()
+                    emit({"kind": "step", **ses.observe()})
+                elif op == "inject":
+                    ses.inject({k: v for k, v in ev.items() if k != "op"})
+                    emit({"kind": "inject", **ses.observe()})
+                elif op == "period":
+                    ses.set_period(float(ev["period"]))
+                    emit({"kind": "inject", **ses.observe()})
+                elif op == "snapshot":
+                    snap = ses.snapshot()
+                    snap.save(ev["path"])
+                    emit({"kind": "snapshot", "path": ev["path"],
+                          "fingerprint": snap.fingerprint, "t": snap.time})
+                elif op == "result":
+                    r = ses.result()
+                    emit({"kind": "result", "partial": not ses.exhausted,
+                          **dataclasses.asdict(r)})
+                else:
+                    raise ValueError(f"unknown op {op!r}")
+            except (KeyError, TypeError, ValueError) as e:
+                print(f"{args.script}:{lineno}: {e}", file=sys.stderr)
+                return 2
+    finally:
+        if script is not sys.stdin:
+            script.close()
+        if out is not sys.stdout:
+            out.close()
+    return 0
+
+
 def _cmd_sweep(args: argparse.Namespace) -> int:
     workloads = _workloads_from_args(args)
     policies = _csv(args.policies)
@@ -308,6 +432,29 @@ def build_parser() -> argparse.ArgumentParser:
                    help="also compute the Theorem-1 lower bound")
     p.add_argument("--json", action="store_true", help="full SimResult JSON")
     p.set_defaults(fn=_cmd_simulate)
+
+    p = sub.add_parser(
+        "session",
+        help="drive a streaming SimSession from a JSONL event script")
+    p.add_argument("--script", required=True, metavar="PATH",
+                   help="JSONL event script ('-' for stdin); ops: open, "
+                        "submit, step_until, step, run, inject, snapshot, "
+                        "result")
+    p.add_argument("--policy", default=None,
+                   help="open the session with this policy (grammar string "
+                        "or registered composition name)")
+    p.add_argument("--nodes", type=int, default=64, help="cluster nodes")
+    p.add_argument("--period", type=float, default=None,
+                   help="periodic-pass period (s)")
+    p.add_argument("--penalty", type=float, default=None,
+                   help="rescheduling penalty (s)")
+    p.add_argument("--restore", default=None, metavar="PATH",
+                   help="resume from a saved session snapshot instead of "
+                        "opening a fresh session")
+    p.add_argument("--metrics", default=None, metavar="PATH",
+                   help="write the JSONL metrics stream here (default: "
+                        "stdout)")
+    p.set_defaults(fn=_cmd_session)
 
     p = sub.add_parser("sweep", help="run a policy × workload × scenario grid")
     p.add_argument("--policies", default="",

@@ -27,8 +27,19 @@ parallel sweeps with resumable on-disk caching — through one module:
     api.register_policy("my-hybrid", lambda: api.compose(
         "my-hybrid", MySubmit(), api.get_component("opt", "MIN")()))
 
+    # streaming: an open session with online arrivals, live injection,
+    # snapshot/restore and mid-run what-if forks
+    ses = api.open_session(64, "GreedyPM */OPT=MIN")
+    ses.submit(api.WorkloadSpec("lublin", n_jobs=200, n_nodes=64))
+    ses.step_until(3600.0)
+    if ses.observe()["queue_depth"] > 8:
+        ses.inject({"kind": "fail", "t": 4000.0, "nodes": [0, 1, 2, 3]})
+    snap = ses.snapshot()                    # fingerprinted, JSON-serializable
+    alt = api.SimSession.restore(snap, policy="EASY")   # what-if branch
+    print(ses.run().mean_stretch, alt.run().mean_stretch)
+
 The same surface is scriptable as ``python -m repro`` (``simulate``,
-``sweep``, ``policies``, ``scenarios`` subcommands).
+``sweep``, ``session``, ``policies``, ``scenarios`` subcommands).
 """
 from __future__ import annotations
 
@@ -47,9 +58,13 @@ from .sched.components import (ComposedPolicy, Component, compose,
                                resolve_policy)
 from .sched.engine import Engine, Policy, SimParams, SimResult
 from .sched.scenarios import (apply_scenario, apply_scenario_trace,
-                              list_scenarios, parse_scenario_chain,
-                              register_scenario, scenario_docs)
-from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_grid)
+                              list_reactive, list_scenarios,
+                              parse_scenario_chain, reactive_docs,
+                              register_reactive, register_scenario,
+                              run_reactive, scenario_docs)
+from .sched.session import SessionState, SimSession, open_session
+from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_branches,
+                          run_grid)
 from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
                                  make_trace_ir, parse_workload,
                                  register_workload, workload_kind)
@@ -67,6 +82,8 @@ def __getattr__(name):
 __all__ = [
     # one-call entry points
     "simulate", "sweep", "list_policies",
+    # streaming sessions
+    "open_session", "SimSession", "SessionState",
     # policy surface
     "PolicySpec", "parse_policy", "render_policy", "TABLE1_POLICIES",
     "all_paper_policies", "Policy", "ComposedPolicy", "Component",
@@ -82,8 +99,10 @@ __all__ = [
     "ClusterEvent", "apply_scenario", "apply_scenario_trace",
     "parse_scenario_chain", "list_scenarios", "scenario_docs",
     "register_scenario",
+    # reactive scenarios (callbacks over live session state)
+    "run_reactive", "register_reactive", "list_reactive", "reactive_docs",
     # sweep subsystem
-    "Cell", "SweepResult", "RecordCache", "grid", "run_grid",
+    "Cell", "SweepResult", "RecordCache", "grid", "run_grid", "run_branches",
 ]
 
 TraceLike = Union[WorkloadSpec, Trace, Sequence[JobSpec]]

@@ -209,6 +209,17 @@ class NodeIncidence:
         self._dirty.update(mapping)
         self._snap = None
 
+    def extend(self, cpu_need_tail: np.ndarray) -> None:
+        """Grow the job-column space (streaming sessions append jobs).
+
+        Existing rows keep their cached arrays — old column data is
+        untouched — but the cached CSR snapshot is invalidated because the
+        matrix ``width`` (dense job count) changes.
+        """
+        self.cpu_need = np.concatenate(
+            [self.cpu_need, np.asarray(cpu_need_tail, dtype=np.float64)])
+        self._snap = None
+
     def csr(self) -> CSRIncidence:
         if self._snap is not None:
             return self._snap

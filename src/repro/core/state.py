@@ -231,6 +231,47 @@ class EngineState:
         self.demand_integral = 0.0     # ∫ min(|P|, demand) dt
 
     # ------------------------------------------------------------------ #
+    # online ingest (streaming sessions)                                  #
+    # ------------------------------------------------------------------ #
+    def extend(self, specs: Sequence[JobSpec]) -> List[int]:
+        """Append jobs to the SoA state mid-simulation (true online
+        arrivals for :class:`repro.sched.session.SimSession`).
+
+        New rows start as ``S_NOT_ARRIVED``; the per-spec column values are
+        computed by the exact expressions ``__init__`` uses, so a state
+        grown in batches is bit-identical to one built in a single shot.
+        Returns the dense indices assigned to the new jobs.
+        """
+        specs = list(specs)
+        if not specs:
+            return []
+        base = len(self.specs)
+        k = len(specs)
+        self.specs.extend(specs)
+        tail_proc = np.array([s.proc_time for s in specs], dtype=np.float64)
+        tail_cpu = np.array([s.cpu_need for s in specs], dtype=np.float64)
+        tail_dem = np.array(
+            [s.n_tasks * s.cpu_need for s in specs], dtype=np.float64)
+        self.proc_time = np.concatenate([self.proc_time, tail_proc])
+        self.cpu_need = np.concatenate([self.cpu_need, tail_cpu])
+        self.demand = np.concatenate([self.demand, tail_dem])
+        self.vt = np.concatenate([self.vt, np.zeros(k)])
+        self.yld = np.concatenate([self.yld, np.zeros(k)])
+        self.penalty_until = np.concatenate(
+            [self.penalty_until, np.full(k, -np.inf)])
+        self.completed_at = np.concatenate(
+            [self.completed_at, np.full(k, np.nan)])
+        self.status = np.concatenate(
+            [self.status, np.full(k, S_NOT_ARRIVED, dtype=np.int8)])
+        self.n_pmtn = np.concatenate(
+            [self.n_pmtn, np.zeros(k, dtype=np.int64)])
+        self.n_mig = np.concatenate([self.n_mig, np.zeros(k, dtype=np.int64)])
+        self.mappings.extend([None] * k)
+        self.views.extend(JobView(self, base + j) for j in range(k))
+        self.inc.extend(tail_cpu)
+        return list(range(base, base + k))
+
+    # ------------------------------------------------------------------ #
     # index helpers                                                       #
     # ------------------------------------------------------------------ #
     def running_indices(self) -> np.ndarray:

@@ -3,13 +3,21 @@
 ``repro.api`` is the supported surface; the historical wrappers
 (``simulate``, ``DFRSSimulator``, ``batch_schedule``) keep working but
 announce themselves exactly once per process so long-running sweeps are
-not flooded.
+not flooded.  All of the legacy entry points are *closed-world* (full
+trace in, one result out) — the migration pointer names both
+``repro.api.simulate`` (the like-for-like replacement) and
+``repro.api.open_session`` (the streaming session API) so callers who
+wrapped these shims in their own stepping loops land on the right door.
 """
 from __future__ import annotations
 
 import warnings
 
 _WARNED: set = set()
+
+#: the migration pointer for closed-world simulate-style entry points
+BATCH_REPLACEMENT = ("repro.api.simulate (or repro.api.open_session for "
+                     "streaming/step-wise runs)")
 
 
 def warn_once(name: str, replacement: str = "repro.api") -> None:

@@ -11,7 +11,7 @@ from typing import Optional, Sequence
 
 from ..core.job import JobSpec
 from ..core.policies import parse_policy
-from ._compat import warn_once
+from ._compat import BATCH_REPLACEMENT, warn_once
 from .engine import Engine, SimParams, SimResult
 
 __all__ = ["batch_schedule"]
@@ -22,7 +22,7 @@ def batch_schedule(
     algo: str,
     params: Optional[SimParams] = None,
 ) -> SimResult:
-    warn_once("repro.sched.batch.batch_schedule")
+    warn_once("repro.sched.batch.batch_schedule", BATCH_REPLACEMENT)
     spec = parse_policy(algo)
     if not spec.is_batch:
         raise ValueError(algo)

@@ -30,7 +30,7 @@ from __future__ import annotations
 import heapq
 import math
 from collections import Counter, deque
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from itertools import islice
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,14 +41,15 @@ from ..core.greedy import greedy_p, greedy_place, greedy_pm
 from ..core.job import COMPLETED, PAUSED, PENDING, RUNNING, JobSpec
 from ..core.mcb8 import mcb8
 from ..core.policies import PolicySpec, parse_policy
-from ..core.state import EngineState, JobView, S_COMPLETED, S_PENDING
+from ..core.state import EngineState, JobView
 from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
 from ..core.yield_alloc import allocate, allocate_incidence
 from ..workloads.trace import Trace
 from .cluster import ClusterEvent
 
 __all__ = ["SimParams", "SimResult", "Engine", "Policy", "DFRSPolicy",
-           "BatchPolicy", "make_policy", "make_seed_policy"]
+           "BatchPolicy", "make_policy", "make_seed_policy",
+           "resolve_policy_arg"]
 
 _EPS = 1e-9
 
@@ -90,6 +91,16 @@ class SimResult:
     makespan: float
     events: int
     hit_max_events: bool = False    # True only with on_max_events="truncate"
+    # observability: final simulation clock and the engine-loop wall time.
+    # ``sim_wall_s`` is a measurement, not a simulation outcome, so it is
+    # excluded from equality (bit-identity comparisons stay meaningful).
+    final_time: float = 0.0
+    sim_wall_s: float = field(default=0.0, compare=False)
+
+    @property
+    def n_events(self) -> int:
+        """Alias of ``events`` (the sweep-record observability spelling)."""
+        return self.events
 
 
 # ---------------------------------------------------------------------------
@@ -419,6 +430,30 @@ def make_seed_policy(spec: PolicySpec) -> Policy:
     return BatchPolicy(spec.name) if spec.is_batch else DFRSPolicy(spec)
 
 
+def resolve_policy_arg(
+    policy: "PolicySpec | str | Policy",
+) -> Tuple[Optional[PolicySpec], Policy, Optional[str]]:
+    """Resolve any policy argument to ``(spec, policy_object, ref)``.
+
+    ``ref`` is a string that rebuilds an equivalent fresh policy later (the
+    canonical grammar spelling or a registered composition name) — it is
+    what session snapshots persist.  Raw :class:`Policy` instances resolve
+    to ``ref=None`` unless their ``.name`` is a registered composition.
+    """
+    if isinstance(policy, Policy):
+        from .components import registered_policies
+        name = getattr(policy, "name", None)
+        ref = name if name in registered_policies() else None
+        return None, policy, ref
+    if isinstance(policy, str):
+        from .components import resolve_policy
+        named = resolve_policy(policy)
+        if named is not None:
+            return None, named, policy
+    spec = parse_policy(policy) if isinstance(policy, str) else policy
+    return spec, make_policy(spec), spec.name
+
+
 # ---------------------------------------------------------------------------
 # engine
 # ---------------------------------------------------------------------------
@@ -433,21 +468,7 @@ class Engine:
         cluster_events: Sequence[ClusterEvent] = (),
     ):
         self.params = params or SimParams()
-        if isinstance(policy, Policy):
-            self.policy_spec = None
-            self.policy = policy
-        else:
-            named = None
-            if isinstance(policy, str):
-                from .components import resolve_policy
-                named = resolve_policy(policy)
-            if named is not None:
-                self.policy_spec = None
-                self.policy = named
-            else:
-                spec = parse_policy(policy) if isinstance(policy, str) else policy
-                self.policy_spec = spec
-                self.policy = make_policy(spec)
+        self.policy_spec, self.policy, self.policy_ref = resolve_policy_arg(policy)
         if isinstance(specs, Trace):
             # array-native ingest: columns feed the SoA state directly
             self.state = EngineState.from_trace(specs, self.params.n_nodes)
@@ -559,78 +580,20 @@ class Engine:
     # main loop                                                           #
     # ------------------------------------------------------------------ #
     def run(self) -> SimResult:
-        p = self.params
-        st = self.state
-        pol = self.policy
-        arrivals = st.specs
-        ai = 0
-        cev = self.cluster_events if pol.handles_cluster_events else []
-        ci = 0
-        periodic = pol.periodic_kind is not None
-        next_tick = math.inf
-        if periodic and arrivals:
-            next_tick = arrivals[0].release + p.period
-        hit_cap = False
-
-        while True:
-            self._events += 1
-            if self._events > p.max_events:
-                self._events = p.max_events
-                if p.on_max_events == "truncate":
-                    hit_cap = True
-                    break
-                n_done = int((st.status == S_COMPLETED).sum())
-                raise RuntimeError(
-                    f"event budget exceeded: max_events={p.max_events} at "
-                    f"t={st.now:.6g}s with {n_done}/{len(arrivals)} jobs "
-                    f"completed (policy {pol.__class__.__name__}); raise "
-                    f"SimParams.max_events or set on_max_events='truncate' "
-                    f"for a partial SimResult")
-            t_arr = arrivals[ai].release if ai < len(arrivals) else math.inf
-            t_cev = cev[ci].time if ci < len(cev) else math.inf
-            t_done = st.next_completion_time()
-            live = st.any_in_system()
-            t_tick = next_tick if (periodic and (live or ai < len(arrivals))) else math.inf
-            t_next = min(t_arr, t_done, t_tick, t_cev)
-            if math.isinf(t_next):
-                break
-            st.advance(t_next)
-
-            acted = False
-            # 1) completions
-            while True:
-                fin = st.finished_running_indices()
-                if fin.size == 0:
-                    break
-                for i in fin:
-                    js = st.views[i]
-                    pol.on_job_completed(js)   # mapping still set here
-                    self.complete(js)
-                pol.on_complete()
-                acted = True
-            # 2) cluster events
-            while ci < len(cev) and cev[ci].time <= st.now + _EPS:
-                self._apply_cluster_event(cev[ci])
-                ci += 1
-                acted = True
-            # 3) arrivals
-            while ai < len(arrivals) and arrivals[ai].release <= st.now + _EPS:
-                i = ai
-                ai += 1
-                st.status[i] = S_PENDING
-                pol.on_submit(st.views[i])
-                acted = True
-            # 4) periodic tick
-            if periodic and st.now + _EPS >= next_tick:
-                pol.on_tick()
-                next_tick += p.period
-                acted = True
-            pol.finalize(acted)
-
-        return self._result(hit_cap)
+        """Closed-world wrapper over the streaming session core: open a
+        :class:`repro.sched.session.SimSession` on this engine, step it to
+        exhaustion, finalize.  The session drives the exact event-iteration
+        sequence of the historical monolithic loop — where step boundaries
+        fall never changes a ``SimResult`` bit."""
+        from .session import SimSession
+        return SimSession.from_engine(self).run()
 
     # ------------------------------------------------------------------ #
-    def _result(self, hit_cap: bool = False) -> SimResult:
+    def _result(self, hit_cap: bool = False, partial: bool = False,
+                sim_wall_s: float = 0.0) -> SimResult:
+        """Metrics over the completed jobs.  ``partial`` permits uncompleted
+        jobs (a mid-run session result); a finished run still treats them as
+        a deadlock unless the event cap truncated it."""
         from .metrics import bounded_stretch
 
         p = self.params
@@ -639,8 +602,8 @@ class Engine:
         stretches: Dict[int, float] = {}
         for js in st.views:
             if js.completed_at is None:
-                if hit_cap:
-                    continue            # truncated run: report finished jobs
+                if hit_cap or partial:
+                    continue            # partial run: report finished jobs
                 raise RuntimeError(
                     f"job {js.spec.jid} never completed (deadlock?)")
             completions[js.spec.jid] = js.completed_at
@@ -680,6 +643,8 @@ class Engine:
             makespan=makespan,
             events=self._events,
             hit_max_events=hit_cap,
+            final_time=st.now,
+            sim_wall_s=sim_wall_s,
         )
 
 

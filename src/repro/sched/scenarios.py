@@ -37,10 +37,29 @@ with any workload):
 Use :func:`apply_scenario_trace` (columnar) or :func:`apply_scenario`
 (``JobSpec``-list compatibility wrapper) to materialize a cell, and
 :func:`register_scenario` to add project-specific transforms.
+
+**Reactive scenarios** are the second, session-native layer: where a Trace
+transform perturbs a cell *before* the run, a reactive rule is a callback
+over a live :class:`repro.sched.session.SimSession` — it observes the
+actual queue/cluster state between steps and injects events or submits
+jobs in response (closed-loop perturbations the Trace grammar cannot
+express, e.g. a load spike triggered by the queue draining).  A rule has
+signature ``(session, observation, rng) -> None`` and is driven by
+:func:`run_reactive`, which steps the session one interval at a time and
+calls the rule after each chunk.  Register project rules with
+:func:`register_reactive`; built-ins:
+
+* ``surge_submit``    — flash crowd on drain: each time the observed queue
+                        empties mid-run, submit a burst of short jobs
+                        (at most 3 bursts).
+* ``elastic_reserve`` — hold a quarter of the nodes in reserve; join them
+                        when the observed queue exceeds half the live
+                        cluster, reclaim them once the queue drains and
+                        the reserve is idle.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,12 +69,17 @@ from .cluster import ClusterEvent, failure_trace
 
 __all__ = [
     "SCENARIOS",
+    "REACTIVE",
     "apply_scenario",
     "apply_scenario_trace",
     "parse_scenario_chain",
     "register_scenario",
     "list_scenarios",
     "scenario_docs",
+    "register_reactive",
+    "list_reactive",
+    "reactive_docs",
+    "run_reactive",
 ]
 
 # a scenario builder: (trace, n_nodes, rng) -> (trace, cluster_events)
@@ -216,3 +240,138 @@ def _mem_pressure(trace, n_nodes, rng):
     return trace.replace(
         mem_req=np.where(hit, np.minimum(1.0, 1.5 * trace.mem_req),
                          trace.mem_req)), []
+
+
+# --------------------------------------------------------------------------- #
+# reactive scenarios: callbacks over live session state                        #
+# --------------------------------------------------------------------------- #
+# a reactive rule: (session, observation, rng) -> None; it may call
+# session.inject(...) / session.submit(...) based on what it observes
+REACTIVE: Dict[str, Callable] = {}
+
+
+def register_reactive(name: str):
+    """Decorator: register a reactive rule ``(session, obs, rng) -> None``."""
+
+    def deco(fn: Callable) -> Callable:
+        if name in REACTIVE:
+            raise ValueError(f"reactive scenario {name!r} already registered")
+        REACTIVE[name] = fn
+        return fn
+    return deco
+
+
+def list_reactive() -> List[str]:
+    return sorted(REACTIVE)
+
+
+def reactive_docs() -> Dict[str, str]:
+    """name -> first docstring line of the registered rule."""
+    return {name: (fn.__doc__ or "").strip().split("\n")[0]
+            for name, fn in sorted(REACTIVE.items())}
+
+
+def run_reactive(
+    session,
+    rule,
+    seed: int = 0,
+    interval: Optional[float] = None,
+    max_rounds: int = 100_000,
+):
+    """Drive ``session`` to exhaustion under a reactive rule.
+
+    Steps the session roughly one ``interval`` (default: the session's
+    periodic-pass period) past its next event at a time; after every chunk
+    the rule sees the fresh observation and may inject events or submit
+    jobs — including re-arming an exhausted session (the loop then
+    continues).  The rule's RNG stream is salted by its name, mirroring
+    the Trace-transform chain semantics.  Returns the final
+    :class:`~repro.sched.engine.SimResult`.
+    """
+    import math
+
+    if isinstance(rule, str):
+        name = rule
+        try:
+            rule = REACTIVE[rule]
+        except KeyError:
+            raise KeyError(f"unknown reactive scenario {name!r}; "
+                           f"known: {list_reactive()}") from None
+    else:
+        # salt by the *registered* name when the callable is registered, so
+        # run_reactive(ses, "x") and run_reactive(ses, REACTIVE["x"]) draw
+        # the same stream; ad-hoc rules fall back to their __name__
+        name = next((n for n, f in REACTIVE.items() if f is rule),
+                    getattr(rule, "__name__", "reactive"))
+    rng = np.random.default_rng(np.random.SeedSequence([seed, _code(name)]))
+    if interval is None:
+        interval = session.engine.params.period
+    interval = float(interval)
+    if interval <= 0:
+        raise ValueError("interval must be > 0")
+    for _ in range(max_rounds):
+        nxt = session.next_event_time()
+        if math.isinf(nxt):
+            session.run_to_exhaustion()     # final probe marks exhaustion
+        else:
+            session.step_until(max(session.now, nxt) + interval)
+        rule(session, session.observe(), rng)
+        if session.exhausted:
+            return session.result()
+    raise RuntimeError(
+        f"reactive scenario {name!r} did not converge within "
+        f"{max_rounds} rounds (interval={interval:.6g}s)")
+
+
+@register_reactive("surge_submit")
+def _surge_submit(session, obs, rng):
+    """Flash crowd on drain: when the observed queue empties mid-run, submit a burst of short single-task jobs (at most 3 bursts)."""
+    st = session.scratch.setdefault("surge_submit", {"bursts": 0})
+    in_flight = obs["n_running"] + obs["n_future"]
+    if st["bursts"] >= 3 or obs["queue_depth"] > 0 or in_flight == 0:
+        return
+    st["bursts"] += 1
+    k = 8
+    base = max(session._jids, default=0) + 1
+    now = session.now
+    burst = [
+        JobSpec(jid=base + i,
+                release=now + float(rng.uniform(1.0, 30.0)),
+                proc_time=float(rng.uniform(60.0, 600.0)),
+                n_tasks=1,
+                cpu_need=float(rng.uniform(0.2, 1.0)),
+                mem_req=float(rng.uniform(0.1, 0.4)))
+        for i in range(k)
+    ]
+    session.submit(burst)
+
+
+@register_reactive("elastic_reserve")
+def _elastic_reserve(session, obs, rng):
+    """Elastic capacity: hold 1/4 of the nodes in reserve; join them when the queue exceeds half the live cluster, reclaim them once idle."""
+    if not session.handles_cluster_events:
+        raise ValueError("elastic_reserve needs a policy that handles "
+                         "cluster events (batch baselines do not)")
+    n = session.engine.params.n_nodes
+    k = max(1, n // 4)
+    reserve = tuple(range(n - k, n))
+    st = session.scratch.setdefault("elastic_reserve",
+                                    {"out": False, "init": False})
+    state = session.engine.state
+    if not st["init"]:
+        st["init"] = True
+        # reclaim the reserve up front (attach the rule from the start:
+        # a fail force-preempts any resident jobs)
+        session.inject(ClusterEvent(time=session.now, kind="fail",
+                                    nodes=reserve))
+        return
+    if not st["out"] and obs["queue_depth"] > obs["alive_nodes"] // 2:
+        session.inject(ClusterEvent(time=session.now, kind="join",
+                                    nodes=reserve))
+        st["out"] = True
+        return
+    reserve_idle = all(not state.inc.rows[node] for node in reserve)
+    if st["out"] and obs["queue_depth"] == 0 and reserve_idle:
+        session.inject(ClusterEvent(time=session.now, kind="fail",
+                                    nodes=reserve))
+        st["out"] = False

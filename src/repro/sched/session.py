@@ -1,0 +1,836 @@
+"""Streaming simulation sessions: the open step/ingest driver API.
+
+The paper's premise is *online, non-clairvoyant* scheduling, but the
+historical ``Engine.run()`` was closed-world batch: full trace in, one
+``SimResult`` out.  :class:`SimSession` re-exposes the same event loop as a
+resumable session:
+
+* :meth:`SimSession.submit` — true online arrivals: feed jobs (a
+  ``Trace``, ``JobSpec`` list or declarative ``WorkloadSpec``) at any sim
+  time, in any number of batches;
+* :meth:`SimSession.step_until` / :meth:`SimSession.step` — advance the
+  simulation to a time bound or by an event count, observing live state
+  between steps;
+* :meth:`SimSession.inject` — live perturbations (node fail/restore
+  scripts, period changes) conditioned on *observed* session state;
+* :meth:`SimSession.snapshot` / :meth:`SimSession.restore` — a
+  serializable, fingerprinted :class:`SessionState` (the full SoA
+  ``EngineState`` including the CSR incidence, the policy's internal
+  state, and the session's own loop cursor) that resumes *bit-identically*
+  in the same or a fresh process;
+* :meth:`SimSession.fork` — what-if branching: clone the live state
+  mid-run, optionally under a *different* policy, and compare outcomes
+  from an identical starting point (a scenario axis no batch run can
+  produce);
+* :meth:`SimSession.result` — finalize partial or complete metrics.
+
+Bit-identity contract: the session executes the exact event-iteration
+sequence of the pre-refactor monolithic loop.  ``step_until(t)`` never
+advances the engine clock to ``t`` itself — it only processes the event
+timestamps ``<= t`` — so the fluid-progress integrals see the identical
+sequence of ``advance()`` windows no matter where step boundaries fall,
+and ``Engine.run()`` (open → step to exhaustion → result) reproduces the
+historical results bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import heapq
+import json
+import math
+import os
+import time
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.job import JobSpec
+from ..core.state import S_COMPLETED, S_NOT_ARRIVED, S_PAUSED, S_PENDING
+from ..workloads.trace import Trace, as_trace
+from .cluster import ClusterEvent
+from .engine import (_EPS, BatchPolicy, DFRSPolicy, Engine, Policy, SimParams,
+                     SimResult, resolve_policy_arg)
+
+__all__ = ["SimSession", "SessionState", "open_session"]
+
+SCHEMA = "repro.session/v1"
+
+_JOB_COLS = ("jid", "release", "proc_time", "n_tasks", "cpu_need", "mem_req")
+
+
+# --------------------------------------------------------------------------- #
+# snapshots                                                                    #
+# --------------------------------------------------------------------------- #
+class SessionState:
+    """Serializable snapshot of a :class:`SimSession` at one event boundary.
+
+    Wraps a JSON-able payload (exact float round-trips via ``repr``;
+    ``Infinity``/``NaN`` use the ``json`` module's standard extensions).
+    ``fingerprint`` is a SHA-256 over the canonical payload text — two
+    snapshots with equal fingerprints resume into bit-identical sessions.
+    """
+
+    __slots__ = ("payload", "_fingerprint")
+
+    def __init__(self, payload: Dict[str, Any]):
+        if payload.get("schema") != SCHEMA:
+            raise ValueError(f"not a {SCHEMA} snapshot "
+                             f"(schema: {payload.get('schema')!r})")
+        self.payload = payload
+        self._fingerprint: Optional[str] = None
+
+    @property
+    def fingerprint(self) -> str:
+        fp = self._fingerprint
+        if fp is None:
+            canon = json.dumps(self.payload, sort_keys=True)
+            fp = hashlib.sha256(canon.encode()).hexdigest()
+            self._fingerprint = fp
+        return fp
+
+    # convenience accessors -------------------------------------------------
+    @property
+    def time(self) -> float:
+        """Engine clock at snapshot time."""
+        return float(self.payload["now"])
+
+    @property
+    def policy(self) -> Optional[str]:
+        """Rebuildable policy reference (grammar/registered spelling)."""
+        return self.payload["policy"]
+
+    @property
+    def n_jobs(self) -> int:
+        return len(self.payload["jobs"]["jid"])
+
+    def __repr__(self) -> str:
+        return (f"SessionState(t={self.time:.6g}, n_jobs={self.n_jobs}, "
+                f"policy={self.policy!r}, fingerprint={self.fingerprint[:12]}…)")
+
+    # serialization ---------------------------------------------------------
+    def to_json_dict(self) -> Dict[str, Any]:
+        return {"fingerprint": self.fingerprint, **self.payload}
+
+    @classmethod
+    def from_json_dict(cls, payload: Dict[str, Any]) -> "SessionState":
+        payload = dict(payload)
+        want = payload.pop("fingerprint", None)
+        snap = cls(payload)
+        if want is not None and want != snap.fingerprint:
+            raise ValueError("session snapshot fingerprint mismatch after "
+                             "round-trip (corrupted payload?)")
+        return snap
+
+    def save(self, path: str) -> str:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "w") as f:
+                json.dump(self.to_json_dict(), f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "SessionState":
+        with open(path) as f:
+            return cls.from_json_dict(json.load(f))
+
+
+# --------------------------------------------------------------------------- #
+# policy-state capture                                                         #
+#                                                                              #
+# Policies keep private scheduling state (the batch FIFO queue / free-node     #
+# heap, the stretch-pass yield flag).  Snapshots persist it exactly; what-if   #
+# forks that *switch* policy instead rebuild a fresh state from the live       #
+# engine.  Custom policies/components opt in via snapshot_state() /            #
+# restore_state(payload, engine) (and adopt_state(engine) for switches).       #
+# --------------------------------------------------------------------------- #
+def _snapshot_policy_state(pol: Policy) -> Dict[str, Any]:
+    from .components import ComposedPolicy, _BatchState, batch_state_payload
+
+    if hasattr(pol, "snapshot_state"):
+        return {"kind": "custom", "payload": pol.snapshot_state()}
+    if isinstance(pol, ComposedPolicy):
+        shared: Dict[str, Any] = {}
+        for k, v in pol.shared.items():
+            if isinstance(v, _BatchState):
+                shared[k] = {"__batch__": batch_state_payload(v)}
+            elif v is None or isinstance(v, (bool, int, float, str)):
+                shared[k] = v
+            else:
+                raise TypeError(
+                    f"policy shared state {k!r} ({type(v).__name__}) is not "
+                    f"snapshottable; give the owning component "
+                    f"snapshot_state()/restore_state()")
+        comps: Dict[str, Any] = {}
+        for idx, c in enumerate(pol.components):
+            if hasattr(c, "snapshot_state"):
+                comps[str(idx)] = c.snapshot_state()
+        return {"kind": "composed", "shared": shared, "components": comps}
+    if isinstance(pol, BatchPolicy):
+        return {
+            "kind": "batch-seed",
+            "queue": [js.i for js in pol.queue],
+            "free": list(pol.free),
+            "running": [list(r) for r in pol.running],
+            "dirty": pol._dirty,
+        }
+    if isinstance(pol, DFRSPolicy):
+        return {"kind": "dfrs-seed",
+                "stretch_yields_set": pol._stretch_yields_set}
+    raise TypeError(
+        f"policy {pol!r} is not snapshottable; implement "
+        f"snapshot_state()/restore_state(payload, engine)")
+
+
+def _restore_policy_state(pol: Policy, payload: Dict[str, Any],
+                          engine: Engine) -> None:
+    from collections import deque
+
+    from .components import ComposedPolicy, batch_state_from_payload
+
+    kind = payload["kind"]
+    st = engine.state
+    if kind == "custom":
+        pol.restore_state(payload["payload"], engine)
+        return
+    if kind == "composed":
+        assert isinstance(pol, ComposedPolicy)
+        for k, v in payload["shared"].items():
+            if isinstance(v, dict) and "__batch__" in v:
+                pol.shared[k] = batch_state_from_payload(
+                    v["__batch__"], st.views, engine.params.n_nodes)
+            else:
+                pol.shared[k] = v
+        for idx, cp in payload["components"].items():
+            pol.components[int(idx)].restore_state(cp, engine)
+        return
+    if kind == "batch-seed":
+        assert isinstance(pol, BatchPolicy)
+        pol.queue = deque(st.views[int(i)] for i in payload["queue"])
+        pol.free = [int(n) for n in payload["free"]]
+        pol.running = [(float(e), int(j), int(n))
+                       for e, j, n in payload["running"]]
+        pol._dirty = bool(payload["dirty"])
+        return
+    if kind == "dfrs-seed":
+        assert isinstance(pol, DFRSPolicy)
+        pol._stretch_yields_set = bool(payload["stretch_yields_set"])
+        return
+    raise ValueError(f"unknown policy-state kind {kind!r}")
+
+
+def _adopt_policy_state(pol: Policy, engine: Engine) -> None:
+    """Rebuild a freshly-bound policy's internal state from the *live*
+    engine state — the what-if fork path, where the restored session runs a
+    different policy than the one that produced the snapshot.
+
+    §4 DFRS compositions are stateless between events, so nothing needs
+    rebuilding.  Batch-queue compositions get a reconstructed queue state:
+    waiting (pending/paused) jobs queue FIFO by ``(release, jid)``; running
+    jobs that hold whole nodes exclusively are adopted as batch-started
+    (yield pinned to 1, completion estimated at ``now + remaining_vt``);
+    co-located fractional jobs go through the fractional-backfill
+    bookkeeping, so their nodes return to the free pool only when they
+    drain.
+    """
+    from .components import ComposedPolicy, _BatchState
+
+    if hasattr(pol, "adopt_state"):
+        pol.adopt_state(engine)
+        return
+    if isinstance(pol, DFRSPolicy):
+        return
+    if isinstance(pol, ComposedPolicy):
+        if not any(c.kind == "submit" and c.component_name == "fcfs-queue"
+                   for c in pol.components):
+            return                      # DFRS composition: event-driven only
+        st = engine.state
+        n_nodes = engine.params.n_nodes
+        bs = _BatchState(n_nodes)
+        from collections import deque
+        waiting = sorted(
+            (st.views[i] for i in st.in_system_indices()
+             if int(st.status[i]) in (S_PENDING, S_PAUSED)),
+            key=lambda js: (js.spec.release, js.spec.jid))
+        bs.queue = deque(waiting)
+        occupied = {n for n in range(n_nodes) if st.inc.rows[n]}
+        bs.free = [n for n in range(n_nodes)
+                   if n not in occupied and st.alive[n]]
+        heapq.heapify(bs.free)
+        now = st.now
+        for js in st.running():
+            nodes = set(js.mapping)
+            exclusive = (len(nodes) == js.spec.n_tasks
+                         and all(len(st.inc.rows[n]) == 1 for n in nodes))
+            if exclusive:
+                bs.running.append((now + max(js.remaining_vt(), 0.0),
+                                   js.spec.jid, js.spec.n_tasks))
+                for n in nodes:
+                    bs.excl_owner[n] = js.spec.jid
+                js.yld = 1.0            # batch semantics: dedicated nodes
+            else:
+                bs.frac_jobs[js.spec.jid] = list(js.mapping)
+                for n in js.mapping:
+                    bs.frac_count[n] += 1
+        bs.dirty = True                 # drain the queue at the next event
+        pol.shared["batch"] = bs
+        return
+    raise TypeError(
+        f"cannot adopt live state into policy {pol!r}; implement "
+        f"adopt_state(engine) (seed BatchPolicy is oracle-only — fork onto "
+        f"the composed spelling instead)")
+
+
+# --------------------------------------------------------------------------- #
+# the session                                                                  #
+# --------------------------------------------------------------------------- #
+class SimSession:
+    """A resumable simulation: the engine's event loop as an open API.
+
+    Build one with :func:`repro.api.open_session` (empty cluster, submit
+    jobs online) or :meth:`from_engine` (adopt a fully-constructed
+    :class:`Engine` — what ``Engine.run()`` does).  All stepping entry
+    points share one loop implementation, so results never depend on how
+    the run was partitioned.
+    """
+
+    # -- construction -------------------------------------------------------
+    def __init__(
+        self,
+        policy,
+        params: Optional[SimParams] = None,
+        *,
+        cluster_events: Sequence[ClusterEvent] = (),
+        **param_overrides: Any,
+    ):
+        if params is None:
+            params = SimParams(**param_overrides)
+        else:
+            params = dataclasses.replace(params, **param_overrides)
+        self._init_from_engine(Engine((), policy, params, cluster_events))
+
+    @classmethod
+    def from_engine(cls, engine: Engine) -> "SimSession":
+        """Adopt a constructed engine (its not-yet-arrived jobs become the
+        session's arrival stream; the closed-world ``Engine.run()`` path)."""
+        ses = cls.__new__(cls)
+        ses._init_from_engine(engine)
+        return ses
+
+    def _init_from_engine(self, engine: Engine) -> None:
+        self.engine = engine
+        st = engine.state
+        pol = engine.policy
+        self._arrivals: List[Tuple[float, int, int]] = [
+            (s.release, s.jid, i) for i, s in enumerate(st.specs)
+            if int(st.status[i]) == S_NOT_ARRIVED
+        ]
+        heapq.heapify(self._arrivals)
+        self._jids = {s.jid for s in st.specs}
+        self._cev: List[ClusterEvent] = (
+            list(engine.cluster_events) if pol.handles_cluster_events else [])
+        self._ci = 0
+        self._periodic = pol.periodic_kind is not None
+        self._next_tick = math.inf
+        self._tick_armed = False
+        if self._periodic and self._arrivals:
+            self._next_tick = self._arrivals[0][0] + engine.params.period
+            self._tick_armed = True
+        self._exhausted = False
+        self._hit_cap = False
+        self._horizon = st.now
+        self._wall = 0.0
+        #: ephemeral driver scratchpad (reactive rules keep per-session
+        #: state here); deliberately NOT part of snapshots
+        self.scratch: Dict[str, Any] = {}
+
+    # -- introspection ------------------------------------------------------
+    @property
+    def now(self) -> float:
+        """Session clock: the engine clock or the last ``step_until``
+        target, whichever is later."""
+        return max(self.engine.state.now, self._horizon)
+
+    @property
+    def n_events(self) -> int:
+        return self.engine._events
+
+    @property
+    def exhausted(self) -> bool:
+        """No future event exists (until new jobs/events are submitted)."""
+        return self._exhausted
+
+    @property
+    def handles_cluster_events(self) -> bool:
+        return self.engine.policy.handles_cluster_events
+
+    @property
+    def policy_name(self) -> str:
+        e = self.engine
+        if e.policy_spec is not None:
+            return e.policy_spec.name
+        return (getattr(e.policy, "name", None)
+                or getattr(e.policy, "algo", None)
+                or getattr(getattr(e.policy, "spec", None), "name", None)
+                or e.policy.__class__.__name__)
+
+    def next_event_time(self) -> float:
+        """Peek the next event timestamp (``inf`` when nothing is left).
+        Pure: a peek is not an engine event and never perturbs the run."""
+        st = self.engine.state
+        t_arr = self._arrivals[0][0] if self._arrivals else math.inf
+        t_cev = (self._cev[self._ci].time
+                 if self._ci < len(self._cev) else math.inf)
+        t_tick = (self._next_tick
+                  if (self._periodic
+                      and (st.any_in_system() or self._arrivals))
+                  else math.inf)
+        return min(t_arr, st.next_completion_time(), t_tick, t_cev)
+
+    def observe(self) -> Dict[str, Any]:
+        """Scheduler-visible live state (what reactive rules and the
+        streaming CLI see between steps)."""
+        st = self.engine.state
+        status = st.status
+        run = st.running_indices()
+        alive = float(st.alive.sum())
+        util = float((st.yld[run] * st.demand[run]).sum())
+        return {
+            "t": self.now,
+            "engine_t": st.now,
+            "events": self.engine._events,
+            "n_future": len(self._arrivals),
+            "n_pending": int((status == S_PENDING).sum()),
+            "n_running": int(run.size),
+            "n_paused": int((status == S_PAUSED).sum()),
+            "n_completed": int((status == S_COMPLETED).sum()),
+            "queue_depth": int(((status == S_PENDING)
+                                | (status == S_PAUSED)).sum()),
+            "alive_nodes": int(alive),
+            "utilization": util / max(alive, 1e-9),
+            "n_pmtn": self.engine.n_pmtn,
+            "n_mig": self.engine.n_mig,
+            "bytes_moved_gb": self.engine.bytes_moved_gb,
+            "exhausted": self._exhausted,
+        }
+
+    # -- online ingest ------------------------------------------------------
+    def submit(self, jobs: Union[Trace, Sequence[JobSpec], Any],
+               *, shift: Union[None, float, str] = None) -> List[int]:
+        """Feed jobs into the running simulation (true online arrivals).
+
+        ``jobs`` is a :class:`Trace`, a ``JobSpec`` sequence, or a
+        declarative ``WorkloadSpec`` (materialized via the registry).
+        ``shift`` offsets every release time: a float adds seconds,
+        ``"now"`` aligns the batch's first release with the session clock.
+        Releases must not predate the engine clock (history is immutable);
+        job ids must be globally unique within the session.  Returns the
+        dense engine indices assigned to the new jobs.
+        """
+        from ..workloads.registry import WorkloadSpec, make_trace_ir
+        if isinstance(jobs, WorkloadSpec):
+            trace = make_trace_ir(jobs)
+        else:
+            trace = as_trace(jobs)
+        if len(trace) and shift is not None:
+            if shift == "now":
+                delta = self.now - float(trace.release.min())
+            else:
+                delta = float(shift)
+            trace = trace.replace(release=trace.release + delta)
+        specs = trace.sorted_by_release().to_specs()
+        if not specs:
+            return []
+        st = self.engine.state
+        if specs[0].release < st.now - _EPS:
+            raise ValueError(
+                f"job {specs[0].jid} released at t={specs[0].release:.6g} "
+                f"but the engine clock is already at {st.now:.6g}; pass "
+                f"shift='now' (or a float offset) to submit live")
+        jids = [s.jid for s in specs]
+        dup = self._jids.intersection(jids)
+        if dup or len(set(jids)) != len(jids):
+            dup = sorted(dup) or "within the batch"
+            raise ValueError(f"duplicate job ids {dup}; session job ids "
+                             f"must be unique")
+        self.engine.policy.validate(specs, self.engine.params)
+        idx = st.extend(specs)
+        for i, s in zip(idx, specs):
+            heapq.heappush(self._arrivals, (s.release, s.jid, i))
+            self._jids.add(s.jid)
+        if self._periodic and not self._tick_armed:
+            # mirror the closed-world loop: the tick train starts one
+            # period after the first release the session ever saw
+            self._next_tick = specs[0].release + self.engine.params.period
+            self._tick_armed = True
+        self._exhausted = False         # new future work re-arms the loop
+        return idx
+
+    def inject(self, event: Union[ClusterEvent, Dict[str, Any]]) -> None:
+        """Schedule a live perturbation.
+
+        ``event`` is a :class:`ClusterEvent` (or a dict like
+        ``{"kind": "fail", "t": 1200, "nodes": [0, 1]}``); ``kind``
+        ``"period"`` with a ``"period"`` value changes the periodic-pass
+        period immediately instead.  Fail/join events are processed by the
+        stepping loop at their timestamp (which must not predate the engine
+        clock) exactly like a pre-scripted scenario event.
+        """
+        if isinstance(event, dict):
+            kind = event.get("kind")
+            if kind == "period":
+                self.set_period(event["period"])
+                return
+            event = ClusterEvent(
+                time=float(event.get("t", event.get("time", self.now))),
+                kind=kind,
+                nodes=tuple(int(n) for n in event.get("nodes", ())),
+            )
+        if not self.engine.policy.handles_cluster_events:
+            raise ValueError(
+                f"policy {self.policy_name!r} does not handle cluster "
+                f"events (batch baselines do not model failures)")
+        st = self.engine.state
+        if event.time < st.now - _EPS:
+            raise ValueError(
+                f"cannot inject an event at t={event.time:.6g}: the engine "
+                f"clock is already at {st.now:.6g}")
+        bad = [n for n in event.nodes
+               if not (0 <= n < self.engine.params.n_nodes)]
+        if bad:
+            raise ValueError(f"nodes {bad} outside the "
+                             f"{self.engine.params.n_nodes}-node cluster")
+        # keep the pending suffix time-sorted (stable after equal times)
+        pos = self._ci
+        while pos < len(self._cev) and self._cev[pos].time <= event.time:
+            pos += 1
+        self._cev.insert(pos, event)
+        self._exhausted = False
+        return
+
+    def set_period(self, period: float) -> None:
+        """Change the periodic-pass period live (takes effect from the next
+        tick; no-op for compositions without a periodic component)."""
+        period = float(period)
+        if period <= 0:
+            raise ValueError("period must be > 0")
+        self.engine.params.period = period
+
+    # -- stepping -----------------------------------------------------------
+    def _loop(self, until: float = math.inf,
+              max_steps: Optional[int] = None) -> int:
+        """The one event loop behind every stepping entry point.
+
+        Processes event timestamps while they are ``<= until`` (boundary
+        peeks are side-effect-free: they do not count as engine events) and
+        while fewer than ``max_steps`` timestamps have been handled.  The
+        committed iteration — event counting, cap checking, fluid advance,
+        hook order — replicates the historical ``Engine.run()`` loop
+        exactly.
+        """
+        e = self.engine
+        p = e.params
+        st = e.state
+        pol = e.policy
+        heap = self._arrivals
+        cev = self._cev
+        periodic = self._periodic
+        steps = 0
+        t0 = time.perf_counter()
+        try:
+            while not self._exhausted:
+                if max_steps is not None and steps >= max_steps:
+                    break
+                t_arr = heap[0][0] if heap else math.inf
+                t_cev = cev[self._ci].time if self._ci < len(cev) else math.inf
+                t_done = st.next_completion_time()
+                live = st.any_in_system()
+                t_tick = (self._next_tick
+                          if (periodic and (live or heap)) else math.inf)
+                t_next = min(t_arr, t_done, t_tick, t_cev)
+                if t_next > until and not math.isinf(t_next):
+                    break               # boundary peek — not an engine event
+                e._events += 1
+                if e._events > p.max_events:
+                    e._events = p.max_events
+                    if p.on_max_events == "truncate":
+                        self._hit_cap = True
+                        self._exhausted = True
+                        break
+                    n_done = int((st.status == S_COMPLETED).sum())
+                    raise RuntimeError(
+                        f"event budget exceeded: max_events={p.max_events} at "
+                        f"t={st.now:.6g}s with {n_done}/{len(st.specs)} jobs "
+                        f"completed (policy {pol.__class__.__name__}); raise "
+                        f"SimParams.max_events or set on_max_events='truncate' "
+                        f"for a partial SimResult")
+                if math.isinf(t_next):
+                    self._exhausted = True
+                    break
+                st.advance(t_next)
+                steps += 1
+
+                acted = False
+                # 1) completions
+                while True:
+                    fin = st.finished_running_indices()
+                    if fin.size == 0:
+                        break
+                    for i in fin:
+                        js = st.views[i]
+                        pol.on_job_completed(js)   # mapping still set here
+                        e.complete(js)
+                    pol.on_complete()
+                    acted = True
+                # 2) cluster events
+                while self._ci < len(cev) and cev[self._ci].time <= st.now + _EPS:
+                    e._apply_cluster_event(cev[self._ci])
+                    self._ci += 1
+                    acted = True
+                # 3) arrivals
+                while heap and heap[0][0] <= st.now + _EPS:
+                    _, _, i = heapq.heappop(heap)
+                    st.status[i] = S_PENDING
+                    pol.on_submit(st.views[i])
+                    acted = True
+                # 4) periodic tick
+                if periodic and st.now + _EPS >= self._next_tick:
+                    pol.on_tick()
+                    self._next_tick += p.period
+                    acted = True
+                pol.finalize(acted)
+        finally:
+            self._wall += time.perf_counter() - t0
+        return steps
+
+    def step_until(self, t: float) -> float:
+        """Process every event timestamp ``<= t`` (inclusive); the session
+        clock then reads ``t``.  Returns the new session clock."""
+        t = float(t)
+        self._loop(until=t)
+        self._horizon = max(self._horizon, t, self.engine.state.now)
+        return self.now
+
+    def step(self, n_events: int = 1) -> int:
+        """Process up to ``n_events`` event timestamps; returns how many
+        were actually processed (0 when the run is exhausted)."""
+        if n_events < 1:
+            raise ValueError("n_events must be >= 1")
+        steps = self._loop(max_steps=int(n_events))
+        self._horizon = max(self._horizon, self.engine.state.now)
+        return steps
+
+    def run_to_exhaustion(self) -> "SimSession":
+        """Step until no future event exists."""
+        self._loop()
+        self._horizon = max(self._horizon, self.engine.state.now)
+        return self
+
+    def run(self) -> SimResult:
+        """Step to exhaustion and finalize (the ``Engine.run()`` contract)."""
+        self.run_to_exhaustion()
+        return self.result()
+
+    # -- finalization -------------------------------------------------------
+    def result(self, partial: Optional[bool] = None) -> SimResult:
+        """Finalize metrics.  Defaults to a *partial* result (covering the
+        completed jobs only) while events remain, and to the strict
+        closed-world result once exhausted."""
+        if partial is None:
+            partial = not self._exhausted
+        return self.engine._result(hit_cap=self._hit_cap, partial=partial,
+                                   sim_wall_s=self._wall)
+
+    # -- snapshot / restore / fork ------------------------------------------
+    def snapshot(self) -> SessionState:
+        """Capture the full session — SoA engine state (the CSR incidence
+        is reconstructed exactly from the serialized mappings), node pool
+        accumulators, policy-internal state, and the session's loop cursor
+        — as a fingerprinted, JSON-serializable :class:`SessionState`."""
+        e = self.engine
+        st = e.state
+        cols = {
+            "jid": [s.jid for s in st.specs],
+            "release": [s.release for s in st.specs],
+            "proc_time": [s.proc_time for s in st.specs],
+            "n_tasks": [s.n_tasks for s in st.specs],
+            "cpu_need": [s.cpu_need for s in st.specs],
+            "mem_req": [s.mem_req for s in st.specs],
+        }
+        payload: Dict[str, Any] = {
+            "schema": SCHEMA,
+            "params": dataclasses.asdict(e.params),
+            "policy": e.policy_ref,
+            "jobs": cols,
+            "vt": st.vt.tolist(),
+            "yld": st.yld.tolist(),
+            "penalty_until": st.penalty_until.tolist(),
+            "completed_at": st.completed_at.tolist(),
+            "status": st.status.tolist(),
+            "job_pmtn": st.n_pmtn.tolist(),
+            "job_mig": st.n_mig.tolist(),
+            "mappings": [None if m is None else list(m)
+                         for m in st.mappings],
+            "pool_load": st.pool.load.tolist(),
+            "pool_mem_free": st.pool.mem_free.tolist(),
+            "alive": st.alive.tolist(),
+            "now": st.now,
+            "util_integral": st.util_integral,
+            "demand_integral": st.demand_integral,
+            "bytes_moved_gb": e.bytes_moved_gb,
+            "n_pmtn": e.n_pmtn,
+            "n_mig": e.n_mig,
+            "events": e._events,
+            "arrivals": [list(a) for a in self._arrivals],
+            "cluster_events": [[ev.time, ev.kind, list(ev.nodes)]
+                               for ev in self._cev[self._ci:]],
+            "next_tick": self._next_tick,
+            "tick_armed": self._tick_armed,
+            "horizon": self._horizon,
+            "exhausted": self._exhausted,
+            "hit_cap": self._hit_cap,
+            "wall_s": self._wall,
+            "policy_state": _snapshot_policy_state(e.policy),
+        }
+        return SessionState(payload)
+
+    @classmethod
+    def restore(cls, snap: Union[SessionState, Dict[str, Any], str],
+                policy=None) -> "SimSession":
+        """Resume a session from a snapshot (same or a fresh process).
+
+        Without ``policy`` the snapshot's own policy reference is rebuilt
+        and its internal state restored verbatim — the continuation is
+        bit-identical to never having snapshotted.  With ``policy`` the
+        restored engine state is handed to a *different* policy (the
+        what-if fork path): the new policy starts from the identical live
+        cluster but rebuilds its private state from it.
+        """
+        if isinstance(snap, str):
+            snap = SessionState.load(snap)
+        elif isinstance(snap, dict):
+            snap = SessionState.from_json_dict(snap)
+        pl = snap.payload
+        params = SimParams(**pl["params"])
+        switched = policy is not None
+        if policy is None:
+            policy = pl["policy"]
+            if policy is None:
+                raise ValueError(
+                    "snapshot carries no rebuildable policy reference (the "
+                    "session ran an ad-hoc Policy instance); pass policy=")
+        cols = pl["jobs"]
+        specs = [
+            JobSpec(jid=int(j), release=float(r), proc_time=float(p),
+                    n_tasks=int(t), cpu_need=float(c), mem_req=float(m))
+            for j, r, p, t, c, m in zip(*(cols[k] for k in _JOB_COLS))
+        ]
+        e = Engine.__new__(Engine)
+        e.params = params
+        e.policy_spec, e.policy, e.policy_ref = resolve_policy_arg(policy)
+        from ..core.state import EngineState
+        e.state = EngineState(specs, params.n_nodes)
+        e.cluster_events = [ClusterEvent(float(t), k, tuple(int(n) for n in ns))
+                            for t, k, ns in pl["cluster_events"]]
+        e.bytes_moved_gb = float(pl["bytes_moved_gb"])
+        e.n_pmtn = int(pl["n_pmtn"])
+        e.n_mig = int(pl["n_mig"])
+        e._events = int(pl["events"])
+        st = e.state
+        st.vt[:] = pl["vt"]
+        st.yld[:] = pl["yld"]
+        st.penalty_until[:] = pl["penalty_until"]
+        st.completed_at[:] = pl["completed_at"]
+        st.status[:] = pl["status"]
+        st.n_pmtn[:] = pl["job_pmtn"]
+        st.n_mig[:] = pl["job_mig"]
+        st.mappings = [None if m is None else [int(x) for x in m]
+                       for m in pl["mappings"]]
+        st.pool.load[:] = pl["pool_load"]
+        st.pool.mem_free[:] = pl["pool_mem_free"]
+        st.alive[:] = pl["alive"]
+        st.now = float(pl["now"])
+        st.util_integral = float(pl["util_integral"])
+        st.demand_integral = float(pl["demand_integral"])
+        for i in st.running_indices():
+            st.inc.place(int(i), st.mappings[int(i)])
+        e.policy.validate(st.specs, params)
+        e.policy.bind(e)
+
+        ses = cls.__new__(cls)
+        ses.engine = e
+        ses._arrivals = [(float(r), int(j), int(i))
+                         for r, j, i in pl["arrivals"]]
+        ses._jids = {s.jid for s in specs}
+        ses._cev = e.cluster_events if e.policy.handles_cluster_events else []
+        ses._ci = 0
+        ses._periodic = e.policy.periodic_kind is not None
+        ses._next_tick = float(pl["next_tick"])
+        ses._tick_armed = bool(pl["tick_armed"])
+        ses._horizon = float(pl["horizon"])
+        ses._exhausted = bool(pl["exhausted"])
+        ses._hit_cap = bool(pl["hit_cap"])
+        ses._wall = float(pl["wall_s"])
+        ses.scratch = {}
+        if switched:
+            if not e.policy.handles_cluster_events:
+                # batch baselines do not model failures: the fork drops the
+                # pending cluster script (as sweeps do), so dead nodes must
+                # come back too or a wide job could never start again.
+                # Failed nodes host nothing (failure force-preempts), so
+                # revival is exactly the "join" transition.
+                dead = np.nonzero(~st.alive)[0]
+                st.alive[dead] = True
+                st.pool.mem_free[dead] = 1.0
+                st.pool.load[dead] = 0.0
+            _adopt_policy_state(e.policy, e)
+            if ses._periodic and math.isinf(ses._next_tick):
+                # the fork introduced a periodic pass mid-run: base its
+                # tick train at the live clock
+                ses._next_tick = st.now + params.period
+                ses._tick_armed = True
+            ses._exhausted = False      # the new policy may act again
+        else:
+            _restore_policy_state(e.policy, pl["policy_state"], e)
+        return ses
+
+    def fork(self, policy=None) -> "SimSession":
+        """Clone the live session (optionally under a different policy):
+        what-if branching from an identical mid-run state."""
+        return SimSession.restore(self.snapshot(), policy=policy)
+
+
+def open_session(
+    cluster: Union[int, SimParams],
+    policy,
+    params: Optional[SimParams] = None,
+    *,
+    cluster_events: Sequence[ClusterEvent] = (),
+    **param_overrides: Any,
+) -> SimSession:
+    """Open a streaming simulation session on an (initially idle) cluster.
+
+    ``cluster`` is a node count (combined with ``params``/keyword
+    overrides) or a full :class:`SimParams`.  Submit jobs with
+    :meth:`SimSession.submit`, advance with ``step_until``/``step``,
+    perturb with ``inject``, checkpoint with ``snapshot``.
+    """
+    if isinstance(cluster, SimParams):
+        if params is not None:
+            raise ValueError("pass either a SimParams cluster or params=, "
+                             "not both")
+        params = dataclasses.replace(cluster, **param_overrides)
+    else:
+        base = params if params is not None else SimParams()
+        params = dataclasses.replace(base, n_nodes=int(cluster),
+                                     **param_overrides)
+    return SimSession(policy, params, cluster_events=cluster_events)

@@ -13,7 +13,7 @@ from typing import Optional, Sequence
 
 from ..core.job import JobSpec
 from ..core.policies import PolicySpec, parse_policy
-from ._compat import warn_once
+from ._compat import BATCH_REPLACEMENT, warn_once
 from .cluster import ClusterEvent
 from .engine import Engine, SimParams, SimResult
 
@@ -30,7 +30,7 @@ class DFRSSimulator(Engine):
         params: Optional[SimParams] = None,
         cluster_events: Sequence[ClusterEvent] = (),
     ):
-        warn_once("repro.sched.simulator.DFRSSimulator")
+        warn_once("repro.sched.simulator.DFRSSimulator", BATCH_REPLACEMENT)
         spec = parse_policy(policy) if isinstance(policy, str) else policy
         if spec.is_batch:
             raise ValueError("use repro.sched.batch for FCFS/EASY")
@@ -48,5 +48,5 @@ def simulate(
     Cluster events are ignored for the batch baselines (they do not model
     failures), matching the historical behaviour of this entry point.
     """
-    warn_once("repro.sched.simulator.simulate")
+    warn_once("repro.sched.simulator.simulate", BATCH_REPLACEMENT)
     return Engine(specs, policy, params, cluster_events).run()

@@ -40,7 +40,7 @@ from .engine import Engine, SimParams
 from .scenarios import apply_scenario_trace, parse_scenario_chain
 
 __all__ = ["Cell", "SweepResult", "RecordCache", "grid", "run_grid",
-           "record_matches"]
+           "run_branches", "record_matches"]
 
 
 def record_matches(record: Dict[str, Any], kv: Dict[str, Any]) -> bool:
@@ -211,11 +211,83 @@ def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
         "events": r.events,
         "hit_max_events": r.hit_max_events,
         "wall_s": wall,
+        # observability: attribute cells/s variance to event counts and
+        # split driver overhead (trace/bound prep) from engine-loop time
+        "n_events": r.n_events,
+        "sim_wall_s": r.sim_wall_s,
+        "final_time": r.final_time,
     }
     if bound is not None:
         rec["bound"] = bound
         rec["degradation"] = r.max_stretch / bound if bound > 0 else np.inf
     return rec
+
+
+# --------------------------------------------------------------------------- #
+# what-if branching: policy comparison from an identical live state            #
+# --------------------------------------------------------------------------- #
+def run_branches(
+    snapshot,
+    policies: Sequence[str],
+    json_path: Optional[str] = None,
+) -> SweepResult:
+    """Fork one mid-run session snapshot under several policies.
+
+    ``snapshot`` is a :class:`repro.sched.session.SessionState` (or a path
+    / JSON dict of one).  Every policy resumes from the *identical* live
+    cluster state — same running set, same queue, same virtual times, same
+    pending arrivals — and runs to exhaustion; the records compare what
+    each policy does with the exact same mid-run situation, a scenario
+    axis no closed-world batch run can produce.  The snapshot's own policy
+    continues bit-identically; other policies adopt the live state (see
+    ``SimSession.restore``).
+    """
+    from .session import SessionState, SimSession
+
+    if isinstance(snapshot, str):
+        snapshot = SessionState.load(snapshot)
+    elif isinstance(snapshot, dict):
+        snapshot = SessionState.from_json_dict(snapshot)
+    origin = (_canonical_policy(snapshot.policy)
+              if snapshot.policy is not None else None)
+    t0 = time.perf_counter()
+    records: List[Dict[str, Any]] = []
+    for i, policy in enumerate(policies):
+        same = origin is not None and _canonical_policy(policy) == origin
+        t1 = time.perf_counter()
+        ses = SimSession.restore(snapshot, policy=None if same else policy)
+        r = ses.run()
+        wall = time.perf_counter() - t1
+        records.append({
+            "cell": i,
+            "branch": i,
+            "policy": policy,
+            "branch_policy": snapshot.policy,
+            "branch_time": snapshot.time,
+            "branch_fingerprint": snapshot.fingerprint,
+            "exact_continuation": same,
+            "max_stretch": r.max_stretch,
+            "mean_stretch": r.mean_stretch,
+            "makespan": r.makespan,
+            "underutilization": r.underutilization,
+            "n_pmtn": r.n_pmtn,
+            "n_mig": r.n_mig,
+            "pmtn_per_job": r.pmtn_per_job,
+            "mig_per_job": r.mig_per_job,
+            "bytes_moved_gb": r.bytes_moved_gb,
+            "bandwidth_gbps": r.bandwidth_gbps,
+            "events": r.events,
+            "n_events": r.n_events,
+            "hit_max_events": r.hit_max_events,
+            "final_time": r.final_time,
+            "sim_wall_s": r.sim_wall_s,
+            "wall_s": wall,
+        })
+    res = SweepResult(records=records, wall_s=time.perf_counter() - t0,
+                      n_workers=1)
+    if json_path is not None:
+        res.save_json(json_path)
+    return res
 
 
 # --------------------------------------------------------------------------- #
@@ -362,10 +434,13 @@ class RecordCache:
                     f"{schema!r}); refusing to overwrite it — pass a fresh "
                     f"path (sweep artifacts from --out/json_path are a "
                     f"different format)")
+            required = {"sim_params", "params", "trace_fingerprint",
+                        "n_events", "sim_wall_s", "final_time"}
             for rec in payload["records"]:
-                if not {"sim_params", "params", "trace_fingerprint"} <= set(rec):
-                    continue        # pre-Trace-IR/-sim_params record:
-                    # missing identity fields — re-simulate it
+                if not required <= set(rec):
+                    continue        # record from an older schema (pre-Trace-
+                    # IR identity fields or pre-session observability
+                    # fields) — re-simulate it rather than mixing schemas
                 self._records[_record_key(rec)] = rec
 
     def __len__(self) -> int:

@@ -1,0 +1,11 @@
+"""Shared test helpers."""
+import dataclasses
+
+
+def result_dict(r):
+    """SimResult fields minus sim_wall_s (a wall-clock measurement, not a
+    simulation outcome — bit-identity comparisons are over the outcome
+    fields only)."""
+    d = dataclasses.asdict(r)
+    d.pop("sim_wall_s")
+    return d

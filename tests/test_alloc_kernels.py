@@ -15,6 +15,8 @@ Two layers:
 """
 import dataclasses
 
+from conftest import result_dict as _result_dict
+
 import numpy as np
 import pytest
 
@@ -264,4 +266,4 @@ def test_golden_simresult_bitwise_equivalence(workload, policy, scenario):
     fast = Engine(specs, policy, params, cluster_events=events).run()
     with reference_kernels():
         slow = Engine(specs, policy, params, cluster_events=events).run()
-    assert dataclasses.asdict(fast) == dataclasses.asdict(slow)
+    assert _result_dict(fast) == _result_dict(slow)

@@ -1,5 +1,7 @@
 """repro.api facade + ``python -m repro`` CLI + compat-shim tests."""
 import dataclasses
+
+from conftest import result_dict as _result_dict
 import json
 import os
 import warnings
@@ -22,7 +24,7 @@ def test_api_simulate_workloadspec_matches_engine():
     r = api.simulate(W_SMALL, "GreedyP */OPT=MIN")
     direct = Engine(make_trace(W_SMALL), "GreedyP */OPT=MIN",
                     SimParams(n_nodes=16)).run()
-    assert dataclasses.asdict(r) == dataclasses.asdict(direct)
+    assert _result_dict(r) == _result_dict(direct)
 
 
 def test_api_simulate_scenario_and_param_overrides():
@@ -90,7 +92,7 @@ def test_api_simulate_scenario_seed_is_respected():
     a = api.simulate(w, "GreedyP */OPT=MIN", scenario="rolling_failures")
     b = api.simulate(w, "GreedyP */OPT=MIN", scenario="rolling_failures",
                      seed=w.seed)
-    assert dataclasses.asdict(a) == dataclasses.asdict(b)   # default = w.seed
+    assert _result_dict(a) == _result_dict(b)   # default = w.seed
     outcomes = {api.simulate(w, "GreedyP */OPT=MIN",
                              scenario="rolling_failures", seed=s).makespan
                 for s in range(6)}
@@ -281,8 +283,10 @@ def test_cli_scenarios(capsys):
 def test_cli_scenarios_json(capsys):
     assert cli_main(["scenarios", "--json"]) == 0
     docs = json.loads(capsys.readouterr().out)
-    assert set(docs) == set(api.list_scenarios())
-    assert all(isinstance(d, str) and d for d in docs.values())
+    assert set(docs["trace"]) == set(api.list_scenarios())
+    assert set(docs["reactive"]) == set(api.list_reactive())
+    assert all(isinstance(d, str) and d
+               for part in docs.values() for d in part.values())
 
 
 def test_cli_workloads(capsys):

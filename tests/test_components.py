@@ -14,6 +14,8 @@ Three layers:
   ``run_grid``, and lands in a sweep artifact.
 """
 import dataclasses
+
+from conftest import result_dict as _result_dict
 import itertools
 import json
 
@@ -156,7 +158,7 @@ def test_every_table1_policy_composed_equals_seed(policy):
     params = SimParams(n_nodes=16)
     composed = Engine(specs, policy, params).run()
     seed = Engine(specs, make_seed_policy(spec), params).run()
-    assert dataclasses.asdict(composed) == dataclasses.asdict(seed)
+    assert _result_dict(composed) == _result_dict(seed)
 
 
 # the 17-cell acceptance harness of tests/test_alloc_kernels.py
@@ -182,7 +184,7 @@ def test_golden_composed_vs_seed_simresult(workload, policy, scenario):
     composed = Engine(specs, policy, params, cluster_events=events).run()
     seed = Engine(specs, make_seed_policy(parse_policy(policy)), params,
                   cluster_events=events).run()
-    assert dataclasses.asdict(composed) == dataclasses.asdict(seed)
+    assert _result_dict(composed) == _result_dict(seed)
 
 
 def test_default_engine_policy_is_composed():

@@ -1,0 +1,550 @@
+"""Streaming-session tests: the open SimSession step/ingest API.
+
+* split-run bit-identity: stepping the session to exhaustion through
+  arbitrary ``step_until``/``step`` boundary schedules produces a
+  ``SimResult`` identical to ``Engine.run()`` — on the golden acceptance
+  grid, on every Table-1 policy, and (with hypothesis) on random
+  boundaries;
+* snapshot round-trips: mid-run snapshot → JSON on disk → restore (same
+  and *fresh* process) → identical final result, CSR incidence included;
+* online ingest: mid-run submits, live fail/join/period injection,
+  duplicate/past-release validation;
+* what-if branching: same-policy forks continue bit-identically, switched
+  forks adopt the live state (``sweep.run_branches`` records);
+* reactive scenarios, the streaming CLI, and the compat-shim pointer.
+"""
+import dataclasses
+
+from conftest import result_dict as _result_dict
+import json
+import math
+import os
+import subprocess
+import sys
+import warnings
+
+import pytest
+
+from repro import api
+from repro.__main__ import main as cli_main
+from repro.core.policies import TABLE1_POLICIES
+from repro.sched import _compat
+from repro.sched.engine import Engine, SimParams
+from repro.sched.scenarios import apply_scenario, run_reactive
+from repro.sched.session import SessionState, SimSession, open_session
+from repro.sched.sweep import run_branches
+from repro.workloads.registry import WorkloadSpec, make_trace
+
+W_SMALL = WorkloadSpec("lublin", n_jobs=25, n_nodes=16, seed=0)
+
+
+def _cell(workload, policy, scenario="baseline"):
+    specs = make_trace(workload)
+    specs, events = apply_scenario(scenario, specs, workload.n_nodes,
+                                   seed=workload.seed)
+    params = SimParams(n_nodes=workload.n_nodes)
+    return specs, events, params
+
+
+def _session_for(specs, policy, params, events):
+    return SimSession.from_engine(
+        Engine(specs, policy, params, cluster_events=events))
+
+
+# three distinct step-boundary schedules (the acceptance criterion)
+def _schedule_halves(ses, ref):
+    t0 = ref.final_time - ref.makespan
+    ses.step_until(t0 + 0.5 * ref.makespan)
+
+
+def _schedule_deciles(ses, ref):
+    t0 = ref.final_time - ref.makespan
+    for f in range(1, 10):
+        ses.step_until(t0 + 0.1 * f * ref.makespan)
+
+
+def _schedule_event_steps(ses, ref):
+    while ses.step(5):
+        pass
+
+
+SCHEDULES = [_schedule_halves, _schedule_deciles, _schedule_event_steps]
+
+
+# --------------------------------------------------------------------------- #
+# split-run bit-identity                                                       #
+# --------------------------------------------------------------------------- #
+GOLDEN_POLICIES = ["FCFS", "EASY", "GreedyP */OPT=MIN",
+                   "GreedyPM */per/OPT=MIN/MINVT=600"]
+GOLDEN_WORKLOADS = [WorkloadSpec("lublin", n_jobs=40, n_nodes=16, seed=0),
+                    WorkloadSpec("hpc2n", n_jobs=40, n_nodes=128, seed=1)]
+GOLDEN_CASES = [(w, p, sc)
+                for w in GOLDEN_WORKLOADS
+                for p in GOLDEN_POLICIES
+                for sc in ("baseline", "rack_failure")]
+GOLDEN_CASES.append((GOLDEN_WORKLOADS[0], "/stretch-per/OPT=MAX", "baseline"))
+
+
+@pytest.mark.parametrize(
+    "i,workload,policy,scenario",
+    [(i, w, p, sc) for i, (w, p, sc) in enumerate(GOLDEN_CASES)],
+    ids=[f"{w.name}-{p}-{sc}" for w, p, sc in GOLDEN_CASES])
+def test_golden_grid_split_run_bit_identical(i, workload, policy, scenario):
+    """Each golden cell, stepped through one of the three boundary
+    schedules (rotating), matches the unsplit Engine.run() bit for bit."""
+    specs, events, params = _cell(workload, policy, scenario)
+    ref = Engine(specs, policy, params, cluster_events=events).run()
+    ses = _session_for(specs, policy, params, events)
+    SCHEDULES[i % len(SCHEDULES)](ses, ref)
+    assert _result_dict(ses.run()) == _result_dict(ref)
+
+
+_TABLE1_REF = {}
+
+
+@pytest.mark.parametrize("policy", TABLE1_POLICIES + ["FCFS", "EASY"])
+@pytest.mark.parametrize("schedule", SCHEDULES,
+                         ids=["halves", "deciles", "event-steps"])
+def test_every_table1_policy_split_run_bit_identical(policy, schedule):
+    specs, events, params = _cell(W_SMALL, policy)
+    if policy not in _TABLE1_REF:
+        _TABLE1_REF[policy] = Engine(specs, policy, params,
+                                     cluster_events=events).run()
+    ref = _TABLE1_REF[policy]
+    ses = _session_for(specs, policy, params, events)
+    schedule(ses, ref)
+    assert _result_dict(ses.run()) == _result_dict(ref)
+
+
+def test_step_boundaries_do_not_advance_the_engine_clock():
+    """step_until(t) between events must not advance the fluid integrals
+    to t (that would split advance() windows and break bit-identity); the
+    session clock reads t, the engine clock stays on the last event."""
+    specs, events, params = _cell(W_SMALL, "FCFS")
+    ses = _session_for(specs, "FCFS", params, events)
+    ses.step_until(specs[0].release + 1.0)   # mid-gap boundary
+    assert ses.now == specs[0].release + 1.0
+    assert ses.engine.state.now <= specs[0].release + 1.0
+    assert ses.engine.state.now in [s.release for s in specs] + [0.0]
+
+
+# hypothesis: arbitrary random boundary schedules
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                      # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _REF = {}
+
+    def _ref(policy):
+        if policy not in _REF:
+            specs, events, params = _cell(W_SMALL, policy, "rack_failure")
+            _REF[policy] = (specs, events, params,
+                            Engine(specs, policy, params,
+                                   cluster_events=events).run())
+        return _REF[policy]
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        policy=st.sampled_from(["GreedyP */OPT=MIN", "EASY",
+                                "Greedy */per/OPT=MIN"]),
+        cuts=st.lists(st.floats(min_value=0.0, max_value=1.3,
+                                allow_nan=False), max_size=8),
+        n_step=st.integers(min_value=1, max_value=9),
+    )
+    def test_random_split_schedules_bit_identical(policy, cuts, n_step):
+        specs, events, params, ref = _ref(policy)
+        t0 = ref.final_time - ref.makespan
+        ses = _session_for(specs, policy, params, events)
+        for f in sorted(cuts):
+            ses.step_until(t0 + f * ref.makespan)
+        ses.step(n_step)
+        assert _result_dict(ses.run()) == _result_dict(ref)
+else:                                    # pragma: no cover
+    @pytest.mark.skip(reason="property tests need hypothesis "
+                             "(pip install -r requirements-dev.txt)")
+    def test_random_split_schedules_bit_identical():
+        pass
+
+
+# --------------------------------------------------------------------------- #
+# snapshot / restore                                                           #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("policy", ["FCFS", "EASY", "GreedyP */OPT=MIN",
+                                    "GreedyPM */per/OPT=MIN/MINVT=600",
+                                    "/stretch-per/OPT=MAX", "EASY+OPT=MIN"])
+def test_snapshot_json_roundtrip_restores_bit_identically(policy, tmp_path):
+    specs, events, params = _cell(W_SMALL, policy, "rack_failure")
+    ref = Engine(specs, policy, params, cluster_events=events).run()
+    ses = _session_for(specs, policy, params, events)
+    ses.step_until(specs[0].release + 0.4 * ref.makespan)
+    snap = ses.snapshot()
+    path = str(tmp_path / "snap.json")
+    snap.save(path)
+    loaded = SessionState.load(path)
+    assert loaded.fingerprint == snap.fingerprint
+    assert _result_dict(SimSession.restore(loaded).run()) == _result_dict(ref)
+    # the un-snapshotted session continues identically too
+    assert _result_dict(ses.run()) == _result_dict(ref)
+
+
+def test_snapshot_restore_in_fresh_process(tmp_path):
+    """Serialize a mid-run snapshot to disk, finish it in a *fresh*
+    interpreter, and require the final SimResult (CSR-incidence-dependent
+    yields included) to match the straight-through run exactly."""
+    policy = "GreedyPM */per/OPT=MIN/MINVT=600"
+    specs, events, params = _cell(W_SMALL, policy, "rack_failure")
+    ref = Engine(specs, policy, params, cluster_events=events).run()
+    ses = _session_for(specs, policy, params, events)
+    ses.step_until(specs[0].release + 0.5 * ref.makespan)
+    path = str(tmp_path / "snap.json")
+    ses.snapshot().save(path)
+    prog = (
+        "import dataclasses, json, sys\n"
+        "from repro.sched.session import SimSession\n"
+        "r = SimSession.restore(sys.argv[1]).run()\n"
+        "d = dataclasses.asdict(r)\n"
+        "d.pop('sim_wall_s')\n"
+        "print(json.dumps(d))\n"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run(
+        [sys.executable, "-c", prog, path],
+        capture_output=True, text=True, check=True, env=env)
+    fresh = json.loads(out.stdout)
+    want = json.loads(json.dumps(_result_dict(ref)))   # str-keyed dicts
+    assert fresh == want
+
+
+def test_snapshot_fingerprint_detects_corruption(tmp_path):
+    specs, events, params = _cell(W_SMALL, "FCFS")
+    ses = _session_for(specs, "FCFS", params, events)
+    ses.step(3)
+    payload = ses.snapshot().to_json_dict()
+    payload["now"] = payload["now"] + 1.0
+    with pytest.raises(ValueError, match="fingerprint"):
+        SessionState.from_json_dict(payload)
+    with pytest.raises(ValueError, match="snapshot"):
+        SessionState({"schema": "not-a-session"})
+
+
+def test_snapshot_refuses_anonymous_policy_without_override():
+    from repro.sched.components import OptMin, QueueSubmit, ReclaimNodes
+    from repro.sched.components import FCFSStart, compose
+    pol = compose("ad-hoc", QueueSubmit(), ReclaimNodes(), FCFSStart(),
+                  OptMin())
+    specs, events, params = _cell(W_SMALL, "FCFS")
+    ses = _session_for(specs, pol, params, events)
+    ses.step(3)
+    snap = ses.snapshot()
+    assert snap.policy is None
+    with pytest.raises(ValueError, match="policy="):
+        SimSession.restore(snap)
+    r = SimSession.restore(snap, policy="FCFS").run()
+    assert len(r.completions) == 25
+
+
+# --------------------------------------------------------------------------- #
+# online ingest: submit / inject                                               #
+# --------------------------------------------------------------------------- #
+def test_open_session_submit_then_run_equals_engine_run():
+    """The streaming path (open → submit → exhaust) is the same simulation
+    as the closed-world constructor, periodic tick arming included."""
+    specs = make_trace(W_SMALL)
+    for policy in ["Greedy */per/OPT=MIN", "EASY"]:
+        ref = Engine(specs, policy, SimParams(n_nodes=16)).run()
+        ses = open_session(16, policy)
+        ses.submit(specs)
+        assert _result_dict(ses.run()) == _result_dict(ref)
+
+
+def test_mid_run_submit_is_a_true_online_arrival():
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    first = ses.submit(specs[:10])
+    assert len(first) == 10
+    ses.step_until(specs[9].release + 50.0)
+    done_before = ses.observe()["n_completed"]
+    late = ses.submit(specs[10:], shift="now")
+    assert len(late) == 15
+    r = ses.run()
+    assert len(r.completions) == 25
+    assert r.completions.keys() == {s.jid for s in specs}
+    assert done_before <= 10
+
+
+def test_submit_validation():
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[-1].release + 1.0)
+    with pytest.raises(ValueError, match="duplicate job ids"):
+        ses.submit(specs[:1], shift="now")
+    with pytest.raises(ValueError, match="shift"):
+        ses.submit([dataclasses.replace(specs[0], jid=999, release=0.0)])
+    # batch validation applies per submit batch
+    big = dataclasses.replace(specs[0], jid=998, n_tasks=64)
+    bses = open_session(16, "EASY")
+    with pytest.raises(ValueError, match="needs 64"):
+        bses.submit([big])
+
+
+def test_submit_after_exhaustion_rearms_the_session():
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs[:5])
+    ses.run_to_exhaustion()
+    assert ses.exhausted
+    partial = ses.result()
+    assert len(partial.completions) == 5
+    ses.submit(specs[5:10], shift="now")
+    assert not ses.exhausted
+    r = ses.run()
+    assert len(r.completions) == 10
+
+
+def test_inject_validation_and_effect():
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[0].release + 200.0)
+    with pytest.raises(ValueError, match="outside"):
+        ses.inject({"kind": "fail", "t": ses.now + 1, "nodes": [99]})
+    with pytest.raises(ValueError, match="past|clock"):
+        ses.inject({"kind": "fail", "t": ses.engine.state.now - 50.0,
+                    "nodes": [0]})
+    # live failure conditioned on observed state
+    obs = ses.observe()
+    assert obs["alive_nodes"] == 16
+    ses.inject({"kind": "fail", "t": ses.now + 10.0,
+                "nodes": list(range(8))})
+    ses.step_until(ses.now + 11.0)
+    assert ses.observe()["alive_nodes"] == 8
+    ses.inject({"kind": "join", "t": ses.now + 100.0,
+                "nodes": list(range(8))})
+    r = ses.run()
+    assert len(r.completions) == 25
+
+    # batch baselines do not model failures
+    bses = open_session(16, "EASY")
+    bses.submit(specs)
+    with pytest.raises(ValueError, match="cluster events"):
+        bses.inject({"kind": "fail", "t": 1e9, "nodes": [0]})
+
+
+def test_period_change_takes_effect_live():
+    specs = make_trace(W_SMALL)
+    ref = Engine(specs, "Greedy */per/OPT=MIN",
+                 SimParams(n_nodes=16)).run()
+    ses = open_session(16, "Greedy */per/OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[0].release + 0.3 * ref.makespan)
+    ses.inject({"kind": "period", "period": 60.0})
+    r = ses.run()
+    assert r.events > ref.events       # much denser tick train afterwards
+
+
+def test_partial_result_and_observe():
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step(8)
+    obs = ses.observe()
+    r = ses.result()                   # partial: events remain
+    assert len(r.completions) == obs["n_completed"] < 25
+    assert r.final_time == ses.engine.state.now
+    assert r.n_events == r.events == obs["events"]
+    assert r.sim_wall_s > 0.0
+    full = ses.run()
+    assert len(full.completions) == 25
+    assert not math.isinf(full.final_time)
+
+
+# --------------------------------------------------------------------------- #
+# what-if branching                                                            #
+# --------------------------------------------------------------------------- #
+def test_fork_same_policy_is_exact_continuation():
+    specs, events, params = _cell(W_SMALL, "GreedyP */OPT=MIN",
+                                  "rack_failure")
+    ses = _session_for(specs, "GreedyP */OPT=MIN", params, events)
+    ses.step_until(specs[0].release + 4000.0)
+    fork = ses.fork()
+    assert _result_dict(fork.run()) == _result_dict(ses.run())
+
+
+def test_fork_policy_switch_adopts_live_state():
+    specs = make_trace(WorkloadSpec("lublin", n_jobs=30, n_nodes=16,
+                                    seed=3, load=1.2))
+    ses = open_session(16, "GreedyPM */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[0].release + 3000.0)
+    for alt in ["Greedy */per/OPT=MIN", "EASY", "FCFS"]:
+        branch = ses.fork(policy=alt)
+        r = branch.run()
+        assert r.completions.keys() == {s.jid for s in specs}, alt
+    straight = ses.run()
+    assert len(straight.completions) == 30
+
+
+def test_run_branches_records(tmp_path):
+    specs = make_trace(W_SMALL)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[0].release + 3000.0)
+    snap = ses.snapshot()
+    path = str(tmp_path / "branches.json")
+    res = run_branches(snap, ["greedyp */opt=min", "GreedyPM */OPT=MIN",
+                              "EASY"], json_path=path)
+    assert res.n_cells == 3
+    by_policy = {r["policy"]: r for r in res.records}
+    # spelling-insensitive exact-continuation detection
+    assert by_policy["greedyp */opt=min"]["exact_continuation"]
+    assert not by_policy["EASY"]["exact_continuation"]
+    straight = ses.run()
+    assert (by_policy["greedyp */opt=min"]["mean_stretch"]
+            == straight.mean_stretch)
+    for rec in res.records:
+        assert rec["branch_time"] == snap.time
+        assert rec["branch_fingerprint"] == snap.fingerprint
+        assert {"n_events", "sim_wall_s", "final_time"} <= rec.keys()
+    assert json.load(open(path))["schema"] == "repro.sweep/v1"
+
+
+def test_sweep_records_surface_observability_fields():
+    res = api.run_grid(api.grid([W_SMALL], ["FCFS"]), n_workers=1)
+    rec = res.records[0]
+    assert rec["n_events"] == rec["events"] > 0
+    assert rec["final_time"] > 0.0
+    assert 0.0 < rec["sim_wall_s"] <= rec["wall_s"]
+
+
+# --------------------------------------------------------------------------- #
+# reactive scenarios                                                           #
+# --------------------------------------------------------------------------- #
+def test_reactive_surge_submit_reacts_to_observed_drain():
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(make_trace(W_SMALL))
+    r = run_reactive(ses, "surge_submit", seed=1)
+    assert len(r.completions) > 25        # bursts happened and completed
+    assert ses.scratch["surge_submit"]["bursts"] >= 1
+
+
+def test_reactive_elastic_reserve_round_trips_capacity():
+    ses = open_session(16, "GreedyPM */OPT=MIN")
+    ses.submit(make_trace(WorkloadSpec("lublin", n_jobs=30, n_nodes=16,
+                                       seed=2, load=1.4)))
+    r = run_reactive(ses, "elastic_reserve", seed=0, interval=300.0)
+    assert len(r.completions) == 30
+    assert ses.observe()["alive_nodes"] in (12, 16)
+
+
+def test_reactive_accepts_ad_hoc_rules_and_unknown_names_fail():
+    calls = []
+
+    def watcher(session, obs, rng):
+        calls.append(obs["n_completed"])
+
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(make_trace(W_SMALL))
+    r = run_reactive(ses, watcher, interval=1000.0)
+    assert len(r.completions) == 25 and calls and calls[-1] == 25
+    with pytest.raises(KeyError, match="unknown reactive"):
+        run_reactive(ses, "nope")
+    assert "surge_submit" in api.list_reactive()
+    assert "drain" in api.reactive_docs()["surge_submit"]
+
+
+# --------------------------------------------------------------------------- #
+# streaming CLI                                                                #
+# --------------------------------------------------------------------------- #
+def _write_script(path, lines):
+    path.write_text("\n".join(json.dumps(l) if isinstance(l, dict) else l
+                              for l in lines) + "\n")
+
+
+def test_cli_session_streams_metrics_and_snapshots(tmp_path, capsys):
+    snap_path = str(tmp_path / "snap.json")
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [
+        "# comment lines are skipped",
+        {"op": "submit", "workload": "lublin", "jobs": 25, "seed": 0},
+        {"op": "step_until", "t": 3000},
+        {"op": "inject", "kind": "fail", "t": 3100, "nodes": [0, 1]},
+        {"op": "inject", "kind": "join", "t": 4000, "nodes": [0, 1]},
+        {"op": "step", "n": 5},
+        {"op": "snapshot", "path": snap_path},
+        {"op": "run"},
+        {"op": "result"},
+    ])
+    assert cli_main(["session", "--script", str(script),
+                     "--policy", "GreedyP */OPT=MIN", "--nodes", "16"]) == 0
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    kinds = [l["kind"] for l in lines]
+    assert kinds == ["submit", "step", "inject", "inject", "step",
+                     "snapshot", "step", "result"]
+    assert lines[0]["n_future"] == 25
+    assert lines[-1]["partial"] is False
+    assert len(lines[-1]["completions"]) == 25
+    straight_result = lines[-1]
+
+    # restore from the snapshot in a new CLI invocation; the resumed run
+    # must finish identically to the straight-through run
+    resume = tmp_path / "resume.jsonl"
+    _write_script(resume, [{"op": "run"}, {"op": "result"}])
+    assert cli_main(["session", "--script", str(resume),
+                     "--restore", snap_path]) == 0
+    resumed = [json.loads(l)
+               for l in capsys.readouterr().out.splitlines()][-1]
+    for d in (straight_result, resumed):
+        d.pop("sim_wall_s")
+    assert resumed == straight_result
+
+
+def test_cli_session_metrics_file_and_open_op(tmp_path):
+    metrics = tmp_path / "metrics.jsonl"
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [
+        {"op": "open", "policy": "FCFS", "nodes": 16},
+        {"op": "submit", "workload": "lublin", "jobs": 10, "seed": 1},
+        {"op": "run"},
+        {"op": "result"},
+    ])
+    assert cli_main(["session", "--script", str(script),
+                     "--metrics", str(metrics)]) == 0
+    lines = [json.loads(l) for l in metrics.read_text().splitlines()]
+    assert [l["kind"] for l in lines] == ["open", "submit", "step", "result"]
+    assert lines[0]["policy"] == "FCFS"
+
+
+def test_cli_session_errors(tmp_path, capsys):
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [{"op": "wat"}])
+    assert cli_main(["session", "--script", str(script),
+                     "--policy", "FCFS", "--nodes", "16"]) == 2
+    assert "unknown op" in capsys.readouterr().err
+    _write_script(script, [{"op": "step", "n": 1}])
+    assert cli_main(["session", "--script", str(script)]) == 2
+    assert "no session open" in capsys.readouterr().err
+
+
+# --------------------------------------------------------------------------- #
+# compat shims point at the session API                                        #
+# --------------------------------------------------------------------------- #
+def test_legacy_shims_point_at_open_session_once_per_process():
+    from repro.sched.batch import batch_schedule
+    specs = make_trace(W_SMALL)
+    _compat.reset()
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        batch_schedule(specs, "FCFS", SimParams(n_nodes=16))
+        batch_schedule(specs, "EASY", SimParams(n_nodes=16))
+    msgs = [str(w.message) for w in rec
+            if issubclass(w.category, DeprecationWarning)]
+    assert len(msgs) == 1
+    assert "repro.api.simulate" in msgs[0]
+    assert "repro.api.open_session" in msgs[0]

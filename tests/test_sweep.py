@@ -122,7 +122,7 @@ def test_16_cell_sweep_parallel_matches_serial(tmp_path):
     assert par.n_cells == ser.n_cells == 16
     for a, b in zip(ser.records, par.records):
         for k in a:
-            if k == "wall_s":
+            if k in ("wall_s", "sim_wall_s"):
                 continue        # timing differs; results must not
             assert a[k] == b[k], (k, a[k], b[k])
     # artifact shape
@@ -184,7 +184,8 @@ def test_run_grid_worker_counts_produce_identical_record_sets():
 
     def strip(recs):
         return sorted((tuple(sorted((k, str(v)) for k, v in r.items()
-                                    if k != "wall_s")) for r in recs))
+                                    if k not in ("wall_s", "sim_wall_s")))
+                       for r in recs))
     assert strip(ser.records) == strip(par.records)
     for rec in ser.records:
         assert rec["trace_fingerprint"]

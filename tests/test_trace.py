@@ -12,6 +12,8 @@ Three layers:
 """
 import dataclasses
 
+from conftest import result_dict as _result_dict
+
 import numpy as np
 import pytest
 
@@ -204,7 +206,7 @@ def test_golden_trace_native_vs_spec_list_simresult(workload, policy, scenario):
     native = Engine(trace, policy, params, cluster_events=events).run()
     via_specs = Engine(trace.to_specs(), policy, params,
                        cluster_events=events).run()
-    assert dataclasses.asdict(native) == dataclasses.asdict(via_specs)
+    assert _result_dict(native) == _result_dict(via_specs)
 
 
 @pytest.mark.parametrize("policy", TABLE1_POLICIES)
@@ -214,4 +216,4 @@ def test_every_table1_policy_trace_native_equals_spec_list(policy):
     params = SimParams(n_nodes=16)
     native = Engine(trace, policy, params).run()
     via_specs = Engine(trace.to_specs(), policy, params).run()
-    assert dataclasses.asdict(native) == dataclasses.asdict(via_specs)
+    assert _result_dict(native) == _result_dict(via_specs)
