@@ -28,7 +28,8 @@ from typing import Callable, Dict, List, Optional
 import numpy as np
 
 from repro.core import alloc_reference
-from repro.core.alloc_kernels import reference_kernels
+from repro.core.alloc_kernels import (avg_yields_csr, build_csr,
+                                      maxmin_yields_csr, reference_kernels)
 from repro.core.greedy import greedy_place
 from repro.core.job import JobState, NodePool
 from repro.core.mcb8 import mcb8
@@ -79,6 +80,52 @@ def _time(fn: Callable[[], object], repeats: int) -> float:
     for _ in range(repeats):
         fn()
     return (time.perf_counter() - t0) / repeats
+
+
+def _jax_kernels(specs, maps, n_nodes: int, repeats: int) -> Optional[dict]:
+    """Warm jitted JAX timings for the allocation kernels vs numpy.
+
+    A separate payload section (``jax_kernels``) so the regression-gated
+    ``kernels`` / ``e2e_greedypm_wall_s`` keys are untouched; returns None
+    (section omitted) when jax is not installed.  ``_time`` warms each
+    callable once before measuring, so the jitted numbers exclude compile.
+    """
+    try:
+        from repro.core import alloc_jax
+    except Exception:  # noqa: BLE001 — optional accelerator dep
+        return None
+    if not alloc_jax.has_jax():
+        return None
+
+    inc = build_csr([s.cpu_need for s in specs], maps, n_nodes)
+    active = np.ones(inc.width, dtype=bool)
+    cols = np.nonzero(active)[0].astype(np.int64)
+    out: Dict[str, Dict[str, float]] = {}
+
+    def entry(name: str, jax_fn, np_fn, per: int = 1) -> None:
+        t_jax = _time(jax_fn, repeats) / per
+        t_np = _time(np_fn, repeats)
+        out[name] = {
+            "jax_mean_us": round(t_jax * 1e6, 1),
+            "numpy_mean_us": round(t_np * 1e6, 1),
+            "jax_over_numpy": round(t_jax / max(t_np, 1e-12), 2),
+        }
+
+    entry("maxmin_single",
+          lambda: alloc_jax.maxmin_yields_jax(inc, active),
+          lambda: maxmin_yields_csr(inc, active))
+    B = 16  # batched water-filling, reported per cell vs one numpy solve
+    present, weight, act = alloc_jax.pad_batch([inc] * B, [active] * B)
+    entry("maxmin_batch16_per_cell",
+          lambda: alloc_jax.maxmin_yields_batch(present, weight, act),
+          lambda: maxmin_yields_csr(inc, active), per=B)
+    backend = alloc_jax.JaxAllocBackend()
+    entry("avg",
+          lambda: backend.allocate(inc, cols, "AVG"),
+          lambda: avg_yields_csr(inc, cols))
+    out["maxmin_single"]["bit_equal"] = bool(np.array_equal(
+        alloc_jax.maxmin_yields_jax(inc, active), maxmin_yields_csr(inc, active)))
+    return out
 
 
 # --------------------------------------------------------------------------- #
@@ -156,6 +203,9 @@ def run(bench: Bench, verbose: bool = True,
         "e2e_greedypm_wall_s": e2e,
         "platform": platform.platform(),
     }
+    jax_kernels = _jax_kernels(specs, maps, nn, repeats)
+    if jax_kernels is not None:
+        payload["jax_kernels"] = jax_kernels
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -166,6 +216,10 @@ def run(bench: Bench, verbose: bool = True,
                         rows, f"Hot-path microkernels ({n_jobs} jobs)"))
         for name, wall in e2e.items():
             print(f"  e2e {name}: {wall:.2f}s")
+        if jax_kernels is not None:
+            for name, v in jax_kernels.items():
+                print(f"  jax {name}: {v['jax_mean_us']}us "
+                      f"(numpy {v['numpy_mean_us']}us)")
         print(f"  -> {BENCH_JSON}")
     return payload
 

@@ -15,9 +15,9 @@ from __future__ import annotations
 import argparse
 import time
 
-from . import (fig1_load, fig4_period_stretch, hotpath_bench, mcb8_runtime,
-               roofline, sweep_bench, table2_stretch, table3_costs,
-               table4_underutilization, tpu_cluster)
+from . import (batched_bench, fig1_load, fig4_period_stretch, hotpath_bench,
+               mcb8_runtime, roofline, sweep_bench, table2_stretch,
+               table3_costs, table4_underutilization, tpu_cluster)
 from .common import FULL, QUICK, Bench
 
 BENCHES = {
@@ -30,6 +30,7 @@ BENCHES = {
     "roofline": roofline.run,
     "sweep": sweep_bench.run,
     "hotpath": hotpath_bench.run,
+    "batched": batched_bench.run,
     "tpu_cluster": tpu_cluster.run,
 }
 

@@ -12,7 +12,7 @@ import json
 import platform
 import time
 
-from repro.sched.sweep import grid, run_grid
+from repro.sched.sweep import grid, run_batched, run_grid
 from repro.workloads import registry
 from repro.workloads.registry import WorkloadSpec
 
@@ -75,6 +75,36 @@ def run(bench: Bench, verbose: bool = True):
         "per_policy": per_policy,
         "platform": platform.platform(),
     }
+
+    # batched-backend trajectory: the same kind of grid (8 lublin seeds ×
+    # one allocating policy) through the lockstep JAX backend vs numpy on
+    # one worker, so batched_cells_per_sec sits next to cells_per_sec in
+    # the tracked JSON.  Wall time includes jit compile — that is the real
+    # cost a cold sweep pays, so it is the honest trajectory number.
+    try:
+        from repro.core.alloc_jax import has_jax
+        if has_jax():
+            b_cells = grid(
+                [WorkloadSpec("lublin", n_jobs=s.n_jobs, n_nodes=s.n_nodes,
+                              seed=i) for i in range(8)],
+                ["GreedyP */OPT=MIN"], ["baseline"])
+            b_np = run_grid(b_cells, compute_bound=False, n_workers=1)
+            b_jax = run_batched(b_cells, compute_bound=False)
+            parity = all(
+                g["mean_stretch"] == r["mean_stretch"]
+                and g["max_stretch"] == r["max_stretch"]
+                for g, r in zip(b_jax.records, b_np.records))
+            payload["batched_cells_per_sec"] = round(b_jax.cells_per_sec, 4)
+            payload["batched"] = {
+                "n_cells": b_jax.n_cells,
+                "wall_s": round(b_jax.wall_s, 3),
+                "numpy_1worker_cells_per_sec": round(b_np.cells_per_sec, 4),
+                "policy": "GreedyP */OPT=MIN",
+                "stretch_parity": parity,
+            }
+    except Exception as e:  # noqa: BLE001 — optional accelerator dep
+        payload["batched"] = {"error": repr(e)}
+
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -88,4 +118,11 @@ def run(bench: Bench, verbose: bool = True):
               f"{res.cells_per_sec:.2f} cells/s, {total_events} engine "
               f"events ({payload['events_per_sec']:.0f} ev/s) "
               f"(+{trace_s:.2f}s cold trace materialization) -> {BENCH_JSON}")
+        if "batched_cells_per_sec" in payload:
+            b = payload["batched"]
+            print(f"  batched backend: {b['n_cells']} cells in "
+                  f"{b['wall_s']:.1f}s = {payload['batched_cells_per_sec']:.2f}"
+                  f" cells/s (numpy 1-worker "
+                  f"{b['numpy_1worker_cells_per_sec']:.2f}), "
+                  f"stretch parity={b['stretch_parity']}")
     return payload

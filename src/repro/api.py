@@ -63,8 +63,8 @@ from .sched.scenarios import (apply_scenario, apply_scenario_trace,
                               register_reactive, register_scenario,
                               run_reactive, scenario_docs)
 from .sched.session import SessionState, SimSession, open_session
-from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_branches,
-                          run_grid)
+from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_batched,
+                          run_branches, run_grid)
 from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
                                  make_trace_ir, parse_workload,
                                  register_workload, workload_kind)
@@ -102,7 +102,8 @@ __all__ = [
     # reactive scenarios (callbacks over live session state)
     "run_reactive", "register_reactive", "list_reactive", "reactive_docs",
     # sweep subsystem
-    "Cell", "SweepResult", "RecordCache", "grid", "run_grid", "run_branches",
+    "Cell", "SweepResult", "RecordCache", "grid", "run_grid", "run_batched",
+    "run_branches",
 ]
 
 TraceLike = Union[WorkloadSpec, Trace, Sequence[JobSpec]]

@@ -106,6 +106,20 @@ def wkv6(r, k, v, w, u, s0):
 
 
 # --------------------------------------------------------------------------- #
+# scheduler allocation matvec (§4.6 water-filling inner loop)                  #
+# --------------------------------------------------------------------------- #
+def alloc_matvec(weight, x):
+    """Sequential masked matvec over job columns — bit-exact vs the numpy
+    CSR accumulation (see ``kernels/alloc_matvec.py``).  No custom_vjp: the
+    scheduler path is forward-only f64 arithmetic, never differentiated."""
+    if _BACKEND == "pallas":
+        from .alloc_matvec import alloc_matvec as kk
+
+        return kk(weight, x, interpret=_interpret())
+    return _ref.alloc_matvec_ref(weight, x)
+
+
+# --------------------------------------------------------------------------- #
 # RG-LRU linear recurrence                                                     #
 # --------------------------------------------------------------------------- #
 def linear_recurrence(a, b, h0):

@@ -12,10 +12,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from ..models.layers import chunked_attention, decode_attention
+# the scheduler matvec oracle lives next to its kernel (it is also imported
+# by repro.core.alloc_jax, which must not pull the model stack in)
+from .alloc_matvec import alloc_matvec_ref
 
 __all__ = [
     "flash_attention_ref", "flash_decode_ref", "wkv6_ref",
-    "linear_recurrence_ref",
+    "linear_recurrence_ref", "alloc_matvec_ref",
 ]
 
 

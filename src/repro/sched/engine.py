@@ -312,6 +312,10 @@ def _reallocate_yields(e: "Engine", opt: str) -> None:
         ylds = allocate([js.spec for js in views],
                         [js.mapping for js in views],
                         e.params.n_nodes, opt=opt)
+    elif e.alloc_backend is not None:
+        # pluggable kernel backend (bit-identical contract): e.g. the
+        # batched JAX path, or a lockstep lane of a batched sweep
+        ylds = e.alloc_backend.allocate(st.inc.csr(), run, opt)
     else:
         # hot path: the incrementally maintained incidence matrix already
         # holds every running task — no mapping rescan, no table rebuild
@@ -466,8 +470,14 @@ class Engine:
         policy: PolicySpec | str | Policy,
         params: Optional[SimParams] = None,
         cluster_events: Sequence[ClusterEvent] = (),
+        alloc_backend: Optional[object] = None,
     ):
         self.params = params or SimParams()
+        # optional kernel backend for the §4.6 reallocation: any object with
+        # ``allocate(inc: CSRIncidence, cols, opt) -> yields`` (e.g.
+        # ``repro.core.alloc_jax.JaxAllocBackend`` or a lockstep lane).
+        # None = the numpy hot path; reference_kernels() overrides either.
+        self.alloc_backend = alloc_backend
         self.policy_spec, self.policy, self.policy_ref = resolve_policy_arg(policy)
         if isinstance(specs, Trace):
             # array-native ingest: columns feed the SoA state directly

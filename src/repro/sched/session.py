@@ -737,6 +737,9 @@ class SimSession:
         e = Engine.__new__(Engine)
         e.params = params
         e.policy_spec, e.policy, e.policy_ref = resolve_policy_arg(policy)
+        # allocator backends are process-local objects, not snapshot state:
+        # restored engines always resume on the default numpy hot path
+        e.alloc_backend = None
         from ..core.state import EngineState
         e.state = EngineState(specs, params.n_nodes)
         e.cluster_events = [ClusterEvent(float(t), k, tuple(int(n) for n in ns))

@@ -26,6 +26,7 @@ import json
 import multiprocessing as mp
 import os
 import sys
+import threading
 import time
 import dataclasses
 from dataclasses import dataclass, replace
@@ -40,7 +41,7 @@ from .engine import Engine, SimParams
 from .scenarios import apply_scenario_trace, parse_scenario_chain
 
 __all__ = ["Cell", "SweepResult", "RecordCache", "grid", "run_grid",
-           "run_branches", "record_matches"]
+           "run_batched", "run_branches", "record_matches"]
 
 
 def record_matches(record: Dict[str, Any], kv: Dict[str, Any]) -> bool:
@@ -174,14 +175,16 @@ def _materialize(workload: WorkloadSpec, scenario: str, compute_bound: bool):
     return out
 
 
-def _run_cell(task: Tuple[int, Cell, bool]) -> Dict[str, Any]:
+def _run_cell(task: Tuple[int, Cell, bool],
+              alloc_backend: Optional[object] = None) -> Dict[str, Any]:
     idx, cell, compute_bound = task
     trace, events, bound, fingerprint = _materialize(
         cell.workload, cell.scenario, compute_bound)
     base = cell.params or SimParams()
     params = replace(base, n_nodes=cell.workload.n_nodes)
     t0 = time.perf_counter()
-    engine = Engine(trace, cell.policy, params, cluster_events=events)
+    engine = Engine(trace, cell.policy, params, cluster_events=events,
+                    alloc_backend=alloc_backend)
     # batch baselines drop ClusterEvents (they don't model failures) — flag
     # the record so failure-scenario cells aren't read as simulated for them
     applied = engine.policy.handles_cluster_events or not events
@@ -316,12 +319,76 @@ def _pool_context() -> mp.context.BaseContext:
     return mp.get_context("fork" if "fork" in methods else "spawn")
 
 
+def run_batched(
+    cells: Sequence[Cell],
+    compute_bound: bool = False,
+    json_path: Optional[str] = None,
+    matvec: str = "auto",
+) -> SweepResult:
+    """Evaluate every cell through the batched JAX allocation backend.
+
+    One device, one lockstep schedule: each cell's engine runs in its own
+    thread with a :class:`repro.core.alloc_jax.LockstepDispatcher` lane as
+    its allocation backend; the driver thread collects every live lane's
+    §4.6 request per scheduling round, pads them into one dense batch, and
+    answers the round with a single jitted water-filling dispatch (OPT=AVG
+    floors batched on device, LPs on host).  Per-lane results are bit-equal
+    to the numpy kernels, so the records match a ``run_grid`` sweep of the
+    same cells exactly on every simulation outcome (records carry
+    ``backend="jax"`` and their own wall times).
+
+    ``matvec`` picks the inner-matvec kernel: ``"jnp"`` (pure jnp, the
+    CPU default), ``"pallas"`` (the Pallas kernel, ``interpret=True``
+    off-TPU), or ``"auto"`` (pallas only under the process-wide pallas
+    kernel backend, at kernel-worthy shapes).
+    """
+    from ..core import alloc_jax
+
+    t0 = time.perf_counter()
+    n = len(cells)
+    if n == 0:
+        return SweepResult(records=[], wall_s=time.perf_counter() - t0,
+                           n_workers=1)
+    dispatcher = alloc_jax.LockstepDispatcher(
+        n, alloc_jax.BatchedAllocator(matvec=matvec))
+    records: List[Optional[Dict[str, Any]]] = [None] * n
+    errors: List[Optional[BaseException]] = [None] * n
+
+    def _lane_main(i: int) -> None:
+        try:
+            records[i] = _run_cell((i, cells[i], compute_bound),
+                                   alloc_backend=dispatcher.lane(i))
+        except BaseException as exc:  # noqa: BLE001 — re-raised by driver
+            errors[i] = exc
+        finally:
+            dispatcher.finish_lane(i)
+
+    threads = [threading.Thread(target=_lane_main, args=(i,), daemon=True)
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    dispatcher.serve()                  # the device loop (this thread)
+    for t in threads:
+        t.join()
+    first = next((e for e in errors if e is not None), None)
+    if first is not None:
+        raise first
+    for rec in records:
+        rec["backend"] = "jax"
+    res = SweepResult(records=list(records),
+                      wall_s=time.perf_counter() - t0, n_workers=1)
+    if json_path is not None:
+        res.save_json(json_path)
+    return res
+
+
 def run_grid(
     cells: Sequence[Cell],
     n_workers: int = 1,
     chunksize: Optional[int] = None,
     compute_bound: bool = False,
     json_path: Optional[str] = None,
+    backend: Optional[str] = None,
 ) -> SweepResult:
     """Evaluate every cell, fanning across ``n_workers`` processes.
 
@@ -333,10 +400,21 @@ def run_grid(
     bound of its (scenario-transformed) trace and the achieved
     ``degradation`` from it.  ``json_path`` additionally writes the artifact.
 
+    ``backend="jax"`` (or ``"pallas"``) routes the whole grid through
+    :func:`run_batched` instead — one device, allocation phases stepped in
+    lockstep, bit-identical records; ``n_workers``/``chunksize`` don't
+    apply there.  ``None``/``"numpy"`` is the process-pool path.
+
     Note: when jax is loaded the pool uses the forkserver start method (see
     ``_pool_context``), which re-imports ``__main__`` — scripts calling this
     with ``n_workers > 1`` need the usual ``if __name__ == "__main__"`` guard.
     """
+    if backend not in (None, "numpy"):
+        if backend not in ("jax", "pallas"):
+            raise ValueError(f"unknown sweep backend {backend!r}")
+        return run_batched(cells, compute_bound=compute_bound,
+                           json_path=json_path,
+                           matvec="jnp" if backend == "jax" else "pallas")
     tasks = [(i, c, compute_bound) for i, c in enumerate(cells)]
     t0 = time.perf_counter()
     if n_workers <= 1 or len(tasks) <= 1:

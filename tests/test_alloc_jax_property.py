@@ -1,0 +1,70 @@
+"""Property tests: the JAX water-filling is the numpy kernel, bit for bit.
+
+Hypothesis drives the same instance space as ``test_alloc_property``
+(zero-need jobs, dead nodes, node multiplicities, empty running sets) and
+asserts exact equality — not approximate closeness — between
+``alloc_jax.maxmin_yields_jax`` (x64, adds-only matvec) and
+``maxmin_yields_csr``, plus a padded-batch property proving that padding
+rows/columns/lanes never perturbs any real lane.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+pytest.importorskip("jax")
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alloc_jax
+from repro.core.alloc_kernels import build_csr, maxmin_yields_csr
+
+pytestmark = pytest.mark.skipif(not alloc_jax.has_jax(),
+                                reason="jax present but not importable")
+
+
+@st.composite
+def csr_instances(draw, max_width=24, max_nodes=10):
+    W = draw(st.integers(0, max_width))
+    N = draw(st.integers(1, max_nodes))
+    cpu = draw(st.lists(st.sampled_from([0.0, 0.2, 0.5, 0.75, 1.0]),
+                        min_size=W, max_size=W))
+    running = draw(st.lists(st.booleans(), min_size=W, max_size=W))
+    mappings = []
+    for j in range(W):
+        if running[j]:
+            mappings.append(draw(st.lists(st.integers(0, N - 1),
+                                          min_size=1, max_size=4)))
+        else:
+            mappings.append([])
+    inc = build_csr(cpu, mappings, N)
+    active = np.array(running, dtype=bool)
+    return inc, active
+
+
+@settings(max_examples=40, deadline=None)
+@given(csr_instances())
+def test_maxmin_jax_bit_equal(inst):
+    inc, active = inst
+    got = alloc_jax.maxmin_yields_jax(inc, active)
+    ref = maxmin_yields_csr(inc, active)
+    assert got.dtype == ref.dtype == np.float64
+    assert np.array_equal(got, ref)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(csr_instances(max_width=12, max_nodes=6),
+                min_size=1, max_size=5),
+       st.integers(0, 3), st.integers(0, 4), st.integers(0, 2))
+def test_padded_batch_bit_equal(insts, pad_n, pad_w, pad_lanes):
+    incs = [i for i, _ in insts]
+    actives = [a for _, a in insts]
+    present, weight, active = alloc_jax.pad_batch(
+        incs, actives,
+        n_nodes=max(i.n_nodes for i in incs) + pad_n,
+        width=max(max(i.width for i in incs), 1) + pad_w,
+        n_lanes=len(incs) + pad_lanes)
+    y = alloc_jax.maxmin_yields_batch(present, weight, active)
+    for b, (inc, act) in enumerate(insts):
+        assert np.array_equal(y[b, : inc.width], maxmin_yields_csr(inc, act))
+        assert not y[b, inc.width:].any()
+    assert not y[len(insts):].any()
