@@ -21,6 +21,39 @@ from .common import Bench, fmt_table
 
 BENCH_JSON = "BENCH_sweep.json"
 
+NARRATOR_SPEC = "breakdown(mtbf=2e4,repair=2e3)+cancel(rate=2e-5)+noise"
+
+
+def _narrator_session(scale, spec=None):
+    from repro.sched.narrator import parse_narrator
+    from repro.sched.session import open_session
+
+    ses = open_session(scale.n_nodes, "GreedyP */OPT=MIN")
+    if spec:
+        ses.attach_narrator(parse_narrator(spec, seed=0))
+    ses.submit(WorkloadSpec("lublin", n_jobs=scale.n_jobs,
+                            n_nodes=scale.n_nodes, seed=0))
+    return ses
+
+
+def _narrator_overhead(scale):
+    out = {"spec": NARRATOR_SPEC}
+    for key, spec in (("clean", None), ("chaos", NARRATOR_SPEC)):
+        t0 = time.perf_counter()
+        ses = _narrator_session(scale, spec)
+        r = ses.run()
+        wall = time.perf_counter() - t0
+        out[key] = {
+            "wall_s": round(wall, 4),
+            "events": r.events,
+            "events_per_sec": round(r.events / max(wall, 1e-9), 1),
+            "n_cancelled": r.n_cancelled,
+            "n_pmtn": r.n_pmtn,
+        }
+    out["overhead_x"] = round(
+        out["chaos"]["wall_s"] / max(out["clean"]["wall_s"], 1e-9), 3)
+    return out
+
 POLICIES = [
     "FCFS",
     "EASY",
@@ -105,6 +138,11 @@ def run(bench: Bench, verbose: bool = True):
     except Exception as e:  # noqa: BLE001 — optional accelerator dep
         payload["batched"] = {"error": repr(e)}
 
+    # narrator overhead: the same streaming session with and without chaos
+    # streams (breakdown/cancel/noise), tracked as events/s — what the lazy
+    # peek/fire loop and the truth-noise rewrite cost on top of a clean run
+    payload["narrator"] = _narrator_overhead(s)
+
     with open(BENCH_JSON, "w") as f:
         json.dump(payload, f, indent=1)
 
@@ -125,4 +163,11 @@ def run(bench: Bench, verbose: bool = True):
                   f" cells/s (numpy 1-worker "
                   f"{b['numpy_1worker_cells_per_sec']:.2f}), "
                   f"stretch parity={b['stretch_parity']}")
+        nar = payload["narrator"]
+        print(f"  narrator overhead: clean "
+              f"{nar['clean']['events_per_sec']:.0f} ev/s vs chaos "
+              f"{nar['chaos']['events_per_sec']:.0f} ev/s "
+              f"({nar['overhead_x']:.2f}x wall, "
+              f"{nar['chaos']['n_cancelled']} cancels, "
+              f"{nar['chaos']['n_pmtn']} pmtn)")
     return payload

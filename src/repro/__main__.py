@@ -45,6 +45,14 @@ Examples::
         '{"op": "run"}' '{"op": "result"}' \\
         | python -m repro session --script - \\
               --policy "GreedyP */OPT=MIN" --nodes 32
+    # chaos: seeded breakdown/cancel/noise streams, bit-reproducible
+    printf '%s\\n' '{"op": "submit", "workload": "lublin", "jobs": 200}' \\
+        '{"op": "run"}' '{"op": "result"}' \\
+        | python -m repro session --script - --policy "GreedyP */OPT=MIN" \\
+              --nodes 32 --narrator "breakdown(mtbf=2e4,repair=2e3)+noise" \\
+              --narrator-seed 7
+    python -m repro sweep --table1 --workload lublin --jobs 100 --nodes 32 \\
+        --timeout 300 --retries 1   # hung cells quarantined, sweep completes
 """
 from __future__ import annotations
 
@@ -267,8 +275,20 @@ def _cmd_session(args: argparse.Namespace) -> int:
     def emit(obj: dict) -> None:
         print(json.dumps(obj), file=out, flush=True)
 
+    def attach_narrator(ses) -> None:
+        if args.narrator:
+            ses.attach_narrator(api.parse_narrator(args.narrator,
+                                                   seed=args.narrator_seed))
+
     ses = None
     if args.restore:
+        # a snapshot carries its narrator (RNG state and all); --narrator
+        # on top of --restore would replace it mid-stream, so refuse
+        if args.narrator:
+            print("--narrator cannot be combined with --restore (the "
+                  "snapshot already carries the narrator state)",
+                  file=sys.stderr)
+            return 2
         ses = api.SimSession.restore(args.restore)
     elif args.policy:
         overrides = {}
@@ -277,6 +297,7 @@ def _cmd_session(args: argparse.Namespace) -> int:
         if args.penalty is not None:
             overrides["penalty"] = args.penalty
         ses = api.open_session(args.nodes, args.policy, **overrides)
+        attach_narrator(ses)
 
     script = sys.stdin if args.script == "-" else open(args.script)
     try:
@@ -294,6 +315,7 @@ def _cmd_session(args: argparse.Namespace) -> int:
                         int(ev.get("nodes", args.nodes)), ev["policy"],
                         **{k: ev[k] for k in ("period", "penalty")
                            if k in ev})
+                    attach_narrator(ses)
                     emit({"kind": "open", "policy": ses.policy_name,
                           **ses.observe()})
                     continue
@@ -357,16 +379,27 @@ def _cmd_sweep(args: argparse.Namespace) -> int:
     periods = [float(p) for p in _csv(args.periods)]
     res = api.sweep(workloads, policies, scenarios, periods=periods,
                     n_workers=args.workers, compute_bound=args.bound,
-                    cache_path=args.cache, json_path=args.out)
+                    cache_path=args.cache, json_path=args.out,
+                    timeout_s=args.timeout, retries=args.retries)
     print(f"{res.n_cells} cells in {res.wall_s:.1f}s "
           f"({res.cells_per_sec:.2f} cells/s, {res.n_workers} workers)")
     summary = res.summary(by=args.by)
-    width = max(len(g) for g in summary)
-    print(f"{'group':{width}s}  {'cells':>5s}  {'mean stretch':>12s}  "
-          f"{'max stretch':>11s}")
-    for group, agg in summary.items():
-        print(f"{group:{width}s}  {agg['n_cells']:5d}  "
-              f"{agg['mean_mean_stretch']:12.2f}  {agg['max_max_stretch']:11.2f}")
+    if summary:
+        width = max(len(g) for g in summary)
+        print(f"{'group':{width}s}  {'cells':>5s}  {'mean stretch':>12s}  "
+              f"{'max stretch':>11s}")
+        for group, agg in summary.items():
+            print(f"{group:{width}s}  {agg['n_cells']:5d}  "
+                  f"{agg['mean_mean_stretch']:12.2f}  {agg['max_max_stretch']:11.2f}")
+    # quarantined cells are reported, not fatal: the sweep completed and
+    # every healthy record is valid (exit code stays 0)
+    for rec in res.quarantined:
+        print(f"quarantined: {rec['workload']} x {rec['policy']} x "
+              f"{rec['scenario']} after {rec['attempts']} attempt(s): "
+              f"{rec['error']}", file=sys.stderr)
+    if res.n_quarantined:
+        print(f"{res.n_quarantined} cell(s) quarantined "
+              f"(see stderr; re-run to retry)", file=sys.stderr)
     if args.out:
         print(f"artifact: {args.out}")
     if args.cache:
@@ -451,6 +484,13 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--restore", default=None, metavar="PATH",
                    help="resume from a saved session snapshot instead of "
                         "opening a fresh session")
+    p.add_argument("--narrator", default=None, metavar="SPEC",
+                   help="attach a seeded chaos narrator, e.g. "
+                        "'breakdown(mtbf=2e4,repair=2e3)+cancel+noise'; "
+                        "rides along in snapshots (not valid with "
+                        "--restore)")
+    p.add_argument("--narrator-seed", type=int, default=0,
+                   help="narrator RNG seed (default: 0)")
     p.add_argument("--metrics", default=None, metavar="PATH",
                    help="write the JSONL metrics stream here (default: "
                         "stdout)")
@@ -468,6 +508,12 @@ def build_parser() -> argparse.ArgumentParser:
     p.add_argument("--periods", default="600",
                    help="comma-separated periodic-pass periods (s)")
     p.add_argument("--workers", type=int, default=1, help="worker processes")
+    p.add_argument("--timeout", type=float, default=None, metavar="S",
+                   help="per-cell wall-clock budget (s); cells over budget "
+                        "are retried then quarantined, the sweep completes")
+    p.add_argument("--retries", type=int, default=0,
+                   help="retries per failing/hung cell on a fresh worker "
+                        "before quarantine (default: 0)")
     p.add_argument("--bound", action="store_true",
                    help="compute per-cell Theorem-1 bounds")
     p.add_argument("--by", default="policy",

@@ -62,6 +62,8 @@ from .sched.scenarios import (apply_scenario, apply_scenario_trace,
                               parse_scenario_chain, reactive_docs,
                               register_reactive, register_scenario,
                               run_reactive, scenario_docs)
+from .sched.narrator import (Narrator, list_streams, narrator_docs,
+                             parse_narrator, register_stream)
 from .sched.session import SessionState, SimSession, open_session
 from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_batched,
                           run_branches, run_grid)
@@ -101,6 +103,9 @@ __all__ = [
     "register_scenario",
     # reactive scenarios (callbacks over live session state)
     "run_reactive", "register_reactive", "list_reactive", "reactive_docs",
+    # chaos narrator (seeded stochastic failure/cancel/noise streams)
+    "Narrator", "parse_narrator", "register_stream", "list_streams",
+    "narrator_docs",
     # sweep subsystem
     "Cell", "SweepResult", "RecordCache", "grid", "run_grid", "run_batched",
     "run_branches",
@@ -172,6 +177,8 @@ def sweep(
     compute_bound: bool = True,
     cache_path: Optional[str] = None,
     json_path: Optional[str] = None,
+    timeout_s: Optional[float] = None,
+    retries: int = 0,
 ) -> SweepResult:
     """Evaluate a (workload × policy × period × scenario) grid in parallel.
 
@@ -182,6 +189,12 @@ def sweep(
     stopped and repeated sweeps over overlapping grids are incremental.
     ``json_path`` additionally writes the plain ``repro.sweep/v1``
     artifact.
+
+    ``timeout_s``/``retries`` supervise the misses: each cell gets a
+    wall-clock budget and bounded retries on fresh workers; cells that
+    exhaust them come back as quarantine records (``quarantined=True``,
+    never cached) and the sweep still completes — see
+    :meth:`~repro.sched.sweep.RecordCache.sweep`.
     """
     workloads, policies = list(workloads), list(policies)
     scenarios, periods = list(scenarios), [float(p) for p in periods]
@@ -189,7 +202,8 @@ def sweep(
     cache = RecordCache(cache_path)
     records = cache.sweep(workloads, policies, periods, scenarios,
                           params=params, n_workers=n_workers,
-                          compute_bound=compute_bound)
+                          compute_bound=compute_bound,
+                          timeout_s=timeout_s, retries=retries)
     res = SweepResult(records=list(records),
                       wall_s=_time.perf_counter() - t0,
                       n_workers=n_workers)

@@ -25,12 +25,14 @@ __all__ = [
     "PAUSED",
     "PENDING",
     "COMPLETED",
+    "CANCELLED",
 ]
 
 PENDING = "pending"      # submitted, never-yet-placed or removed before start
 RUNNING = "running"
 PAUSED = "paused"        # was running, preempted to storage
 COMPLETED = "completed"
+CANCELLED = "cancelled"  # withdrawn by its owner; never counted in metrics
 
 
 @dataclass

@@ -30,6 +30,7 @@ import numpy as np
 
 from .alloc_kernels import NodeIncidence
 from .job import (
+    CANCELLED,
     COMPLETED,
     PAUSED,
     PENDING,
@@ -46,22 +47,26 @@ __all__ = [
     "S_RUNNING",
     "S_PAUSED",
     "S_COMPLETED",
+    "S_CANCELLED",
 ]
 
 _EPS = 1e-9
 
 # integer status codes (array-friendly); "in system" == 0 < status < COMPLETED
+# (CANCELLED > COMPLETED, so cancelled jobs fall out of every in-system mask)
 S_NOT_ARRIVED = 0
 S_PENDING = 1
 S_RUNNING = 2
 S_PAUSED = 3
 S_COMPLETED = 4
+S_CANCELLED = 5
 
 _STATUS_STR = {
     S_PENDING: PENDING,
     S_RUNNING: RUNNING,
     S_PAUSED: PAUSED,
     S_COMPLETED: COMPLETED,
+    S_CANCELLED: CANCELLED,
 }
 _STATUS_CODE = {v: k for k, v in _STATUS_STR.items()}
 
@@ -162,7 +167,15 @@ class JobView:
 
     # ---- simulator-side quantities --------------------------------------
     def remaining_vt(self) -> float:
-        return self.spec.proc_time - self.vt
+        # estimate-based (policies never see the truth column); under noisy
+        # truth the job may run past its estimate, so clamp at zero
+        return max(0.0, self.spec.proc_time - self.vt)
+
+    @property
+    def proc_truth(self) -> float:
+        """Executed processing time — engine-side only; policies must keep
+        reading ``spec.proc_time`` (the non-clairvoyant estimate)."""
+        return float(self._st.proc_truth[self.i])
 
     @property
     def is_running(self) -> bool:
@@ -188,6 +201,9 @@ class EngineState:
     def __init__(self, specs: Sequence[JobSpec], n_nodes: int):
         self.specs = list(specs)
         self.proc_time = np.array([s.proc_time for s in self.specs], dtype=np.float64)
+        # truth column: what the engine executes.  Defaults to the estimate
+        # (clairvoyant); narrator noise or a trace truth column diverge it.
+        self.proc_truth = self.proc_time.copy()
         self.cpu_need = np.array([s.cpu_need for s in self.specs], dtype=np.float64)
         # per-job demand, n_tasks * cpu_need — reused every advance
         self.demand = np.array(
@@ -203,6 +219,9 @@ class EngineState:
         st = cls.__new__(cls)
         st.specs = list(_specs_of(trace))
         st.proc_time = trace.proc_time.astype(np.float64)     # writable copy
+        truth = getattr(trace, "proc_truth", None)
+        st.proc_truth = (truth.astype(np.float64) if truth is not None
+                         else st.proc_time.copy())
         st.cpu_need = trace.cpu_need.astype(np.float64)
         st.demand = trace.n_tasks * trace.cpu_need
         st._init_dynamic(n_nodes)
@@ -253,6 +272,9 @@ class EngineState:
         tail_dem = np.array(
             [s.n_tasks * s.cpu_need for s in specs], dtype=np.float64)
         self.proc_time = np.concatenate([self.proc_time, tail_proc])
+        # new rows start clairvoyant; a narrator noise stream perturbs the
+        # truth right after submit (before the jobs can arrive)
+        self.proc_truth = np.concatenate([self.proc_truth, tail_proc.copy()])
         self.cpu_need = np.concatenate([self.cpu_need, tail_cpu])
         self.demand = np.concatenate([self.demand, tail_dem])
         self.vt = np.concatenate([self.vt, np.zeros(k)])
@@ -304,7 +326,7 @@ class EngineState:
         run = run[ok]
         yld = yld[ok]
         t0 = np.maximum(self.now, self.penalty_until[run])
-        t = t0 + (self.proc_time[run] - self.vt[run]) / yld
+        t = t0 + (self.proc_truth[run] - self.vt[run]) / yld
         return float(t.min())
 
     def finished_running_indices(self) -> np.ndarray:
@@ -312,7 +334,7 @@ class EngineState:
         run = self.running_indices()
         if run.size == 0:
             return run
-        done = (self.proc_time[run] - self.vt[run] <= _EPS) & (self.yld[run] > _EPS)
+        done = (self.proc_truth[run] - self.vt[run] <= _EPS) & (self.yld[run] > _EPS)
         return run[done]
 
     def advance(self, t_next: float) -> None:
@@ -337,6 +359,6 @@ class EngineState:
             self.demand_integral += min(cap, demand) * (b - a)
         eff = np.maximum(0.0, t_next - np.maximum(self.now, pen))
         self.vt[run] = np.minimum(
-            self.proc_time[run], self.vt[run] + self.yld[run] * eff
+            self.proc_truth[run], self.vt[run] + self.yld[run] * eff
         )
         self.now = t_next

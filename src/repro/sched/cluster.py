@@ -11,22 +11,32 @@ fault tolerance.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 __all__ = ["ClusterEvent", "failure_trace"]
 
+_KINDS = ("fail", "join", "cancel", "resize")
+
 
 @dataclass(frozen=True)
 class ClusterEvent:
     time: float
-    kind: str          # "fail" | "join"
-    nodes: Tuple[int, ...]
+    kind: str                        # "fail" | "join" | "cancel" | "resize"
+    nodes: Tuple[int, ...] = ()      # fail/join targets
+    jids: Tuple[int, ...] = ()       # cancel/resize targets (job ids)
+    value: Optional[float] = None    # resize: new n_tasks
 
     def __post_init__(self):
-        if self.kind not in ("fail", "join"):
+        if self.kind not in _KINDS:
             raise ValueError(self.kind)
+        if self.kind in ("fail", "join") and not self.nodes:
+            raise ValueError(f"{self.kind} event needs nodes")
+        if self.kind in ("cancel", "resize") and not self.jids:
+            raise ValueError(f"{self.kind} event needs jids")
+        if self.kind == "resize" and self.value is None:
+            raise ValueError("resize event needs value (new n_tasks)")
 
 
 def failure_trace(

@@ -104,6 +104,9 @@ class Component:
     def on_job_completed(self, js: JobView) -> None:
         pass
 
+    def on_job_cancelled(self, js: JobView) -> None:
+        pass
+
     def on_complete(self) -> None:
         pass
 
@@ -187,6 +190,7 @@ class ComposedPolicy(Policy):
                              if getattr(type(c), h) is not getattr(base, h)]
         self._submit_chain = by_hook("on_submit")
         self._job_completed_chain = by_hook("on_job_completed")
+        self._cancel_chain = by_hook("on_job_cancelled")
         self._complete_chain = by_hook("on_complete")
         self._tick_chain = by_hook("on_tick")
         self._finalize_chain = by_hook("finalize")
@@ -209,6 +213,10 @@ class ComposedPolicy(Policy):
     def on_job_completed(self, js: JobView) -> None:
         for c in self._job_completed_chain:
             c.on_job_completed(js)
+
+    def on_job_cancelled(self, js: JobView) -> None:
+        for c in self._cancel_chain:
+            c.on_job_cancelled(js)
 
     def on_complete(self) -> None:
         for c in self._complete_chain:

@@ -30,7 +30,7 @@ from __future__ import annotations
 import heapq
 import math
 from collections import Counter, deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as dc_replace
 from itertools import islice
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -41,7 +41,14 @@ from ..core.greedy import greedy_p, greedy_place, greedy_pm
 from ..core.job import COMPLETED, PAUSED, PENDING, RUNNING, JobSpec
 from ..core.mcb8 import mcb8
 from ..core.policies import PolicySpec, parse_policy
-from ..core.state import EngineState, JobView
+from ..core.state import (
+    S_CANCELLED,
+    S_COMPLETED,
+    S_NOT_ARRIVED,
+    S_RUNNING,
+    EngineState,
+    JobView,
+)
 from ..core.stretch_opt import improve_avg_stretch, improve_max_stretch, mcb8_stretch
 from ..core.yield_alloc import allocate, allocate_incidence
 from ..workloads.trace import Trace
@@ -91,6 +98,7 @@ class SimResult:
     makespan: float
     events: int
     hit_max_events: bool = False    # True only with on_max_events="truncate"
+    n_cancelled: int = 0            # jobs withdrawn mid-run (never in metrics)
     # observability: final simulation clock and the engine-loop wall time.
     # ``sim_wall_s`` is a measurement, not a simulation outcome, so it is
     # excluded from equality (bit-identity comparisons stay meaningful).
@@ -129,6 +137,11 @@ class Policy:
         pass
 
     def on_job_completed(self, js: JobView) -> None:
+        pass
+
+    def on_job_cancelled(self, js: JobView) -> None:
+        """Called just before the engine drops a cancelled job (mapping and
+        pool space still intact) so queue-holding policies can forget it."""
         pass
 
     def on_complete(self) -> None:
@@ -513,24 +526,38 @@ class Engine:
         self.n_pmtn += 1
         self.bytes_moved_gb += self._job_mem_gb(js.spec)  # save image
 
-    def start(self, js: JobView, mapping: List[int]) -> None:
+    def start(self, js: JobView, mapping: List[int]) -> bool:
         assert js.status in (PENDING, PAUSED)
+        st = self.state
+        if not st.alive.all() and not all(st.alive[n] for n in mapping):
+            # a target node died under the policy's feet (stale mapping or
+            # mid-allocation failure): degrade gracefully — re-place on the
+            # survivors instead of oversubscribing a dead node's zeroed
+            # memory.  If nothing fits the job stays pending/paused and the
+            # next scheduling event retries.
+            mapping = greedy_place(st.pool.copy(), js.spec)
+            if mapping is None:
+                return False
         resume = js.status == PAUSED
-        self.state.pool.place(js.spec, mapping)
-        self.state.inc.place(js.i, mapping)
+        st.pool.place(js.spec, mapping)
+        st.inc.place(js.i, mapping)
         js.status = RUNNING
         js.mapping = list(mapping)
         if resume:
-            js.penalty_until = self.state.now + self.params.penalty
+            js.penalty_until = st.now + self.params.penalty
             self.bytes_moved_gb += self._job_mem_gb(js.spec)  # restore image
+        return True
 
     def migrate_many(self, pairs: Sequence[Tuple[JobView, List[int]]]) -> None:
         """Transactionally migrate several running jobs: the new mappings are
         feasible *as a set* (computed against a pool copy), so all removals
         must happen before any placement."""
         moves = []
+        degraded = not self.state.alive.all()
         for js, new_mapping in pairs:
             assert js.status == RUNNING
+            if degraded and not all(self.state.alive[n] for n in new_mapping):
+                continue    # target died mid-allocation: keep the old placement
             old = _node_multiset(js.mapping)
             new = _node_multiset(new_mapping)
             moved = js.spec.n_tasks - sum(
@@ -558,6 +585,43 @@ class Engine:
         js.yld = 0.0
         js.completed_at = self.state.now
 
+    def cancel(self, js: JobView) -> None:
+        """Withdraw a job at the current time.  Frees its nodes and drops it
+        from every in-system mask (``S_CANCELLED > S_COMPLETED``); the job
+        keeps ``completed_at = None`` and is excluded from all metrics."""
+        st = self.state
+        code = int(st.status[js.i])
+        if code in (S_COMPLETED, S_CANCELLED):
+            return              # tolerant: pre-scripted streams may overlap
+        if code != S_NOT_ARRIVED:
+            self.policy.on_job_cancelled(js)
+        if code == S_RUNNING:
+            st.pool.remove(js.spec, js.mapping)
+            st.inc.remove(js.i, js.mapping)
+        st.status[js.i] = S_CANCELLED
+        js.mapping = None
+        js.yld = 0.0
+
+    def resize(self, js: JobView, n_tasks: int) -> None:
+        """Malleable grow/shrink of a job's task count.  A running job is
+        preempted and re-placed at the new width by the next scheduling
+        event — the exact path a node failure takes, so policies need no new
+        logic.  Specs are memoized per trace and shared across engines, so
+        the resized spec is a fresh object swapped into this state only."""
+        st = self.state
+        code = int(st.status[js.i])
+        if code in (S_COMPLETED, S_CANCELLED):
+            return
+        n_tasks = max(1, min(int(n_tasks), self.params.n_nodes))
+        if n_tasks == js.spec.n_tasks:
+            return
+        if code == S_RUNNING:
+            self.pause(js)
+        spec = dc_replace(js.spec, n_tasks=n_tasks)
+        st.specs[js.i] = spec
+        js.spec = spec
+        st.demand[js.i] = spec.n_tasks * spec.cpu_need
+
     # ------------------------------------------------------------------ #
     # cluster (failure / elastic) events                                  #
     # ------------------------------------------------------------------ #
@@ -583,6 +647,17 @@ class Engine:
                 st.alive[node] = True
                 st.pool.mem_free[node] = 1.0
                 st.pool.load[node] = 0.0
+        elif ev.kind in ("cancel", "resize"):
+            # rare events: the jid→index map is built on demand, not kept
+            jid_to_i = {s.jid: i for i, s in enumerate(st.specs)}
+            for jid in ev.jids:
+                i = jid_to_i.get(int(jid))
+                if i is None:
+                    continue    # unknown jid: tolerant, like dup fail/join
+                if ev.kind == "cancel":
+                    self.cancel(st.views[i])
+                else:
+                    self.resize(st.views[i], int(ev.value))
         else:
             raise ValueError(ev.kind)
 
@@ -611,6 +686,8 @@ class Engine:
         completions: Dict[int, float] = {}
         stretches: Dict[int, float] = {}
         for js in st.views:
+            if int(st.status[js.i]) == S_CANCELLED:
+                continue                # withdrawn: never in the metrics
             if js.completed_at is None:
                 if hit_cap or partial:
                     continue            # partial run: report finished jobs
@@ -618,14 +695,22 @@ class Engine:
                     f"job {js.spec.jid} never completed (deadlock?)")
             completions[js.spec.jid] = js.completed_at
             t = js.completed_at - js.spec.release
+            # stretch normalizes by the *executed* time — under truth noise
+            # the estimate would mis-scale the paper's central metric
             stretches[js.spec.jid] = bounded_stretch(
-                t, js.spec.proc_time, p.stretch_tau)
+                t, float(st.proc_truth[js.i]), p.stretch_tau)
         specs = st.specs
         first = min(s.release for s in specs) if specs else 0.0
         last = max(completions.values()) if completions else 0.0
         makespan = max(0.0, last - first)
         hours = max(makespan / 3600.0, 1e-9)
-        total_work = sum(s.total_work for s in specs) or 1.0
+        # executed CPU-seconds (truth), cancelled jobs excluded — the same
+        # multiply order as JobSpec.total_work so the clairvoyant case is
+        # bit-identical to the historical spec-side sum
+        total_work = sum(
+            s.n_tasks * float(st.proc_truth[i]) * s.cpu_need
+            for i, s in enumerate(specs)
+            if int(st.status[i]) != S_CANCELLED) or 1.0
         svals = list(stretches.values())
         if self.policy_spec is not None:
             name = self.policy_spec.name
@@ -653,6 +738,7 @@ class Engine:
             makespan=makespan,
             events=self._events,
             hit_max_events=hit_cap,
+            n_cancelled=int((st.status == S_CANCELLED).sum()),
             final_time=st.now,
             sim_wall_s=sim_wall_s,
         )

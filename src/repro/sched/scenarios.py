@@ -33,6 +33,9 @@ with any workload):
                           into a 10×-narrower window (flash crowd).
 * ``mem_pressure``      — a random half of the jobs needs 1.5× memory
                           (capped at a full node), stressing the packer.
+* ``ptime_noise``       — lognormal noise on the *executed* processing time
+                          (``proc_truth``); policies keep seeing the clean
+                          estimate (non-clairvoyant truth split).
 
 Use :func:`apply_scenario_trace` (columnar) or :func:`apply_scenario`
 (``JobSpec``-list compatibility wrapper) to materialize a cell, and
@@ -240,6 +243,19 @@ def _mem_pressure(trace, n_nodes, rng):
     return trace.replace(
         mem_req=np.where(hit, np.minimum(1.0, 1.5 * trace.mem_req),
                          trace.mem_req)), []
+
+
+@register_scenario("ptime_noise")
+def _ptime_noise(trace, n_nodes, rng):
+    """Lognormal truth noise: the engine executes proc_time x LogN(sigma=0.35)
+    while policies keep observing the unperturbed estimate (non-clairvoyant
+    split).  Mean-preserving (mu = -sigma^2/2); composes with any chain link
+    by multiplying whatever truth column the incoming trace already has."""
+    sigma = 0.35
+    base = trace.proc_truth if trace.proc_truth is not None else trace.proc_time
+    noise = rng.lognormal(mean=-0.5 * sigma * sigma, sigma=sigma,
+                          size=len(trace))
+    return trace.replace(proc_truth=base * noise), []
 
 
 # --------------------------------------------------------------------------- #

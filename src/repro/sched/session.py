@@ -46,11 +46,13 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..core.job import JobSpec
-from ..core.state import S_COMPLETED, S_NOT_ARRIVED, S_PAUSED, S_PENDING
+from ..core.state import (S_CANCELLED, S_COMPLETED, S_NOT_ARRIVED, S_PAUSED,
+                          S_PENDING)
 from ..workloads.trace import Trace, as_trace
 from .cluster import ClusterEvent
 from .engine import (_EPS, BatchPolicy, DFRSPolicy, Engine, Policy, SimParams,
                      SimResult, resolve_policy_arg)
+from .narrator import Narrator
 
 __all__ = ["SimSession", "SessionState", "open_session"]
 
@@ -349,6 +351,7 @@ class SimSession:
         self._hit_cap = False
         self._horizon = st.now
         self._wall = 0.0
+        self._narrator: Optional[Narrator] = None
         #: ephemeral driver scratchpad (reactive rules keep per-session
         #: state here); deliberately NOT part of snapshots
         self.scratch: Dict[str, Any] = {}
@@ -415,6 +418,10 @@ class SimSession:
             "n_completed": int((status == S_COMPLETED).sum()),
             "queue_depth": int(((status == S_PENDING)
                                 | (status == S_PAUSED)).sum()),
+            "n_cancelled": int((status == S_CANCELLED).sum()),
+            # jobs whose executed (truth) time diverges from the estimate
+            # policies observe — the non-clairvoyance the narrator injects
+            "n_noisy": int((st.proc_truth != st.proc_time).sum()),
             "alive_nodes": int(alive),
             "utilization": util / max(alive, 1e-9),
             "n_pmtn": self.engine.n_pmtn,
@@ -472,6 +479,8 @@ class SimSession:
             # period after the first release the session ever saw
             self._next_tick = specs[0].release + self.engine.params.period
             self._tick_armed = True
+        if self._narrator is not None:
+            self._narrator.on_submitted(self, idx)
         self._exhausted = False         # new future work re-arms the loop
         return idx
 
@@ -490,10 +499,16 @@ class SimSession:
             if kind == "period":
                 self.set_period(event["period"])
                 return
+            jids = event.get("jids")
+            if jids is None:
+                jids = [event["jid"]] if "jid" in event else ()
+            value = event.get("value", event.get("n_tasks"))
             event = ClusterEvent(
                 time=float(event.get("t", event.get("time", self.now))),
                 kind=kind,
                 nodes=tuple(int(n) for n in event.get("nodes", ())),
+                jids=tuple(int(j) for j in jids),
+                value=None if value is None else float(value),
             )
         if not self.engine.policy.handles_cluster_events:
             raise ValueError(
@@ -509,6 +524,42 @@ class SimSession:
         if bad:
             raise ValueError(f"nodes {bad} outside the "
                              f"{self.engine.params.n_nodes}-node cluster")
+        # contradiction checks against the *projected* state (everything
+        # already pending at event.time applied): a duplicate fail/join or
+        # a double cancel would silently corrupt incidence/pool accounting
+        if event.kind in ("fail", "join"):
+            alive = self._projected_alive(event.time)
+            for n in event.nodes:
+                if event.kind == "fail" and not alive[n]:
+                    raise ValueError(
+                        f"node {n} is already dead at t={event.time:.6g}; "
+                        f"injecting a duplicate 'fail' would corrupt "
+                        f"incidence state")
+                if event.kind == "join" and alive[n]:
+                    raise ValueError(
+                        f"node {n} is already alive at t={event.time:.6g}; "
+                        f"injecting a duplicate 'join' would corrupt "
+                        f"incidence state")
+                alive[n] = event.kind == "join"     # within-event dups too
+        elif event.kind in ("cancel", "resize"):
+            jid_to_i = {s.jid: i for i, s in enumerate(st.specs)}
+            pending = self._pending_cancels(event.time)
+            for jid in event.jids:
+                i = jid_to_i.get(int(jid))
+                if i is None:
+                    raise ValueError(
+                        f"unknown job id {jid} at t={event.time:.6g}; "
+                        f"known jobs only can be {event.kind}ed")
+                code = int(st.status[i])
+                if code == S_COMPLETED:
+                    raise ValueError(
+                        f"job {jid} already completed; cannot {event.kind} "
+                        f"it at t={event.time:.6g}")
+                if code == S_CANCELLED or int(jid) in pending:
+                    raise ValueError(
+                        f"job {jid} is already cancelled at "
+                        f"t={event.time:.6g}; duplicate '{event.kind}' "
+                        f"rejected")
         # keep the pending suffix time-sorted (stable after equal times)
         pos = self._ci
         while pos < len(self._cev) and self._cev[pos].time <= event.time:
@@ -524,6 +575,48 @@ class SimSession:
         if period <= 0:
             raise ValueError("period must be > 0")
         self.engine.params.period = period
+
+    def attach_narrator(self, narrator: Narrator) -> None:
+        """Attach a chaos :class:`~repro.sched.narrator.Narrator`: its
+        streams fire lazily as the loop advances and ride along in
+        snapshots (bit-exact RNG round-trip).  Attach before submitting so
+        truth-noise streams see every job."""
+        if (narrator.needs_cluster_events()
+                and not self.engine.policy.handles_cluster_events):
+            raise ValueError(
+                f"policy {self.policy_name!r} does not handle cluster "
+                f"events; only truth-noise narrator streams work under "
+                f"batch baselines")
+        self._narrator = narrator
+        self._exhausted = False         # a new event source re-arms the loop
+
+    @property
+    def narrator(self) -> Optional[Narrator]:
+        return self._narrator
+
+    # -- projected state (pending injections applied) -----------------------
+    def _projected_alive(self, t: Optional[float] = None) -> np.ndarray:
+        """Node liveness once the pending event suffix up to ``t`` (engine
+        clock order; ``None`` = all pending) has been applied."""
+        alive = self.engine.state.alive.copy()
+        for ev in self._cev[self._ci:]:
+            if t is not None and ev.time > t + _EPS:
+                break
+            if ev.kind == "fail":
+                alive[list(ev.nodes)] = False
+            elif ev.kind == "join":
+                alive[list(ev.nodes)] = True
+        return alive
+
+    def _pending_cancels(self, t: Optional[float] = None) -> set:
+        """Job ids with a cancellation pending in the event suffix."""
+        out: set = set()
+        for ev in self._cev[self._ci:]:
+            if t is not None and ev.time > t + _EPS:
+                break
+            if ev.kind == "cancel":
+                out.update(int(j) for j in ev.jids)
+        return out
 
     # -- stepping -----------------------------------------------------------
     def _loop(self, until: float = math.inf,
@@ -557,6 +650,24 @@ class SimSession:
                 t_tick = (self._next_tick
                           if (periodic and (live or heap)) else math.inf)
                 t_next = min(t_arr, t_done, t_tick, t_cev)
+                # narrator streams fire lazily, never past the next engine
+                # event or the step bound (a fire injects into the pending
+                # suffix, so the injected timestamps process right below);
+                # gated on (live or heap) like the tick so a drained
+                # session still exhausts
+                nar = self._narrator
+                if nar is not None and (live or heap):
+                    while True:
+                        t_nar = nar.peek(self)
+                        if not (t_nar <= t_next and t_nar <= until):
+                            break
+                        nar.fire(self)
+                        t_cev = (cev[self._ci].time
+                                 if self._ci < len(cev) else math.inf)
+                        t_next = min(t_next, t_cev)
+                    if math.isinf(t_next) and math.isfinite(nar.peek(self)):
+                        break           # chaos pending beyond the step
+                                        # bound — a peek, not an event
                 if t_next > until and not math.isinf(t_next):
                     break               # boundary peek — not an engine event
                 e._events += 1
@@ -599,6 +710,8 @@ class SimSession:
                 # 3) arrivals
                 while heap and heap[0][0] <= st.now + _EPS:
                     _, _, i = heapq.heappop(heap)
+                    if int(st.status[i]) != S_NOT_ARRIVED:
+                        continue        # cancelled before it ever arrived
                     st.status[i] = S_PENDING
                     pol.on_submit(st.views[i])
                     acted = True
@@ -671,6 +784,7 @@ class SimSession:
             "params": dataclasses.asdict(e.params),
             "policy": e.policy_ref,
             "jobs": cols,
+            "proc_truth": st.proc_truth.tolist(),
             "vt": st.vt.tolist(),
             "yld": st.yld.tolist(),
             "penalty_until": st.penalty_until.tolist(),
@@ -691,7 +805,8 @@ class SimSession:
             "n_mig": e.n_mig,
             "events": e._events,
             "arrivals": [list(a) for a in self._arrivals],
-            "cluster_events": [[ev.time, ev.kind, list(ev.nodes)]
+            "cluster_events": [[ev.time, ev.kind, list(ev.nodes),
+                                list(ev.jids), ev.value]
                                for ev in self._cev[self._ci:]],
             "next_tick": self._next_tick,
             "tick_armed": self._tick_armed,
@@ -701,6 +816,9 @@ class SimSession:
             "wall_s": self._wall,
             "policy_state": _snapshot_policy_state(e.policy),
         }
+        if self._narrator is not None:
+            # optional key: narrator-free snapshots keep the legacy shape
+            payload["narrator"] = self._narrator.state()
         return SessionState(payload)
 
     @classmethod
@@ -742,13 +860,20 @@ class SimSession:
         e.alloc_backend = None
         from ..core.state import EngineState
         e.state = EngineState(specs, params.n_nodes)
-        e.cluster_events = [ClusterEvent(float(t), k, tuple(int(n) for n in ns))
-                            for t, k, ns in pl["cluster_events"]]
+        e.cluster_events = [
+            ClusterEvent(
+                float(row[0]), row[1], tuple(int(n) for n in row[2]),
+                jids=tuple(int(j) for j in row[3]) if len(row) > 3 else (),
+                value=(float(row[4]) if len(row) > 4 and row[4] is not None
+                       else None))
+            for row in pl["cluster_events"]]
         e.bytes_moved_gb = float(pl["bytes_moved_gb"])
         e.n_pmtn = int(pl["n_pmtn"])
         e.n_mig = int(pl["n_mig"])
         e._events = int(pl["events"])
         st = e.state
+        if "proc_truth" in pl:          # pre-truth-split snapshots lack it
+            st.proc_truth[:] = pl["proc_truth"]
         st.vt[:] = pl["vt"]
         st.yld[:] = pl["yld"]
         st.penalty_until[:] = pl["penalty_until"]
@@ -783,6 +908,14 @@ class SimSession:
         ses._exhausted = bool(pl["exhausted"])
         ses._hit_cap = bool(pl["hit_cap"])
         ses._wall = float(pl["wall_s"])
+        nar_pl = pl.get("narrator")
+        ses._narrator = Narrator.from_state(nar_pl) if nar_pl else None
+        if (ses._narrator is not None and switched
+                and ses._narrator.needs_cluster_events()
+                and not e.policy.handles_cluster_events):
+            # fork onto a batch baseline: the cluster script is dropped, so
+            # the chaos streams that feed it go too (noise-only survives)
+            ses._narrator = None
         ses.scratch = {}
         if switched:
             if not e.policy.handles_cluster_events:

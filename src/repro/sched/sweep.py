@@ -92,6 +92,17 @@ class SweepResult:
     def cells_per_sec(self) -> float:
         return self.n_cells / max(self.wall_s, 1e-9)
 
+    @property
+    def quarantined(self) -> List[Dict[str, Any]]:
+        """Cells that exhausted their retries under a supervised run: the
+        sweep completed without them, and each carries ``error``/``attempts``
+        instead of metrics."""
+        return [r for r in self.records if r.get("quarantined")]
+
+    @property
+    def n_quarantined(self) -> int:
+        return len(self.quarantined)
+
     def filter(self, **kv) -> List[Dict[str, Any]]:
         return [r for r in self.records if record_matches(r, kv)]
 
@@ -103,6 +114,8 @@ class SweepResult:
         """Per-group mean/max aggregates of the chosen metric keys."""
         groups: Dict[str, List[Dict[str, Any]]] = {}
         for r in self.records:
+            if r.get("quarantined"):
+                continue            # no metrics to aggregate
             groups.setdefault(str(r[by]), []).append(r)
         out = {}
         for g, rs in sorted(groups.items()):
@@ -117,6 +130,7 @@ class SweepResult:
         return {
             "schema": "repro.sweep/v1",
             "n_cells": self.n_cells,
+            "n_quarantined": self.n_quarantined,
             "wall_s": self.wall_s,
             "cells_per_sec": self.cells_per_sec,
             "n_workers": self.n_workers,
@@ -227,6 +241,157 @@ def _run_cell(task: Tuple[int, Cell, bool],
 
 
 # --------------------------------------------------------------------------- #
+# supervised execution: timeouts, bounded retries, quarantine                  #
+# --------------------------------------------------------------------------- #
+def _quarantine_record(idx: int, cell: Cell, error: str,
+                       attempts: int) -> Dict[str, Any]:
+    """A record standing in for a cell that could not be simulated: same
+    identity fields as a real record, ``quarantined=True``, no metrics."""
+    return {
+        "cell": idx,
+        "workload": cell.workload.name,
+        **cell.workload.to_dict(),
+        "policy": cell.policy,
+        "scenario": cell.scenario,
+        "quarantined": True,
+        "error": error,
+        "attempts": attempts,
+    }
+
+
+def _supervised_worker(conn) -> None:
+    """Worker loop for the supervised driver: receive one ``(idx, cell,
+    compute_bound)`` task at a time, answer with ``("ok", record)`` or
+    ``("err", message)``.  Exits when the driver sends ``None`` or drops
+    the pipe."""
+    try:
+        while True:
+            task = conn.recv()
+            if task is None:
+                break
+            try:
+                rec = _run_cell(task)
+            except BaseException as exc:  # noqa: BLE001 — reported; driver decides
+                conn.send(("err", f"{type(exc).__name__}: {exc}"))
+            else:
+                conn.send(("ok", rec))
+    except (EOFError, OSError, KeyboardInterrupt):
+        pass
+    finally:
+        try:
+            conn.close()
+        except OSError:
+            pass
+
+
+class _Worker:
+    """One supervised worker process plus its duplex pipe and current task."""
+
+    __slots__ = ("proc", "conn", "task", "t0")
+
+    def __init__(self, ctx):
+        parent, child = ctx.Pipe(duplex=True)
+        self.proc = ctx.Process(target=_supervised_worker, args=(child,),
+                                daemon=True)
+        self.proc.start()
+        child.close()
+        self.conn = parent
+        self.task: Optional[Tuple] = None
+        self.t0 = 0.0
+
+    def kill(self) -> None:
+        try:
+            self.conn.close()
+        except OSError:
+            pass
+        if self.proc.is_alive():
+            self.proc.terminate()
+        self.proc.join(timeout=2.0)
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=2.0)
+
+    def shutdown(self) -> None:
+        try:
+            self.conn.send(None)
+        except (OSError, BrokenPipeError):
+            pass
+        self.kill()
+
+
+def _run_supervised(
+    tasks: Sequence[Tuple[int, Cell, bool]],
+    n_workers: int,
+    timeout_s: Optional[float],
+    retries: int,
+) -> List[Dict[str, Any]]:
+    """Supervising driver: every cell gets a wall-clock budget and a bounded
+    number of retries on fresh (reseeded) worker processes; cells that
+    exhaust their budget become quarantine records instead of taking the
+    sweep down.  A hung cell costs its own timeout, never the grid's."""
+    ctx = _pool_context()
+    n_workers = max(1, min(n_workers, len(tasks)))
+    pending: List[Tuple] = list(reversed(tasks))    # pop() == grid order
+    attempts: Dict[int, int] = {}
+    records: Dict[int, Dict[str, Any]] = {}
+
+    def retire(w: _Worker, error: str) -> None:
+        idx, cell, _ = w.task
+        tries = attempts[idx] = attempts.get(idx, 0) + 1
+        if tries > retries:
+            records[idx] = _quarantine_record(idx, cell, error, tries)
+        else:
+            pending.append(w.task)      # retried on a fresh worker
+        w.task = None
+
+    workers = [_Worker(ctx) for _ in range(n_workers)]
+    try:
+        while len(records) < len(tasks):
+            for w in workers:
+                if w.task is None and pending:
+                    w.task = pending.pop()
+                    w.t0 = time.perf_counter()
+                    w.conn.send(w.task)
+            busy = [w for w in workers if w.task is not None]
+            if not busy:
+                break
+            wait_s = 0.25
+            if timeout_s is not None:
+                now = time.perf_counter()
+                slack = min(timeout_s - (now - w.t0) for w in busy)
+                wait_s = min(wait_s, max(slack, 0.01))
+            ready = set(mp.connection.wait([w.conn for w in busy],
+                                           timeout=wait_s))
+            now = time.perf_counter()
+            for i, w in enumerate(workers):
+                if w.task is None:
+                    continue
+                if w.conn in ready:
+                    try:
+                        kind, payload = w.conn.recv()
+                    except (EOFError, OSError):
+                        # the process died mid-cell (segfault, OOM kill)
+                        kind, payload = "err", "worker process died"
+                    if kind == "ok":
+                        records[w.task[0]] = payload
+                        w.task = None
+                        continue
+                    retire(w, payload)
+                elif timeout_s is not None and now - w.t0 > timeout_s:
+                    retire(w, f"timeout after {timeout_s:g}s")
+                else:
+                    continue
+                # failed attempt: the old process may be wedged or tainted —
+                # replace it so the retry runs on a reseeded worker
+                w.kill()
+                workers[i] = _Worker(ctx)
+    finally:
+        for w in workers:
+            w.shutdown()
+    return [records[i] for i in sorted(records)]
+
+
+# --------------------------------------------------------------------------- #
 # what-if branching: policy comparison from an identical live state            #
 # --------------------------------------------------------------------------- #
 def run_branches(
@@ -324,6 +489,7 @@ def run_batched(
     compute_bound: bool = False,
     json_path: Optional[str] = None,
     matvec: str = "auto",
+    quarantine: bool = False,
 ) -> SweepResult:
     """Evaluate every cell through the batched JAX allocation backend.
 
@@ -341,6 +507,12 @@ def run_batched(
     CPU default), ``"pallas"`` (the Pallas kernel, ``interpret=True``
     off-TPU), or ``"auto"`` (pallas only under the process-wide pallas
     kernel backend, at kernel-worthy shapes).
+
+    A lane that raises re-raises on the driver thread by default (the other
+    lanes are still released); with ``quarantine=True`` the failed lane
+    becomes a quarantine record instead and the sweep completes.  Lanes run
+    as threads, so per-cell wall-clock timeouts are not enforceable here —
+    use the process-pool path for that.
     """
     from ..core import alloc_jax
 
@@ -371,11 +543,18 @@ def run_batched(
     for t in threads:
         t.join()
     first = next((e for e in errors if e is not None), None)
-    if first is not None:
+    if first is not None and not quarantine:
         raise first
-    for rec in records:
-        rec["backend"] = "jax"
-    res = SweepResult(records=list(records),
+    out: List[Dict[str, Any]] = []
+    for i, (rec, err) in enumerate(zip(records, errors)):
+        if rec is None:
+            msg = (f"{type(err).__name__}: {err}" if err is not None
+                   else "lane produced no record")
+            out.append(_quarantine_record(i, cells[i], msg, attempts=1))
+        else:
+            rec["backend"] = "jax"
+            out.append(rec)
+    res = SweepResult(records=out,
                       wall_s=time.perf_counter() - t0, n_workers=1)
     if json_path is not None:
         res.save_json(json_path)
@@ -389,6 +568,8 @@ def run_grid(
     compute_bound: bool = False,
     json_path: Optional[str] = None,
     backend: Optional[str] = None,
+    timeout_s: Optional[float] = None,
+    retries: int = 0,
 ) -> SweepResult:
     """Evaluate every cell, fanning across ``n_workers`` processes.
 
@@ -405,19 +586,35 @@ def run_grid(
     lockstep, bit-identical records; ``n_workers``/``chunksize`` don't
     apply there.  ``None``/``"numpy"`` is the process-pool path.
 
+    ``timeout_s``/``retries`` turn the driver into a supervisor: each cell
+    gets a wall-clock budget (``timeout_s``, ``None`` = unlimited) and up to
+    ``retries`` re-runs on fresh worker processes; cells that exhaust their
+    budget come back as quarantine records (``quarantined=True``, with
+    ``error`` and ``attempts``) and the rest of the sweep completes.  With
+    both left at their defaults the legacy fast path (serial or chunked
+    ``Pool``) runs unchanged; supervision always uses worker processes,
+    even at ``n_workers=1``, so a hung cell can be terminated.
+
     Note: when jax is loaded the pool uses the forkserver start method (see
     ``_pool_context``), which re-imports ``__main__`` — scripts calling this
     with ``n_workers > 1`` need the usual ``if __name__ == "__main__"`` guard.
     """
+    supervised = timeout_s is not None or retries > 0
     if backend not in (None, "numpy"):
         if backend not in ("jax", "pallas"):
             raise ValueError(f"unknown sweep backend {backend!r}")
+        # lanes are threads: no per-cell timeout there, but supervision
+        # intent still means "complete the sweep" — quarantine failed lanes
         return run_batched(cells, compute_bound=compute_bound,
                            json_path=json_path,
-                           matvec="jnp" if backend == "jax" else "pallas")
+                           matvec="jnp" if backend == "jax" else "pallas",
+                           quarantine=supervised)
     tasks = [(i, c, compute_bound) for i, c in enumerate(cells)]
     t0 = time.perf_counter()
-    if n_workers <= 1 or len(tasks) <= 1:
+    if supervised:
+        records = _run_supervised(tasks, n_workers, timeout_s, retries)
+        n_workers = max(1, min(n_workers, len(tasks))) if tasks else 1
+    elif n_workers <= 1 or len(tasks) <= 1:
         records = [_run_cell(t) for t in tasks]
         n_workers = 1
     else:
@@ -502,24 +699,45 @@ class RecordCache:
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._records: Dict[Tuple, Dict[str, Any]] = {}
-        if path is not None and os.path.exists(path):
+        if path is None or not os.path.exists(path):
+            return
+        try:
             with open(path) as f:
                 payload = json.load(f)
-            schema = payload.get("schema") if isinstance(payload, dict) else None
-            if schema != CACHE_SCHEMA:
-                raise ValueError(
-                    f"{path} is not a {CACHE_SCHEMA} record cache (schema: "
-                    f"{schema!r}); refusing to overwrite it — pass a fresh "
-                    f"path (sweep artifacts from --out/json_path are a "
-                    f"different format)")
-            required = {"sim_params", "params", "trace_fingerprint",
-                        "n_events", "sim_wall_s", "final_time"}
-            for rec in payload["records"]:
-                if not required <= set(rec):
-                    continue        # record from an older schema (pre-Trace-
-                    # IR identity fields or pre-session observability
-                    # fields) — re-simulate it rather than mixing schemas
+        except (json.JSONDecodeError, UnicodeDecodeError, OSError) as exc:
+            # a truncated or corrupted cache (killed mid-write on a
+            # non-atomic filesystem, disk hiccup) is a cache *miss*, not a
+            # crash: warn once, start empty, and let the next checkpoint
+            # rewrite the file atomically
+            print(f"warning: record cache {path} is unreadable "
+                  f"({type(exc).__name__}: {exc}); starting empty and "
+                  f"re-simulating", file=sys.stderr)
+            return
+        schema = payload.get("schema") if isinstance(payload, dict) else None
+        if schema != CACHE_SCHEMA:
+            # valid JSON that is *not* ours is a different story: refusing
+            # protects the foreign file from being overwritten by save()
+            raise ValueError(
+                f"{path} is not a {CACHE_SCHEMA} record cache (schema: "
+                f"{schema!r}); refusing to overwrite it — pass a fresh "
+                f"path (sweep artifacts from --out/json_path are a "
+                f"different format)")
+        required = {"sim_params", "params", "trace_fingerprint",
+                    "n_events", "sim_wall_s", "final_time"}
+        dropped = 0
+        for rec in payload.get("records", []):
+            if not isinstance(rec, dict) or not required <= set(rec):
+                continue        # record from an older schema (pre-Trace-
+                # IR identity fields or pre-session observability
+                # fields) — re-simulate it rather than mixing schemas
+            try:
                 self._records[_record_key(rec)] = rec
+            except (KeyError, TypeError, ValueError, AttributeError):
+                dropped += 1    # individually malformed record -> miss
+        if dropped:
+            print(f"warning: record cache {path}: dropped {dropped} "
+                  f"malformed record(s); they will be re-simulated",
+                  file=sys.stderr)
 
     def __len__(self) -> int:
         return len(self._records)
@@ -547,11 +765,19 @@ class RecordCache:
         n_workers: int = 1,
         chunksize: Optional[int] = None,
         compute_bound: bool = True,
+        timeout_s: Optional[float] = None,
+        retries: int = 0,
     ) -> List[Dict[str, Any]]:
         """Records for the full cross product, simulating only cache misses.
 
         A cached record without a Theorem-1 ``bound`` counts as a miss when
         ``compute_bound`` is requested (it is re-simulated with the bound).
+
+        ``timeout_s``/``retries`` run the misses under the supervised driver
+        (see :func:`run_grid`): cells exhausting their budget come back as
+        quarantine records.  Quarantined records are returned but **never
+        cached** — a later sweep over the same grid retries them, so a
+        transient failure heals on resume instead of poisoning the cache.
         """
         base = params or SimParams()
         pkey_dict = _params_key(base)
@@ -597,14 +823,19 @@ class RecordCache:
         # with a disk path, checkpoint the cache every few miss chunks so an
         # interrupted sweep resumes mid-batch, not only between sweep() calls
         step = len(missing) if self.path is None else max(4 * n_workers, 8)
+        quarantined: Dict[Tuple, Dict[str, Any]] = {}
         for lo in range(0, len(missing), max(step, 1)):
             batch = missing[lo:lo + step]
             batch_keys = missing_keys[lo:lo + step]
             cells = [Cell(w, p, sc, params=replace(base, period=per))
                      for (w, p, per, sc) in batch]
             res = run_grid(cells, n_workers=n_workers, chunksize=chunksize,
-                           compute_bound=compute_bound)
+                           compute_bound=compute_bound,
+                           timeout_s=timeout_s, retries=retries)
             for k, rec in zip(batch_keys, res.records):
+                if rec.get("quarantined"):
+                    quarantined[k] = rec   # returned, never persisted —
+                    continue               # the next sweep retries the cell
                 rec["sim_params"] = dict(pkey_dict)   # disk-key round-trip
                 self._records[k] = rec
             self.save()
@@ -615,7 +846,11 @@ class RecordCache:
         # artifacts across resumed sweeps)
         out: List[Dict[str, Any]] = []
         for i, t in enumerate(want):
-            rec = dict(self._records[key_of(*t)])
+            k = key_of(*t)
+            src = self._records.get(k)
+            if src is None:
+                src = quarantined[k]
+            rec = dict(src)
             rec["policy"] = t[1]
             rec["scenario"] = t[3]
             rec["cell"] = i

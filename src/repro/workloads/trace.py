@@ -53,10 +53,18 @@ COLUMNS: Tuple[Tuple[str, type], ...] = (
 
 
 class Trace:
-    """Frozen columnar workload: parallel arrays, one row per job."""
+    """Frozen columnar workload: parallel arrays, one row per job.
+
+    ``proc_truth`` is an *optional* seventh column: the processing time the
+    engine actually executes when it differs from the non-clairvoyant
+    ``proc_time`` estimate the policies observe (scenario ``ptime_noise``).
+    When absent (the default) the trace is clairvoyant and its fingerprint
+    is byte-identical to the pre-truth-column format, so existing cache
+    keys survive.
+    """
 
     __slots__ = ("jid", "release", "proc_time", "n_tasks", "cpu_need",
-                 "mem_req", "_fingerprint")
+                 "mem_req", "proc_truth", "_fingerprint")
 
     def __init__(
         self,
@@ -66,6 +74,7 @@ class Trace:
         n_tasks: np.ndarray,
         cpu_need: np.ndarray,
         mem_req: np.ndarray,
+        proc_truth: Optional[np.ndarray] = None,
         validate: bool = True,
     ):
         cols = dict(jid=jid, release=release, proc_time=proc_time,
@@ -81,6 +90,18 @@ class Trace:
                 arr = arr.copy()
             arr.flags.writeable = False
             object.__setattr__(self, name, arr)
+        if proc_truth is not None:
+            arr = np.ascontiguousarray(proc_truth, dtype=np.float64)
+            if arr.ndim != 1 or len(arr) != n:
+                raise ValueError(
+                    f"column 'proc_truth' must be 1-D of length {n}, "
+                    f"got shape {arr.shape}")
+            if arr is proc_truth and arr.flags.writeable:
+                arr = arr.copy()
+            arr.flags.writeable = False
+            object.__setattr__(self, "proc_truth", arr)
+        else:
+            object.__setattr__(self, "proc_truth", None)
         object.__setattr__(self, "_fingerprint", None)
         if validate:
             self._validate()
@@ -105,6 +126,9 @@ class Trace:
         bad(self.n_tasks < 1, "n_tasks must be >= 1")
         bad(self.proc_time <= 0.0, "proc_time must be > 0")
         bad(~np.isfinite(self.release), "release must be finite")
+        if self.proc_truth is not None:
+            bad(~(self.proc_truth > 0.0) | ~np.isfinite(self.proc_truth),
+                "proc_truth must be finite and > 0")
 
     # ------------------------------------------------------------------ #
     # basics                                                              #
@@ -135,6 +159,13 @@ class Trace:
                 h.update(name.encode())
                 h.update(col.astype(col.dtype.newbyteorder("<"),
                                     copy=False).tobytes())
+            if self.proc_truth is not None:
+                # appended only when present: clairvoyant traces keep their
+                # pre-truth-column fingerprints (cache keys survive)
+                h.update(b"proc_truth")
+                h.update(self.proc_truth.astype(
+                    self.proc_truth.dtype.newbyteorder("<"),
+                    copy=False).tobytes())
             fp = h.hexdigest()
             object.__setattr__(self, "_fingerprint", fp)
         return fp
@@ -181,8 +212,9 @@ class Trace:
     # transforms (always produce a new Trace)                             #
     # ------------------------------------------------------------------ #
     def replace(self, **columns: np.ndarray) -> "Trace":
-        """New trace with the given columns replaced (others shared)."""
-        known = {name for name, _ in COLUMNS}
+        """New trace with the given columns replaced (others shared).
+        ``proc_truth=None`` drops the truth column."""
+        known = {name for name, _ in COLUMNS} | {"proc_truth"}
         unknown = set(columns) - known
         if unknown:
             raise ValueError(f"unknown Trace columns: {sorted(unknown)}")
@@ -193,8 +225,9 @@ class Trace:
     def select(self, index: np.ndarray) -> "Trace":
         """Row subset / reorder by boolean mask or integer index array."""
         index = np.asarray(index)
+        truth = None if self.proc_truth is None else self.proc_truth[index]
         return Trace(*(getattr(self, name)[index] for name, _ in COLUMNS),
-                     validate=False)
+                     proc_truth=truth, validate=False)
 
     def sorted_by_release(self) -> "Trace":
         """Rows ordered by (release, jid) — the engine's arrival order."""
@@ -207,9 +240,10 @@ class Trace:
     # serialization                                                       #
     # ------------------------------------------------------------------ #
     def save_npz(self, path: str) -> str:
-        np.savez_compressed(
-            path, schema=np.array(_SCHEMA),
-            **{name: getattr(self, name) for name, _ in COLUMNS})
+        cols = {name: getattr(self, name) for name, _ in COLUMNS}
+        if self.proc_truth is not None:
+            cols["proc_truth"] = self.proc_truth
+        np.savez_compressed(path, schema=np.array(_SCHEMA), **cols)
         return path
 
     @classmethod
@@ -219,16 +253,21 @@ class Trace:
             if schema != _SCHEMA:
                 raise ValueError(f"{path} is not a {_SCHEMA} trace "
                                  f"(schema: {schema!r})")
-            return cls(**{name: z[name] for name, _ in COLUMNS})
+            return cls(**{name: z[name] for name, _ in COLUMNS},
+                       proc_truth=z["proc_truth"] if "proc_truth" in z
+                       else None)
 
     def to_json_dict(self) -> Dict[str, object]:
         """Exact text form (floats survive via repr round-trip)."""
+        columns = {name: getattr(self, name).tolist()
+                   for name, _ in COLUMNS}
+        if self.proc_truth is not None:
+            columns["proc_truth"] = self.proc_truth.tolist()
         return {
             "schema": _SCHEMA,
             "n_jobs": len(self),
             "fingerprint": self.fingerprint,
-            "columns": {name: getattr(self, name).tolist()
-                        for name, _ in COLUMNS},
+            "columns": columns,
         }
 
     @classmethod
@@ -237,8 +276,11 @@ class Trace:
             raise ValueError(f"not a {_SCHEMA} payload "
                              f"(schema: {payload.get('schema')!r})")
         cols = payload["columns"]
+        truth = cols.get("proc_truth")
         trace = cls(**{name: np.asarray(cols[name], dtype=dtype)
-                       for name, dtype in COLUMNS})
+                       for name, dtype in COLUMNS},
+                    proc_truth=None if truth is None
+                    else np.asarray(truth, dtype=np.float64))
         want = payload.get("fingerprint")
         if want is not None and want != trace.fingerprint:
             raise ValueError("trace fingerprint mismatch after JSON "

@@ -1,0 +1,405 @@
+"""Robustness suite: chaos narrator, estimate-vs-truth, cancel/resize,
+inject contradiction guards, supervised sweeps, cache corruption.
+
+* narrator determinism: same seed → bit-identical SimResult, including
+  across a mid-run snapshot/restore (same and *fresh* process) with chaos
+  streams mid-flight;
+* snapshot taken inside an open failure window (node down, repair pending)
+  replays the repair bit-identically;
+* estimate vs truth: policies schedule on ``proc_time``, the engine
+  executes ``proc_truth`` — demonstrated directly on a noisy Trace and on a
+  Table-1 policy grid through the ``ptime_noise`` scenario;
+* cancel/resize injections keep pool and integral accounting consistent;
+* ``SimSession.inject`` rejects contradictory events with errors naming
+  the node/jid and time;
+* supervised ``run_grid``: a grid with a raising cell and a timing-out
+  cell still completes, retries on fresh workers, quarantines the losers;
+* ``RecordCache``: a truncated on-disk cache is a warning + miss, never a
+  crash, and quarantined records are never cached.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from conftest import result_dict as _result_dict
+from repro.core.state import S_CANCELLED, S_COMPLETED
+from repro.sched.cluster import ClusterEvent
+from repro.sched.engine import Engine, SimParams
+from repro.sched.narrator import (Narrator, list_streams, narrator_docs,
+                                  parse_narrator)
+from repro.sched.session import SimSession, open_session
+from repro.sched.sweep import Cell, RecordCache, grid, run_grid
+from repro.workloads.registry import WorkloadSpec, make_trace, make_trace_ir
+
+W = WorkloadSpec("lublin", n_jobs=60, n_nodes=16, seed=0)
+CHAOS = "breakdown(mtbf=6e3,repair=8e2)+cancel(rate=1e-4)+noise(sigma=0.3)"
+
+
+def _chaos_session(policy="GreedyP */OPT=MIN", spec=CHAOS, seed=7,
+                   workload=W):
+    ses = open_session(workload.n_nodes, policy)
+    ses.attach_narrator(parse_narrator(spec, seed=seed))
+    ses.submit(make_trace(workload))
+    return ses
+
+
+# --------------------------------------------------------------------------- #
+# narrator: grammar, registry, determinism                                     #
+# --------------------------------------------------------------------------- #
+def test_narrator_grammar_and_registry():
+    for kind in ("breakdown", "cancel", "malleable", "noise"):
+        assert kind in list_streams()
+        assert narrator_docs()[kind]
+    nar = parse_narrator("breakdown(mtbf=2e4,repair=2e3)+noise", seed=3)
+    assert len(nar.streams) == 2 and nar.needs_cluster_events()
+    assert not parse_narrator("noise", seed=0).needs_cluster_events()
+    with pytest.raises(ValueError, match="unknown narrator stream"):
+        parse_narrator("gremlins")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_narrator("breakdown(2e4)")
+    with pytest.raises(ValueError):
+        parse_narrator("cancel(rate=-1)")
+
+
+def test_narrator_same_seed_bit_identical():
+    a = _chaos_session().run()
+    b = _chaos_session().run()
+    assert _result_dict(a) == _result_dict(b)
+    # the chaos actually happened: withdrawn jobs and noisy truth
+    assert a.n_cancelled >= 1
+    assert len(a.completions) == W.n_jobs - a.n_cancelled
+
+
+def test_narrator_bit_identity_across_step_boundaries():
+    """Where step_until boundaries fall must not change what the narrator
+    does (lazy, boundary-safe firing)."""
+    ref = _chaos_session().run()
+    ses = _chaos_session()
+    for t in np.linspace(0.0, 2.0e5, 23):
+        ses.step_until(float(t))
+    r = ses.run()
+    assert _result_dict(r) == _result_dict(ref)
+
+
+def test_narrator_snapshot_restore_mid_chaos_bit_identical(tmp_path):
+    ref = _chaos_session().run()
+    ses = _chaos_session()
+    ses.step_until(2.0e4)
+    path = str(tmp_path / "chaos-snap.json")
+    ses.snapshot().save(path)
+    restored = SimSession.restore(path)
+    assert restored.narrator is not None
+    r = restored.run()
+    assert _result_dict(r) == _result_dict(ref)
+
+
+def test_narrator_snapshot_restore_fresh_process(tmp_path):
+    """The acceptance criterion: the same narrator seed is bit-identical
+    across a mid-run snapshot restored in a *fresh* interpreter."""
+    ref = _chaos_session().run()
+    ses = _chaos_session()
+    ses.step_until(2.0e4)
+    path = str(tmp_path / "chaos-snap.json")
+    ses.snapshot().save(path)
+    prog = (
+        "import dataclasses, json, sys\n"
+        "from repro.sched.session import SimSession\n"
+        "r = SimSession.restore(sys.argv[1]).run()\n"
+        "d = dataclasses.asdict(r)\n"
+        "d.pop('sim_wall_s')\n"
+        "print(json.dumps(d))\n"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", prog, path],
+                         capture_output=True, text=True, check=True, env=env)
+    fresh = json.loads(out.stdout)
+    assert fresh == json.loads(json.dumps(_result_dict(ref)))
+
+
+def test_snapshot_inside_open_failure_window_replays_repair():
+    """Snapshot while a node is down with its repair still pending: the
+    restored session replays the repair (and everything after) bit-
+    identically, and the cluster heals."""
+    spec = "breakdown(mtbf=2e3,repair=3e3)"
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.attach_narrator(parse_narrator(spec, seed=11))
+    ses.submit(make_trace(W))
+    while ses.observe()["alive_nodes"] == 16 and not ses.exhausted:
+        ses.step(5)
+    assert ses.observe()["alive_nodes"] < 16   # inside the failure window
+    snap = ses.snapshot()
+    ref = ses.run()
+    restored = SimSession.restore(snap)
+    assert restored.observe()["alive_nodes"] < 16
+    r = restored.run()
+    assert _result_dict(r) == _result_dict(ref)
+    assert restored.observe()["alive_nodes"] == 16   # repair replayed
+
+
+# --------------------------------------------------------------------------- #
+# estimate vs truth                                                            #
+# --------------------------------------------------------------------------- #
+def test_estimate_vs_truth_direct_trace():
+    """The engine executes ``proc_truth``; policies observe ``proc_time``.
+    Doubling the truth of every job must stretch the schedule while the
+    estimate (and therefore the policy's view) stays fixed."""
+    tr = make_trace_ir(W)
+    noisy = tr.replace(proc_truth=tr.proc_time * 2.0)
+    params = SimParams(n_nodes=16)
+    clean = Engine(tr, "GreedyP */OPT=MIN", params).run()
+    slow = Engine(noisy, "GreedyP */OPT=MIN", params).run()
+    assert slow.makespan > clean.makespan
+    assert all(slow.completions[j] >= clean.completions[j]
+               for j in clean.completions)
+    # truth round-trips through the frozen IR and its fingerprint
+    assert noisy.fingerprint != tr.fingerprint
+    assert tr.replace(proc_truth=None).fingerprint == tr.fingerprint
+
+
+def test_estimate_vs_truth_table1_grid():
+    """Clairvoyant vs noisy stretch on a Table-1 policy grid: the
+    ``ptime_noise`` scenario perturbs only the truth column, every cell
+    completes, and the noise moves the measured stretch."""
+    cells = grid([W], ["GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"],
+                 ["baseline", "ptime_noise"])
+    res = run_grid(cells, n_workers=1)
+    assert res.n_cells == 4
+    by = {(r["policy"], r["scenario"]): r for r in res.records}
+    for pol in ("GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"):
+        clean = by[(pol, "baseline")]
+        noisy = by[(pol, "ptime_noise")]
+        assert not clean["hit_max_events"] and not noisy["hit_max_events"]
+        assert noisy["mean_stretch"] != clean["mean_stretch"]
+        # same jobs, different executed times -> different fingerprints
+        assert noisy["trace_fingerprint"] == clean["trace_fingerprint"]
+
+
+def test_noise_stream_rewrites_truth_only():
+    ses = _chaos_session(spec="noise(sigma=0.4)")
+    st = ses.engine.state
+    assert int((st.proc_truth != st.proc_time).sum()) == W.n_jobs
+    assert ses.observe()["n_noisy"] == W.n_jobs
+    r = ses.run()
+    assert len(r.completions) == W.n_jobs
+    # noise works under batch policies too (no cluster events involved)
+    bses = _chaos_session(policy="EASY", spec="noise(sigma=0.4)")
+    assert len(bses.run().completions) == W.n_jobs
+    bses2 = open_session(16, "EASY")
+    with pytest.raises(ValueError, match="batch"):
+        bses2.attach_narrator(parse_narrator("breakdown", seed=0))
+
+
+# --------------------------------------------------------------------------- #
+# cancel / resize injections                                                   #
+# --------------------------------------------------------------------------- #
+def test_cancel_injection_accounting():
+    specs = make_trace(W)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[5].release + 1.0)
+    victim = next(i for i in ses.engine.state.in_system_indices())
+    jid = ses.engine.state.specs[victim].jid
+    ses.inject(ClusterEvent(ses.now + 10.0, "cancel", jids=(jid,)))
+    r = ses.run()
+    st = ses.engine.state
+    assert int(st.status[victim]) == S_CANCELLED
+    assert r.n_cancelled == 1
+    assert len(r.completions) == W.n_jobs - 1
+    assert jid not in r.completions
+    # the pool healed: nothing left running, no deadlock raise above
+    assert st.running_indices().size == 0
+
+
+def test_resize_injection_changes_width():
+    specs = make_trace(W)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[5].release + 1.0)
+    victim = next(i for i in ses.engine.state.in_system_indices())
+    jid = ses.engine.state.specs[victim].jid
+    old_n = ses.engine.state.specs[victim].n_tasks
+    new_n = 16 if old_n < 16 else 1
+    ses.inject(ClusterEvent(ses.now + 10.0, "resize", jids=(jid,),
+                            value=float(new_n)))
+    r = ses.run()
+    assert ses.engine.state.specs[victim].n_tasks == new_n
+    assert len(r.completions) == W.n_jobs       # resize never loses the job
+
+
+def test_allocation_survives_node_death_under_running_jobs():
+    """Nodes dying under running jobs re-water-fill onto survivors instead
+    of raising; the cell still drains completely."""
+    specs = make_trace(W)
+    ses = open_session(16, "GreedyPM */per/OPT=MIN/MINVT=600")
+    ses.submit(specs)
+    ses.step_until(specs[10].release + 1.0)
+    assert ses.observe()["n_running"] > 0
+    t = ses.now
+    ses.inject(ClusterEvent(t + 5.0, "fail", (0, 1, 2, 3, 4, 5)))
+    ses.inject(ClusterEvent(t + 4000.0, "join", (0, 1, 2, 3, 4, 5)))
+    r = ses.run()
+    assert len(r.completions) == W.n_jobs
+
+
+# --------------------------------------------------------------------------- #
+# inject contradiction guards                                                  #
+# --------------------------------------------------------------------------- #
+def test_inject_rejects_contradictory_node_events():
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(make_trace(W))
+    ses.step(2)
+    t = ses.now + 10.0
+    ses.inject(ClusterEvent(t, "fail", (3,)))
+    with pytest.raises(ValueError, match=r"node 3 .*already dead"):
+        ses.inject(ClusterEvent(t + 1.0, "fail", (3,)))
+    with pytest.raises(ValueError, match=r"node 5 .*alive"):
+        ses.inject(ClusterEvent(t + 1.0, "join", (5,)))
+    # the repair heals the projection: a second failure is legal again
+    ses.inject(ClusterEvent(t + 2.0, "join", (3,)))
+    ses.inject(ClusterEvent(t + 3.0, "fail", (3,)))
+
+
+def test_inject_rejects_contradictory_job_events():
+    specs = make_trace(W)
+    ses = open_session(16, "GreedyP */OPT=MIN")
+    ses.submit(specs)
+    ses.step_until(specs[5].release + 1.0)
+    st = ses.engine.state
+    victim = next(iter(st.in_system_indices()))
+    jid = st.specs[victim].jid
+    t = ses.now + 10.0
+    with pytest.raises(ValueError, match="unknown job id 987654"):
+        ses.inject(ClusterEvent(t, "cancel", jids=(987654,)))
+    done = next((s.jid for i, s in enumerate(st.specs)
+                 if int(st.status[i]) == S_COMPLETED), None)
+    if done is not None:
+        with pytest.raises(ValueError, match="already completed"):
+            ses.inject(ClusterEvent(t, "cancel", jids=(done,)))
+    ses.inject(ClusterEvent(t, "cancel", jids=(jid,)))
+    with pytest.raises(ValueError, match=str(jid)):
+        ses.inject(ClusterEvent(t + 1.0, "cancel", jids=(jid,)))
+
+
+# --------------------------------------------------------------------------- #
+# supervised sweeps: timeout, retry, quarantine                                #
+# --------------------------------------------------------------------------- #
+def test_supervised_grid_completes_around_bad_cells():
+    """The resilience acceptance criterion: a grid with a raising cell and
+    a timing-out cell completes the others, retries the losers on fresh
+    workers, and emits quarantine records."""
+    ok = WorkloadSpec("lublin", n_jobs=25, n_nodes=16, seed=0)
+    slow = WorkloadSpec("lublin", n_jobs=6000, n_nodes=16, seed=1)
+    cells = (grid([ok], ["FCFS", "GreedyP */OPT=MIN"])
+             + grid([ok], ["NOSUCH-POLICY"])          # raises in the worker
+             + grid([slow], ["GreedyP */OPT=MIN"]))   # blows the budget
+    res = run_grid(cells, n_workers=2, timeout_s=1.0, retries=1)
+    assert res.n_cells == 4
+    assert res.n_quarantined == 2
+    healthy = [r for r in res.records if not r.get("quarantined")]
+    assert {r["policy"] for r in healthy} == {"FCFS", "GreedyP */OPT=MIN"}
+    ref = run_grid(grid([ok], ["FCFS", "GreedyP */OPT=MIN"]), n_workers=1)
+    for got, want in zip(healthy, ref.records):
+        for k in want:
+            if k not in ("wall_s", "sim_wall_s"):
+                assert got[k] == want[k], k
+    bad = {r["policy"]: r for r in res.quarantined}
+    assert "NOSUCH-POLICY" in bad["NOSUCH-POLICY"]["error"]
+    assert bad["NOSUCH-POLICY"]["attempts"] == 2      # retried once
+    slow_rec = bad["GreedyP */OPT=MIN"]
+    assert "timeout" in slow_rec["error"]
+    assert slow_rec["attempts"] == 2
+    # quarantined cells carry no metrics and are skipped by summaries
+    assert "mean_stretch" not in slow_rec
+    assert set(res.summary(by="policy")) == {"FCFS", "GreedyP */OPT=MIN"}
+
+
+def test_supervised_matches_plain_on_healthy_grid():
+    cells = grid([WorkloadSpec("lublin", n_jobs=30, n_nodes=16, seed=2)],
+                 ["FCFS", "GreedyP */OPT=MIN"], ["baseline", "rack_failure"])
+    plain = run_grid(cells, n_workers=1)
+    sup = run_grid(cells, n_workers=2, retries=1)
+    assert sup.n_quarantined == 0
+    for a, b in zip(plain.records, sup.records):
+        for k in a:
+            if k not in ("wall_s", "sim_wall_s"):
+                assert a[k] == b[k], k
+
+
+# --------------------------------------------------------------------------- #
+# RecordCache robustness                                                       #
+# --------------------------------------------------------------------------- #
+def test_record_cache_truncated_file_is_a_miss(tmp_path, capsys):
+    path = str(tmp_path / "cache.json")
+    w = WorkloadSpec("lublin", n_jobs=15, n_nodes=16, seed=0)
+    RecordCache(path).sweep([w], ["FCFS"], n_workers=1, compute_bound=False)
+    raw = open(path).read()
+    open(path, "w").write(raw[: len(raw) // 2])     # killed mid-write
+    cache = RecordCache(path)                       # warns, never raises
+    assert len(cache) == 0
+    assert "unreadable" in capsys.readouterr().err
+    recs = cache.sweep([w], ["FCFS"], n_workers=1, compute_bound=False)
+    assert len(recs) == 1 and "mean_stretch" in recs[0]
+    assert len(RecordCache(path)) == 1              # healed atomically
+
+
+def test_record_cache_skips_individually_malformed_records(tmp_path, capsys):
+    path = str(tmp_path / "cache.json")
+    w = WorkloadSpec("lublin", n_jobs=15, n_nodes=16, seed=0)
+    RecordCache(path).sweep([w], ["FCFS"], n_workers=1, compute_bound=False)
+    payload = json.loads(open(path).read())
+    payload["records"][0]["params"] = 42            # key-building blows up
+    payload["records"].append("not-a-record")
+    open(path, "w").write(json.dumps(payload))
+    cache = RecordCache(path)
+    assert len(cache) == 0
+    assert "malformed" in capsys.readouterr().err
+    # wrong-schema (valid JSON, foreign file) still refuses loudly
+    foreign = str(tmp_path / "foreign.json")
+    open(foreign, "w").write(json.dumps({"schema": "something/else"}))
+    with pytest.raises(ValueError, match="refusing"):
+        RecordCache(foreign)
+
+
+def test_record_cache_never_caches_quarantined(tmp_path):
+    path = str(tmp_path / "cache.json")
+    w = WorkloadSpec("lublin", n_jobs=15, n_nodes=16, seed=0)
+    recs = RecordCache(path).sweep([w], ["FCFS", "NOSUCH-POLICY"],
+                                   n_workers=1, compute_bound=False,
+                                   timeout_s=30.0, retries=0)
+    assert len(recs) == 2
+    quar = [r for r in recs if r.get("quarantined")]
+    assert len(quar) == 1 and quar[0]["policy"] == "NOSUCH-POLICY"
+    assert len(RecordCache(path)) == 1              # only the healthy record
+
+
+# --------------------------------------------------------------------------- #
+# the streaming CLI end to end                                                 #
+# --------------------------------------------------------------------------- #
+def test_cli_narrator_runs_bit_identical(tmp_path):
+    from repro.__main__ import main as cli_main
+    script = tmp_path / "script.jsonl"
+    script.write_text(
+        '{"op": "submit", "workload": "lublin", "jobs": 40, "nodes": 16}\n'
+        '{"op": "run"}\n'
+        '{"op": "result"}\n')
+    outs = []
+    for run in ("a", "b"):
+        metrics = str(tmp_path / f"metrics-{run}.jsonl")
+        rc = cli_main(["session", "--script", str(script),
+                       "--policy", "GreedyP */OPT=MIN", "--nodes", "16",
+                       "--narrator", CHAOS, "--narrator-seed", "7",
+                       "--metrics", metrics])
+        assert rc == 0
+        lines = [json.loads(l) for l in open(metrics)]
+        for rec in lines:
+            rec.pop("sim_wall_s", None)
+        outs.append(lines)
+    assert outs[0] == outs[1]
+    assert outs[0][-1]["kind"] == "result"
