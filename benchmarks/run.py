@@ -16,8 +16,9 @@ import argparse
 import time
 
 from . import (batched_bench, fig1_load, fig4_period_stretch, hotpath_bench,
-               mcb8_runtime, roofline, sweep_bench, table2_stretch,
-               table3_costs, table4_underutilization, tpu_cluster)
+               mcb8_runtime, roofline, serve_bench, sweep_bench,
+               table2_stretch, table3_costs, table4_underutilization,
+               tpu_cluster)
 from .common import FULL, QUICK, Bench
 
 BENCHES = {
@@ -29,6 +30,7 @@ BENCHES = {
     "mcb8_runtime": mcb8_runtime.run,
     "roofline": roofline.run,
     "sweep": sweep_bench.run,
+    "serve": serve_bench.run,
     "hotpath": hotpath_bench.run,
     "batched": batched_bench.run,
     "tpu_cluster": tpu_cluster.run,

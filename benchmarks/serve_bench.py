@@ -1,0 +1,173 @@
+"""Service-layer capacity benchmark → machine-readable BENCH_serve.json.
+
+One in-process server (``ServerThread``) with a small ``max_live`` cap is
+loaded with 1000+ named sessions across four tenants — far more sessions
+than live engine slots, so the snapshot-backed eviction/rehydration path
+is exercised on nearly every touch.  The tracked numbers are capacity
+(sessions held, peak RSS) and service rate (ops/s, p99 step latency).
+
+Two gates, both **correctness** (never absolute perf — CI runs on a
+throttled 2-core box):
+
+* a sample of sessions is run to exhaustion *through the server* — after
+  hundreds of evictions — and each result must be bit-identical to a
+  serial single-process :class:`SimSession` run of the same cell;
+* eviction must actually have happened (``evictions > 0``), otherwise the
+  capacity number is meaningless.
+
+Journal fsync is disabled for the bench (the durability guarantee is
+covered by tests/test_serve.py's SIGKILL drill; here it would only add
+per-op disk latency to a throughput measurement).
+"""
+from __future__ import annotations
+
+import json
+import platform
+import resource
+import tempfile
+import time
+
+from repro import api
+from repro.serve import Client, CreditParams, ServerThread
+
+from . import common
+from .common import Bench, fmt_table
+
+BENCH_JSON = "BENCH_serve.json"
+
+POLICY = "EASY"
+NODES = 8
+JOBS = 6
+MAX_LIVE = 64
+TENANTS = ("acme", "globex", "initech", "umbrella")
+PARITY_SAMPLE = 6
+
+
+def _serial_result(seed: int):
+    ses = api.open_session(NODES, POLICY)
+    ses.submit(api.parse_workload("lublin", n_jobs=JOBS, n_nodes=NODES,
+                                  seed=seed))
+    ses.step(2)
+    ses.run_to_exhaustion()
+    import dataclasses
+    d = dataclasses.asdict(ses.result())
+    d.pop("sim_wall_s")
+    return d
+
+
+def _norm(resp):
+    d = {k: v for k, v in resp.items()
+         if k not in ("id", "ok", "partial", "sim_wall_s")}
+    for k in ("completions", "stretches"):
+        d[k] = {int(a): b for a, b in d[k].items()}
+    return d
+
+
+def _timed(lat, fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    lat.append(time.perf_counter() - t0)
+    return out
+
+
+def _p(lat, q):
+    xs = sorted(lat)
+    return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else 0.0
+
+
+def run(bench: Bench, verbose: bool = True):
+    n_sessions = 2000 if bench.scale is common.FULL else 1000
+    rss0_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    lat_open, lat_step = [], []
+    t_all = time.perf_counter()
+
+    with tempfile.TemporaryDirectory() as tmp:
+        # capacity load, not an admission test: the budget throttle would
+        # (correctly) refuse this firehose at the default 500 units/window
+        with ServerThread(store=tmp, max_live=MAX_LIVE, fsync=False,
+                          credit=CreditParams(budget=1e12)) as srv:
+            clients = {t: Client("127.0.0.1", srv.port, tenant=t)
+                       for t in TENANTS}
+            names = [(TENANTS[i % len(TENANTS)], f"s{i}", i)
+                     for i in range(n_sessions)]
+            for tenant, name, seed in names:
+                c = clients[tenant]
+                _timed(lat_open, c.open, name, POLICY, nodes=NODES)
+                c.submit(name, workload="lublin", jobs=JOBS, nodes=NODES,
+                         seed=seed)
+            # a second full pass: every session is cold by now (the live
+            # cap is tiny), so each step pays one rehydration
+            for tenant, name, seed in names:
+                _timed(lat_step, clients[tenant].step, name, n=2)
+            stats = clients[TENANTS[0]].stats()
+
+            # correctness gate: finish a sample through the server and
+            # diff bit-for-bit against serial SimSession runs
+            mismatches = []
+            stride = max(1, n_sessions // PARITY_SAMPLE)
+            sample = names[::stride][:PARITY_SAMPLE]
+            for tenant, name, seed in sample:
+                c = clients[tenant]
+                c.run(name)
+                if _norm(c.result(name)) != _serial_result(seed):
+                    mismatches.append(f"{tenant}/{name}")
+            for c in clients.values():
+                c.close()
+
+    wall = time.perf_counter() - t_all
+    rss_kb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    reg = stats["registry"]
+    n_ops = 3 * n_sessions
+    payload = {
+        "bench": "serve",
+        "n_sessions": n_sessions,
+        "n_tenants": len(TENANTS),
+        "max_live": MAX_LIVE,
+        "sessions_held": reg["sessions"],
+        "live_at_peak": reg["live"],
+        "evictions": reg["evictions"],
+        "rehydrations": reg["rehydrations"],
+        "wall_s": round(wall, 3),
+        "ops": n_ops,
+        "ops_per_sec": round(n_ops / max(wall, 1e-9), 1),
+        "open_p50_ms": round(1e3 * _p(lat_open, 0.50), 3),
+        "open_p99_ms": round(1e3 * _p(lat_open, 0.99), 3),
+        "step_p50_ms": round(1e3 * _p(lat_step, 0.50), 3),
+        "step_p99_ms": round(1e3 * _p(lat_step, 0.99), 3),
+        "rss_peak_mb": round(rss_kb / 1024.0, 1),
+        "rss_start_mb": round(rss0_kb / 1024.0, 1),
+        "fsync": False,
+        "parity": {"sampled": len(sample), "mismatches": mismatches},
+        "cell": {"policy": POLICY, "nodes": NODES, "jobs": JOBS},
+        "platform": platform.platform(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    if verbose:
+        rows = [[n_sessions, reg["live"], reg["evictions"],
+                 reg["rehydrations"], payload["ops_per_sec"],
+                 payload["step_p99_ms"], payload["rss_peak_mb"]]]
+        print(fmt_table(
+            ["sessions", "live", "evict", "rehydrate", "ops/s",
+             "step p99 ms", "rss MB"],
+            rows, f"Serve bench ({len(TENANTS)} tenants, "
+                  f"max_live={MAX_LIVE})"))
+        print(f"  parity sample: {len(sample)} sessions, "
+              f"{len(mismatches)} mismatches -> {BENCH_JSON}")
+
+    # the CI gates: correctness and an actually-exercised eviction path
+    if mismatches:
+        raise RuntimeError(
+            f"server results diverged from serial SimSession runs for "
+            f"{mismatches} — the eviction/rehydration path is broken")
+    if reg["evictions"] == 0 or reg["rehydrations"] == 0:
+        raise RuntimeError(
+            f"eviction path not exercised (evictions={reg['evictions']}, "
+            f"rehydrations={reg['rehydrations']}) — capacity numbers "
+            f"are meaningless without it")
+    if reg["live"] > MAX_LIVE:
+        raise RuntimeError(
+            f"live sessions ({reg['live']}) exceed max_live ({MAX_LIVE}); "
+            f"RSS is not bounded")
+    return payload

@@ -20,6 +20,14 @@ Subcommands (all built on :mod:`repro.api`):
 * ``trace-smoke`` — materialize every registered workload kind × every
   scenario at a small size and emit the content fingerprints (CI runs it
   in two processes and diffs the output).
+* ``serve``       — the scheduler-as-a-service server: a long-lived
+  multi-tenant :class:`SimSession` host (JSONL over TCP, stdlib only)
+  with credit-based admission, weighted-DRF tenant fairness,
+  snapshot-backed eviction and ``kill -9`` crash recovery (``--store``).
+* ``client``      — drive named sessions on a running server from a JSONL
+  script (the remote sibling of ``session``): ops carry a ``session``
+  name, mutating ops are seq-stamped so re-driving a script after a
+  server crash dedupes instead of double-applying.
 
 The ``--workload`` argument accepts any registered kind, including the
 ``kind:<arg>`` spelling (``swf:<path>`` = a real Parallel Workloads Archive
@@ -53,6 +61,14 @@ Examples::
               --narrator-seed 7
     python -m repro sweep --table1 --workload lublin --jobs 100 --nodes 32 \\
         --timeout 300 --retries 1   # hung cells quarantined, sweep completes
+    # scheduler-as-a-service: server + two tenants
+    python -m repro serve --store var/serve --port-file /tmp/port &
+    printf '%s\\n' \\
+        '{"op": "open", "session": "s0", "policy": "EASY", "nodes": 32}' \\
+        '{"op": "submit", "session": "s0", "workload": "lublin", "jobs": 50}' \\
+        '{"op": "run", "session": "s0"}' '{"op": "result", "session": "s0"}' \\
+        | python -m repro client --port $(cat /tmp/port) --tenant acme \\
+              --script -
 """
 from __future__ import annotations
 
@@ -365,6 +381,84 @@ def _cmd_session(args: argparse.Namespace) -> int:
     return 0
 
 
+def _cmd_serve(args: argparse.Namespace) -> int:
+    """Run the multi-tenant session server until shutdown/SIGTERM."""
+    from .serve import CreditParams, ServeConfig, run_server
+
+    credit = CreditParams(alpha=args.alpha, beta=args.beta,
+                          gamma=args.gamma, budget=args.budget,
+                          max_pending=args.max_pending)
+
+    def announce(server) -> None:
+        line = {"event": "listening", "host": args.host,
+                "port": server.port, "store": args.store,
+                "recovered": server.n_recovered}
+        print(json.dumps(line), flush=True)
+        if args.port_file:
+            # atomic: watchers polling the file never read a torn port
+            from .core.ioutil import atomic_write_text
+            atomic_write_text(args.port_file, str(server.port))
+
+    try:
+        run_server(ServeConfig(
+            host=args.host, port=args.port, store=args.store,
+            max_live=args.max_live, idle_evict_s=args.idle_evict,
+            checkpoint_every=args.checkpoint_every, credit=credit,
+            fsync=not args.no_fsync), announce=announce)
+    except KeyboardInterrupt:
+        pass
+    return 0
+
+
+def _cmd_client(args: argparse.Namespace) -> int:
+    """Drive named server sessions from a JSONL script.
+
+    Each line is one op object with a ``session`` field (except
+    ``stats``/``ping``); responses stream out as JSONL.  Mutating ops are
+    seq-stamped by the client, so re-running a script against a server
+    that crashed mid-way dedupes the already-applied prefix and finishes
+    the rest — the recovery drill CI exercises.
+    """
+    from .serve import Client, ServeError
+
+    out = open(args.metrics, "w") if args.metrics else sys.stdout
+
+    def emit(obj: dict) -> None:
+        print(json.dumps(obj), file=out, flush=True)
+
+    cli = Client(args.host, args.port, tenant=args.tenant,
+                 retry_for=args.retry_for)
+    script = sys.stdin if args.script == "-" else open(args.script)
+    try:
+        for lineno, raw in enumerate(script, start=1):
+            raw = raw.strip()
+            if not raw or raw.startswith("#"):
+                continue
+            try:
+                ev = json.loads(raw)
+                op = ev.pop("op")
+                session = ev.pop("session", args.session)
+                resp = cli.call(op, session=session, **ev)
+                resp.pop("id", None)
+                emit({"kind": op, **resp})
+            except ServeError as e:
+                if args.keep_going:
+                    emit({"kind": "error", "code": e.code, "error": str(e)})
+                    continue
+                print(f"{args.script}:{lineno}: {e}", file=sys.stderr)
+                return 2
+            except (KeyError, TypeError, ValueError) as e:
+                print(f"{args.script}:{lineno}: {e}", file=sys.stderr)
+                return 2
+    finally:
+        if script is not sys.stdin:
+            script.close()
+        if out is not sys.stdout:
+            out.close()
+        cli.close()
+    return 0
+
+
 def _cmd_sweep(args: argparse.Namespace) -> int:
     workloads = _workloads_from_args(args)
     policies = _csv(args.policies)
@@ -495,6 +589,68 @@ def build_parser() -> argparse.ArgumentParser:
                    help="write the JSONL metrics stream here (default: "
                         "stdout)")
     p.set_defaults(fn=_cmd_session)
+
+    p = sub.add_parser(
+        "serve",
+        help="run the multi-tenant session server (JSONL over TCP)")
+    p.add_argument("--host", default="127.0.0.1", help="bind address")
+    p.add_argument("--port", type=int, default=0,
+                   help="TCP port (default: 0 = OS-assigned; the chosen "
+                        "port is announced on stdout and via --port-file)")
+    p.add_argument("--store", default=None, metavar="DIR",
+                   help="durable snapshot + journal store; enables "
+                        "eviction and kill -9 crash recovery")
+    p.add_argument("--max-live", type=int, default=256,
+                   help="live sessions kept in memory before LRU eviction "
+                        "to the store (default: 256)")
+    p.add_argument("--idle-evict", type=float, default=None, metavar="S",
+                   help="evict sessions idle longer than this (s)")
+    p.add_argument("--checkpoint-every", type=int, default=0, metavar="N",
+                   help="auto-snapshot a session every N journaled ops "
+                        "(bounds replay length; default: 0 = off)")
+    p.add_argument("--port-file", default=None, metavar="PATH",
+                   help="write the bound port here (atomically) once "
+                        "listening — for shell scripts and CI")
+    p.add_argument("--no-fsync", action="store_true",
+                   help="skip fsync on journal appends (faster, loses the "
+                        "crash-durability guarantee; for benchmarks)")
+    p.add_argument("--alpha", type=float, default=0.5,
+                   help="credit weight on budget use (default: 0.5)")
+    p.add_argument("--beta", type=float, default=0.3,
+                   help="credit weight on violations (default: 0.3)")
+    p.add_argument("--gamma", type=float, default=0.2,
+                   help="credit weight on tail latency (default: 0.2)")
+    p.add_argument("--budget", type=float, default=500.0,
+                   help="per-tenant cost budget per decay window "
+                        "(default: 500)")
+    p.add_argument("--max-pending", type=int, default=64,
+                   help="per-tenant pending-op cap before admission "
+                        "refuses (default: 64)")
+    p.set_defaults(fn=_cmd_serve)
+
+    p = sub.add_parser(
+        "client",
+        help="drive named sessions on a running server from a JSONL script")
+    p.add_argument("--host", default="127.0.0.1", help="server address")
+    p.add_argument("--port", type=int, required=True, help="server port")
+    p.add_argument("--tenant", default="default", help="tenant name")
+    p.add_argument("--script", required=True, metavar="PATH",
+                   help="JSONL op script ('-' for stdin); each line is an "
+                        "op object, e.g. {\"op\": \"open\", \"session\": "
+                        "\"s0\", \"policy\": \"EASY\", \"nodes\": 32}")
+    p.add_argument("--session", default=None,
+                   help="default session name for lines that omit one")
+    p.add_argument("--retry-for", type=float, default=0.0, metavar="S",
+                   help="on connection loss, reconnect and resend (same "
+                        "seq, deduped server-side) for up to this long — "
+                        "rides through a server restart (default: 0)")
+    p.add_argument("--keep-going", action="store_true",
+                   help="emit server-refused ops as error lines and "
+                        "continue instead of aborting")
+    p.add_argument("--metrics", default=None, metavar="PATH",
+                   help="write the JSONL response stream here (default: "
+                        "stdout)")
+    p.set_defaults(fn=_cmd_client)
 
     p = sub.add_parser("sweep", help="run a policy × workload × scenario grid")
     p.add_argument("--policies", default="",

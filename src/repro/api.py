@@ -65,6 +65,9 @@ from .sched.scenarios import (apply_scenario, apply_scenario_trace,
 from .sched.narrator import (Narrator, list_streams, narrator_docs,
                              parse_narrator, register_stream)
 from .sched.session import SessionState, SimSession, open_session
+from .serve import (Client, CreditParams, ServeConfig, ServeError,
+                    ServerThread, connect)
+from .serve import run_server as _run_server
 from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_batched,
                           run_branches, run_grid)
 from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
@@ -86,6 +89,9 @@ __all__ = [
     "simulate", "sweep", "list_policies",
     # streaming sessions
     "open_session", "SimSession", "SessionState",
+    # scheduler-as-a-service (multi-tenant session server + client)
+    "serve", "connect", "Client", "ServeError", "ServeConfig",
+    "CreditParams", "ServerThread",
     # policy surface
     "PolicySpec", "parse_policy", "render_policy", "TABLE1_POLICIES",
     "all_paper_policies", "Policy", "ComposedPolicy", "Component",
@@ -210,6 +216,46 @@ def sweep(
     if json_path is not None:
         res.save_json(json_path)
     return res
+
+
+def serve(
+    host: str = "127.0.0.1",
+    port: int = 0,
+    *,
+    store: Optional[str] = None,
+    max_live: int = 256,
+    idle_evict_s: Optional[float] = None,
+    checkpoint_every: int = 0,
+    credit: Optional[CreditParams] = None,
+    announce=None,
+    **credit_overrides: Any,
+) -> None:
+    """Run the multi-tenant session server (blocking).
+
+    JSONL-over-TCP, stdlib only.  ``store`` enables the durable layer:
+    write-ahead op journals, snapshot-backed eviction of idle sessions
+    past ``max_live`` (and ``idle_evict_s``), and crash recovery — a
+    restarted server replays persisted snapshots + journals and client
+    retries dedupe on per-session seq, so a ``kill -9`` mid-workload
+    resumes bit-identically.  Tenant fairness comes from the credit score
+    ``clamp(1 − α·budget_used − β·violations − γ·tail_latency)`` weighting
+    a DRF fair queue; tune via ``credit=CreditParams(...)`` or keyword
+    overrides (``alpha=``, ``budget=``, ``max_pending=``, …).
+
+    Use :class:`ServerThread` for an in-process background server, and
+    :func:`connect` for a client.  ``announce(server)`` fires once the
+    socket is bound (``server.port`` is then known).
+    """
+    if credit is None:
+        credit = CreditParams(**credit_overrides)
+    elif credit_overrides:
+        raise ValueError("pass either credit= or keyword overrides, "
+                         "not both")
+    _run_server(ServeConfig(host=host, port=port, store=store,
+                            max_live=max_live, idle_evict_s=idle_evict_s,
+                            checkpoint_every=checkpoint_every,
+                            credit=credit),
+                announce=announce)
 
 
 def list_policies(include_paper_space: bool = False) -> Dict[str, Any]:

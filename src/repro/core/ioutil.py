@@ -1,0 +1,50 @@
+"""Concurrency-safe atomic file writes.
+
+Every on-disk artifact in the repo (sweep record caches, session
+snapshots, the serve layer's shared snapshot store) is written through
+:func:`atomic_write_json`: the payload lands in a uniquely-named temp
+file in the destination directory (``tempfile.mkstemp`` opens it with
+``O_EXCL``, so two writers can never share a temp path — a plain
+``f"{path}.tmp.{os.getpid()}"`` collides between threads of one
+process), is fsynced, and is moved over the destination with the atomic
+``os.replace``.  Concurrent writers race to *whole* files: readers see
+either the old or one writer's complete new content, never a torn mix,
+and no writer ever unlinks another writer's temp file.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional
+
+__all__ = ["atomic_write_json", "atomic_write_text"]
+
+
+def atomic_write_text(path: str, text: str) -> str:
+    """Atomically replace ``path`` with ``text`` (parents created).
+
+    Safe under concurrent writers to the same ``path``: unique ``O_EXCL``
+    temp names + atomic rename; last completed writer wins wholesale.
+    """
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".tmp.")
+    try:
+        with os.fdopen(fd, "w") as f:
+            f.write(text)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    finally:
+        try:
+            os.unlink(tmp)          # only reached when replace() didn't run
+        except FileNotFoundError:
+            pass
+    return path
+
+
+def atomic_write_json(path: str, payload: Any,
+                      indent: Optional[int] = 1) -> str:
+    """Serialize ``payload`` as JSON and atomically replace ``path``."""
+    return atomic_write_text(path, json.dumps(payload, indent=indent))

@@ -39,7 +39,6 @@ import hashlib
 import heapq
 import json
 import math
-import os
 import time
 from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -57,6 +56,25 @@ from .narrator import Narrator
 __all__ = ["SimSession", "SessionState", "open_session"]
 
 SCHEMA = "repro.session/v1"
+
+#: payload-shape version *within* the schema.  Bump when keys are added,
+#: renamed or re-typed; :meth:`SimSession.restore` refuses versions it does
+#: not know with a clear ``ValueError`` instead of failing key-by-key.
+#: Version 1 = the pre-versioned PR5–PR7 shape (``version`` key absent).
+SNAPSHOT_VERSION = 2
+_SUPPORTED_VERSIONS = (1, 2)
+
+#: keys every supported payload version carries — validated up front so a
+#: stale or hand-edited snapshot raises one actionable error, not an
+#: opaque ``KeyError`` deep inside restore
+_REQUIRED_KEYS = frozenset({
+    "params", "policy", "jobs", "vt", "yld", "penalty_until",
+    "completed_at", "status", "job_pmtn", "job_mig", "mappings",
+    "pool_load", "pool_mem_free", "alive", "now", "util_integral",
+    "demand_integral", "bytes_moved_gb", "n_pmtn", "n_mig", "events",
+    "arrivals", "cluster_events", "next_tick", "tick_armed", "horizon",
+    "exhausted", "hit_cap", "wall_s", "policy_state",
+})
 
 _JOB_COLS = ("jid", "release", "proc_time", "n_tasks", "cpu_need", "mem_req")
 
@@ -125,20 +143,10 @@ class SessionState:
         return snap
 
     def save(self, path: str) -> str:
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        tmp = f"{path}.tmp.{os.getpid()}"
-        try:
-            with open(tmp, "w") as f:
-                json.dump(self.to_json_dict(), f)
-                f.flush()
-                os.fsync(f.fileno())
-            os.replace(tmp, path)
-        finally:
-            if os.path.exists(tmp):
-                os.unlink(tmp)
-        return path
+        # unique-temp-name atomic replace: the serve layer snapshots many
+        # tenants' sessions into one shared store, possibly concurrently
+        from ..core.ioutil import atomic_write_json
+        return atomic_write_json(path, self.to_json_dict(), indent=None)
 
     @classmethod
     def load(cls, path: str) -> "SessionState":
@@ -352,9 +360,59 @@ class SimSession:
         self._horizon = st.now
         self._wall = 0.0
         self._narrator: Optional[Narrator] = None
+        self._closed = False
+        self._close_hooks: List[Any] = []
         #: ephemeral driver scratchpad (reactive rules keep per-session
         #: state here); deliberately NOT part of snapshots
         self.scratch: Dict[str, Any] = {}
+
+    # -- lifecycle ----------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        """True once :meth:`close` has run; mutating entry points then
+        raise, read-only ones (``observe``/``result``) keep working."""
+        return self._closed
+
+    def add_close_hook(self, callback) -> None:
+        """Register ``callback(session)`` to run exactly once at
+        :meth:`close` (servers/registries release journals, files, slots
+        here; hooks registered after close are invoked immediately)."""
+        if self._closed:
+            callback(self)
+            return
+        self._close_hooks.append(callback)
+
+    def close(self) -> None:
+        """Idempotent close: mark the session finished and run the close
+        hooks (each exactly once).  Further ``submit``/``step``/``inject``/
+        ``snapshot`` calls raise ``ValueError``; ``observe()`` and
+        ``result()`` stay readable so a holder can still collect metrics.
+        """
+        if self._closed:
+            return
+        self._closed = True
+        hooks, self._close_hooks = self._close_hooks, []
+        first_err: Optional[BaseException] = None
+        for cb in hooks:            # run every hook even if one raises
+            try:
+                cb(self)
+            except BaseException as exc:  # noqa: BLE001 — re-raised below
+                if first_err is None:
+                    first_err = exc
+        if first_err is not None:
+            raise first_err
+
+    def __enter__(self) -> "SimSession":
+        self._require_open("enter a context with")
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.close()
+        return False
+
+    def _require_open(self, what: str) -> None:
+        if self._closed:
+            raise ValueError(f"session is closed; cannot {what} it")
 
     # -- introspection ------------------------------------------------------
     @property
@@ -443,6 +501,7 @@ class SimSession:
         job ids must be globally unique within the session.  Returns the
         dense engine indices assigned to the new jobs.
         """
+        self._require_open("submit jobs into")
         from ..workloads.registry import WorkloadSpec, make_trace_ir
         if isinstance(jobs, WorkloadSpec):
             trace = make_trace_ir(jobs)
@@ -494,6 +553,7 @@ class SimSession:
         stepping loop at their timestamp (which must not predate the engine
         clock) exactly like a pre-scripted scenario event.
         """
+        self._require_open("inject events into")
         if isinstance(event, dict):
             kind = event.get("kind")
             if kind == "period":
@@ -571,6 +631,7 @@ class SimSession:
     def set_period(self, period: float) -> None:
         """Change the periodic-pass period live (takes effect from the next
         tick; no-op for compositions without a periodic component)."""
+        self._require_open("change the period of")
         period = float(period)
         if period <= 0:
             raise ValueError("period must be > 0")
@@ -581,6 +642,7 @@ class SimSession:
         streams fire lazily as the loop advances and ride along in
         snapshots (bit-exact RNG round-trip).  Attach before submitting so
         truth-noise streams see every job."""
+        self._require_open("attach a narrator to")
         if (narrator.needs_cluster_events()
                 and not self.engine.policy.handles_cluster_events):
             raise ValueError(
@@ -728,6 +790,7 @@ class SimSession:
     def step_until(self, t: float) -> float:
         """Process every event timestamp ``<= t`` (inclusive); the session
         clock then reads ``t``.  Returns the new session clock."""
+        self._require_open("step")
         t = float(t)
         self._loop(until=t)
         self._horizon = max(self._horizon, t, self.engine.state.now)
@@ -736,6 +799,7 @@ class SimSession:
     def step(self, n_events: int = 1) -> int:
         """Process up to ``n_events`` event timestamps; returns how many
         were actually processed (0 when the run is exhausted)."""
+        self._require_open("step")
         if n_events < 1:
             raise ValueError("n_events must be >= 1")
         steps = self._loop(max_steps=int(n_events))
@@ -744,6 +808,7 @@ class SimSession:
 
     def run_to_exhaustion(self) -> "SimSession":
         """Step until no future event exists."""
+        self._require_open("step")
         self._loop()
         self._horizon = max(self._horizon, self.engine.state.now)
         return self
@@ -769,6 +834,7 @@ class SimSession:
         is reconstructed exactly from the serialized mappings), node pool
         accumulators, policy-internal state, and the session's loop cursor
         — as a fingerprinted, JSON-serializable :class:`SessionState`."""
+        self._require_open("snapshot")
         e = self.engine
         st = e.state
         cols = {
@@ -781,6 +847,7 @@ class SimSession:
         }
         payload: Dict[str, Any] = {
             "schema": SCHEMA,
+            "version": SNAPSHOT_VERSION,
             "params": dataclasses.asdict(e.params),
             "policy": e.policy_ref,
             "jobs": cols,
@@ -838,6 +905,19 @@ class SimSession:
         elif isinstance(snap, dict):
             snap = SessionState.from_json_dict(snap)
         pl = snap.payload
+        version = int(pl.get("version", 1))
+        if version not in _SUPPORTED_VERSIONS:
+            raise ValueError(
+                f"session snapshot version {version} is not supported by "
+                f"this build (supported: {list(_SUPPORTED_VERSIONS)}); the "
+                f"snapshot was written by an incompatible repro version — "
+                f"re-create it or restore with the version that wrote it")
+        missing = _REQUIRED_KEYS - pl.keys()
+        if missing:
+            raise ValueError(
+                f"session snapshot is missing required keys "
+                f"{sorted(missing)} (stale, truncated, or foreign "
+                f"snapshot?); cannot restore")
         params = SimParams(**pl["params"])
         switched = policy is not None
         if policy is None:
@@ -916,6 +996,8 @@ class SimSession:
             # fork onto a batch baseline: the cluster script is dropped, so
             # the chaos streams that feed it go too (noise-only survives)
             ses._narrator = None
+        ses._closed = False
+        ses._close_hooks = []
         ses.scratch = {}
         if switched:
             if not e.policy.handles_cluster_events:

@@ -35,6 +35,7 @@ from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.bound import max_stretch_lower_bound
+from ..core.ioutil import atomic_write_json
 from ..core.policies import parse_policy
 from ..workloads.registry import WorkloadSpec, make_trace_ir
 from .engine import Engine, SimParams
@@ -145,20 +146,11 @@ class SweepResult:
 
 
 def _atomic_write_json(path: str, payload: Any) -> str:
-    d = os.path.dirname(path)
-    if d:
-        os.makedirs(d, exist_ok=True)
-    tmp = f"{path}.tmp.{os.getpid()}"
-    try:
-        with open(tmp, "w") as f:
-            json.dump(payload, f, indent=1)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
-    return path
+    # unique-temp-name atomic replace (core.ioutil): concurrent writers —
+    # the serve layer shares one snapshot/cache store across tenants, and
+    # parallel benchmark runs share cache files — never collide on a temp
+    # path or observe a torn file
+    return atomic_write_json(path, payload, indent=1)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,29 @@
+"""repro.serve — scheduler-as-a-service: a multi-tenant SimSession server.
+
+An asyncio JSONL-over-TCP server (stdlib only) holding thousands of named
+streaming sessions behind credit-based admission and a weighted-DRF fair
+queue, with snapshot-backed eviction of idle sessions and write-ahead
+journal crash recovery (``kill -9`` mid-run resumes bit-identically).
+
+    from repro import api
+    api.serve(store="var/serve", max_live=256)          # blocking server
+    c = api.connect(port=PORT, tenant="acme")           # a tenant client
+    c.open("s0", "GreedyP */OPT=MIN", nodes=32)
+    c.submit("s0", workload="lublin", jobs=100, seed=1)
+    c.step_until("s0", 3600.0)
+    print(c.result("s0")["max_stretch"])
+
+See ARCHITECTURE.md "Service layer" for the design.
+"""
+from .admission import CreditParams, FairQueue, TenantState
+from .client import Client, ServeError, connect
+from .protocol import ProtocolError
+from .registry import SessionRegistry, SessionStore
+from .server import SchedServer, ServeConfig, ServerThread, run_server
+
+__all__ = [
+    "CreditParams", "FairQueue", "TenantState",
+    "Client", "ServeError", "connect", "ProtocolError",
+    "SessionRegistry", "SessionStore",
+    "SchedServer", "ServeConfig", "ServerThread", "run_server",
+]

@@ -1,0 +1,347 @@
+"""The scheduler-as-a-service server: asyncio JSONL-over-TCP, stdlib only.
+
+One process holds thousands of named :class:`SimSession`\\ s behind a
+:class:`~repro.serve.registry.SessionRegistry`.  Connections are thin:
+a reader task per connection parses frames and runs **admission control**
+(queue caps, credit budget) — everything admitted lands in the
+:class:`~repro.serve.admission.FairQueue`, and a single dispatcher task
+services it in weighted-DRF order, so one hot tenant saturating its
+connection cannot starve the others no matter how fast it writes.
+
+Simulation ops run inline on the event loop: the engine is process-wide
+single-threaded anyway (numpy releases the GIL only transiently) and the
+fair queue — not connection order — already decides *whose* op runs next.
+Durability (write-ahead journal + snapshot-backed eviction + crash
+recovery) lives in the registry; the server adds the transport, the
+fairness layer, and the idle/cap eviction policy.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+from .admission import CreditParams, FairQueue
+from .protocol import (CONTROL_OPS, E_BAD_REQUEST, E_OP_ERROR, MUTATING_OPS,
+                       ProtocolError, check_name, decode, encode,
+                       error_response, op_args, result_payload)
+from .registry import SessionRegistry, SessionStore
+
+__all__ = ["ServeConfig", "SchedServer", "ServerThread", "run_server"]
+
+
+@dataclass
+class ServeConfig:
+    host: str = "127.0.0.1"
+    port: int = 0                   # 0 = ephemeral (announced on start)
+    store: Optional[str] = None     # snapshot/journal root; None = RAM only
+    max_live: int = 256             # live engine states held in memory
+    idle_evict_s: Optional[float] = None   # evict sessions idle this long
+    checkpoint_every: int = 0       # auto-snapshot every N ops per session
+    fsync: bool = True              # fsync journal appends (durability)
+    allow_shutdown: bool = True     # honor the "shutdown" control op
+    credit: CreditParams = field(default_factory=CreditParams)
+
+
+class _Pending:
+    __slots__ = ("req", "writer", "enqueued")
+
+    def __init__(self, req: Dict[str, Any], writer: asyncio.StreamWriter,
+                 enqueued: float):
+        self.req = req
+        self.writer = writer
+        self.enqueued = enqueued
+
+
+class SchedServer:
+    """The long-lived service.  ``await start()`` binds the socket (and
+    replays any persisted sessions), ``await serve_forever()`` blocks
+    until a ``shutdown`` op or :meth:`request_stop`."""
+
+    def __init__(self, config: Optional[ServeConfig] = None, **overrides):
+        if config is None:
+            config = ServeConfig(**overrides)
+        self.config = config
+        self.store = SessionStore(config.store, fsync=config.fsync)
+        self.registry = SessionRegistry(
+            self.store, max_live=config.max_live,
+            idle_evict_s=config.idle_evict_s)
+        self.queue = FairQueue(config.credit)
+        self.port: Optional[int] = None
+        self.n_recovered = 0
+        self._server: Optional[asyncio.base_events.Server] = None
+        self._wake = asyncio.Event()
+        self._stopped = asyncio.Event()
+        self._dispatcher: Optional[asyncio.Task] = None
+        self._events_seen: Dict[Tuple[str, str], int] = {}
+        self.started_at = time.monotonic()
+
+    # -- lifecycle ----------------------------------------------------------
+    async def start(self) -> None:
+        self.n_recovered = self.registry.recover()
+        self._server = await asyncio.start_server(
+            self._on_connection, self.config.host, self.config.port)
+        self.port = self._server.sockets[0].getsockname()[1]
+        self._dispatcher = asyncio.ensure_future(self._dispatch_loop())
+
+    async def serve_forever(self) -> None:
+        await self._stopped.wait()
+
+    def request_stop(self) -> None:
+        self._stopped.set()
+        self._wake.set()
+
+    async def stop(self) -> None:
+        self.request_stop()
+        if self._dispatcher is not None:
+            await self._dispatcher
+        if self._server is not None:
+            self._server.close()
+            await self._server.wait_closed()
+        self.registry.close_all()
+
+    # -- connection reader ---------------------------------------------------
+    async def _on_connection(self, reader: asyncio.StreamReader,
+                             writer: asyncio.StreamWriter) -> None:
+        try:
+            while not self._stopped.is_set():
+                line = await reader.readline()
+                if not line:
+                    break
+                if not line.strip():
+                    continue
+                await self._on_frame(line, writer)
+        except (ConnectionError, asyncio.IncompleteReadError):
+            pass
+        finally:
+            try:
+                writer.close()
+                await writer.wait_closed()
+            except (ConnectionError, OSError):
+                pass
+
+    async def _on_frame(self, line: bytes,
+                        writer: asyncio.StreamWriter) -> None:
+        req_id: Any = None
+        try:
+            req = decode(line)
+            req_id = req.get("id")
+            op = req.get("op")
+            tenant = check_name("tenant", req.get("tenant", "default"))
+            if op in CONTROL_OPS:
+                resp = self._control(tenant, op, req)
+                writer.write(encode({"id": req_id, "ok": True, **resp}))
+                await writer.drain()
+                return
+            if op not in MUTATING_OPS and op not in (
+                    "observe", "result", "snapshot", "sessions"):
+                raise ProtocolError(E_BAD_REQUEST, f"unknown op {op!r}")
+            # admission happens here, on the reader: refused ops never
+            # enter the dispatcher queue
+            self.queue.admit(tenant,
+                             _Pending(req, writer, time.monotonic()))
+            self._wake.set()
+        except ProtocolError as exc:
+            writer.write(encode(error_response(req_id, exc.code, str(exc))))
+            await writer.drain()
+
+    # -- control ops (cheap, serviced inline) --------------------------------
+    def _control(self, tenant: str, op: str,
+                 req: Dict[str, Any]) -> Dict[str, Any]:
+        if op == "ping":
+            return {"pong": True}
+        if op == "hello":
+            t = self.queue.tenant(tenant)
+            return {"tenant": tenant, "credit": t.credit(),
+                    "schema": "repro.serve/v1",
+                    "limits": {
+                        "max_pending": self.queue.params.max_pending,
+                        "max_sessions": self.queue.params.max_sessions,
+                        "budget": self.queue.params.budget,
+                    }}
+        if op == "stats":
+            return {"registry": self.registry.stats(),
+                    "tenants": self.queue.stats(),
+                    "backlog": self.queue.backlog(),
+                    "uptime_s": time.monotonic() - self.started_at,
+                    "recovered": self.n_recovered}
+        if op == "shutdown":
+            if not self.config.allow_shutdown:
+                raise ProtocolError(E_BAD_REQUEST,
+                                    "shutdown is disabled on this server")
+            self.request_stop()
+            return {"stopping": True}
+        raise ProtocolError(E_BAD_REQUEST, f"unknown control op {op!r}")
+
+    # -- dispatcher ----------------------------------------------------------
+    async def _dispatch_loop(self) -> None:
+        while not self._stopped.is_set():
+            picked = self.queue.pick()
+            if picked is None:
+                self._wake.clear()
+                idle = asyncio.ensure_future(self._wake.wait())
+                done = asyncio.ensure_future(self._stopped.wait())
+                try:
+                    await asyncio.wait({idle, done}, timeout=1.0,
+                                       return_when=asyncio.FIRST_COMPLETED)
+                finally:
+                    idle.cancel()
+                    done.cancel()
+                self.registry.evict_idle()
+                continue
+            tenant_state, pending = picked
+            t0 = time.perf_counter()
+            resp = self._execute(tenant_state.name, pending.req)
+            wall = time.perf_counter() - t0
+            events = self._events_delta(tenant_state.name, pending.req, resp)
+            tenant_state.charge(ops=1.0, events=events, wall=wall)
+            if not resp.get("ok", False):
+                tenant_state.n_errors += 1
+                tenant_state.violation()
+            try:
+                pending.writer.write(encode(resp))
+                await pending.writer.drain()
+            except (ConnectionError, OSError):
+                pass                # client went away; the op still counts
+            self.registry.evict_over_cap()
+            # yield so reader tasks can enqueue between ops (fairness is
+            # decided by the queue, not by who holds the loop)
+            await asyncio.sleep(0)
+
+    def _events_delta(self, tenant: str, req: Dict[str, Any],
+                      resp: Dict[str, Any]) -> float:
+        """Engine events this op advanced (the DRF 'simulation work' dim)."""
+        total = resp.get("events")
+        session = req.get("session")
+        if total is None or not isinstance(session, str):
+            return 0.0
+        key = (tenant, session)
+        prev = self._events_seen.get(key, 0)
+        self._events_seen[key] = int(total)
+        return float(max(0, int(total) - prev))
+
+    # -- op execution --------------------------------------------------------
+    def _execute(self, tenant: str, req: Dict[str, Any]) -> Dict[str, Any]:
+        req_id = req.get("id")
+        op = req["op"]
+        try:
+            if op == "sessions":
+                return {"id": req_id, "ok": True,
+                        "sessions": self.registry.sessions_of(tenant)}
+            name = check_name("session", req.get("session"))
+            if op in MUTATING_OPS:
+                if op == "open":
+                    t = self.queue.tenant(tenant)
+                    if (name not in t.sessions and len(t.sessions)
+                            >= self.queue.params.max_sessions):
+                        raise ProtocolError(
+                            E_BAD_REQUEST,
+                            f"tenant {tenant!r} is at its session cap "
+                            f"({self.queue.params.max_sessions})")
+                payload = self.registry.apply_mutating(
+                    tenant, name, op, op_args(req), seq=req.get("seq"))
+                self.queue.tenant(tenant).sessions.add(name)
+                ce = self.config.checkpoint_every
+                if (ce > 0 and not payload.get("dup")
+                        and self.store.persistent):
+                    ent = self.registry.entries.get((tenant, name))
+                    if (ent is not None and not ent.closed
+                            and ent.seq - ent.snap_seq >= ce):
+                        self.registry.checkpoint(tenant, name)
+                return {"id": req_id, "ok": True, **payload}
+            if op == "observe":
+                ses = self.registry.live_session(tenant, name)
+                return {"id": req_id, "ok": True, **ses.observe()}
+            if op == "result":
+                ses = self.registry.live_session(tenant, name)
+                return {"id": req_id, "ok": True, **result_payload(ses)}
+            if op == "snapshot":
+                payload = self.registry.checkpoint(tenant, name)
+                return {"id": req_id, "ok": True, **payload}
+            raise ProtocolError(E_BAD_REQUEST, f"unknown op {op!r}")
+        except ProtocolError as exc:
+            return error_response(req_id, exc.code, str(exc))
+        except Exception as exc:    # noqa: BLE001 — op failed in the engine
+            return error_response(
+                req_id, E_OP_ERROR, f"{type(exc).__name__}: {exc}")
+
+
+async def _amain(config: ServeConfig, announce) -> None:
+    server = SchedServer(config)
+    await server.start()
+    if announce is not None:
+        announce(server)
+    try:
+        await server.serve_forever()
+    finally:
+        await server.stop()
+
+
+def run_server(config: Optional[ServeConfig] = None, *, announce=None,
+               **overrides) -> None:
+    """Blocking entry point (the ``python -m repro serve`` path).
+    ``announce(server)`` is called once the socket is bound (port known).
+    """
+    if config is None:
+        config = ServeConfig(**overrides)
+    asyncio.run(_amain(config, announce))
+
+
+class ServerThread:
+    """An in-process server on a background thread (tests, benchmarks).
+
+    Context manager: ``with ServerThread(store=...) as srv:`` yields the
+    running server with ``srv.port`` bound; exit stops it cleanly.
+    """
+
+    def __init__(self, config: Optional[ServeConfig] = None, **overrides):
+        self.config = config if config is not None else ServeConfig(
+            **overrides)
+        self.server: Optional[SchedServer] = None
+        self.port: Optional[int] = None
+        self._loop: Optional[asyncio.AbstractEventLoop] = None
+        self._ready = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._run, daemon=True)
+
+    def _run(self) -> None:
+        try:
+            asyncio.run(self._main())
+        except BaseException as exc:  # noqa: BLE001 — surfaced via start()
+            self._error = exc
+            self._ready.set()
+
+    async def _main(self) -> None:
+        self._loop = asyncio.get_running_loop()
+        self.server = SchedServer(self.config)
+        await self.server.start()
+        self.port = self.server.port
+        self._ready.set()
+        try:
+            await self.server.serve_forever()
+        finally:
+            await self.server.stop()
+
+    def start(self) -> "ServerThread":
+        self._thread.start()
+        self._ready.wait(timeout=30)
+        if self._error is not None:
+            raise RuntimeError("server thread failed to start") \
+                from self._error
+        if self.port is None:
+            raise RuntimeError("server thread did not bind within 30s")
+        return self
+
+    def stop(self) -> None:
+        if self._loop is not None and self._thread.is_alive():
+            self._loop.call_soon_threadsafe(self.server.request_stop)
+        self._thread.join(timeout=30)
+
+    def __enter__(self) -> "ServerThread":
+        return self.start()
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.stop()
+        return False

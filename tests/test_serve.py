@@ -1,0 +1,663 @@
+"""Service-layer tests: the multi-tenant SimSession server.
+
+* registry durability: seq dedup / gap detection, write-ahead journal
+  replay, snapshot-backed eviction → rehydration bit-identity, torn
+  journal tails, snap-schema guards, checkpoint truncation;
+* admission control: the credit formula and its decay, queue-full and
+  over-budget refusals, weighted-DRF tenant ordering, the min-credit
+  starvation floor;
+* the live server (in-process ``ServerThread``): concurrent multi-tenant
+  traffic parity against serial ``SimSession`` runs, eviction under
+  ``max_live`` transparency, misbehaving-tenant credit collapse, seq
+  dedup over the wire, close semantics, name validation;
+* crash recovery: a real ``python -m repro serve`` subprocess killed with
+  SIGKILL mid-workload, restarted, and re-driven — the recovered result
+  must be bit-identical to an uninterrupted serial run;
+* the two-writer atomic-write stress (concurrent writers, live reader,
+  no torn reads, no leaked tmp files).
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from conftest import result_dict
+from repro import api
+from repro.core.ioutil import atomic_write_json
+from repro.serve.admission import CreditParams, FairQueue, TenantState
+from repro.serve.client import Client, ServeError
+from repro.serve.protocol import (E_ADMISSION, E_BAD_REQUEST, E_OVER_BUDGET,
+                                  E_SEQ_GAP, E_SESSION_CLOSED,
+                                  E_UNKNOWN_SESSION, ProtocolError)
+from repro.serve.registry import SessionRegistry, SessionStore
+from repro.serve.server import ServeConfig, ServerThread
+
+NODES = 16
+POLICY = "GreedyP */OPT=MIN"
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+def serial_result(policy=POLICY, jobs=30, seed=0, nodes=NODES,
+                  until=None, inject=None):
+    """The uninterrupted single-process reference run."""
+    ses = api.open_session(nodes, policy)
+    ses.submit(api.parse_workload("lublin", n_jobs=jobs, n_nodes=nodes,
+                                  seed=seed))
+    if until is not None:
+        ses.step_until(until)
+    if inject is not None:
+        ses.inject(inject)
+    ses.run_to_exhaustion()
+    return result_dict(ses.result())
+
+
+def norm_result(resp):
+    """A server ``result`` payload, normalized for comparison against
+    :func:`conftest.result_dict` (JSON round-trips dict keys to str)."""
+    d = {k: v for k, v in resp.items()
+         if k not in ("id", "ok", "partial", "sim_wall_s", "kind")}
+    for k in ("completions", "stretches"):
+        d[k] = {int(a): b for a, b in d[k].items()}
+    return d
+
+
+def registry_on(tmp_path, **kw):
+    store = SessionStore(str(tmp_path / "store"))
+    return SessionRegistry(store, **kw), store
+
+
+OPEN = {"policy": POLICY, "nodes": NODES}
+SUBMIT = {"workload": "lublin", "jobs": 30, "seed": 0, "nodes": NODES}
+
+
+# --------------------------------------------------------------------------- #
+# registry: seq discipline                                                     #
+# --------------------------------------------------------------------------- #
+def test_registry_seq_dedup_gap_and_close(tmp_path):
+    reg, _ = registry_on(tmp_path)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+
+    # resending an applied seq is acknowledged without re-applying
+    dup = reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    assert dup == {"dup": True, "seq": 1, "applied_seq": 2}
+    assert len(reg.entries[("t", "s0")].session.engine.state.specs) == 30
+
+    # a seq from the future means an earlier op was lost
+    with pytest.raises(ProtocolError) as ei:
+        reg.apply_mutating("t", "s0", "step", {"n": 1}, seq=7)
+    assert ei.value.code == E_SEQ_GAP
+
+    # ops against a session never opened
+    with pytest.raises(ProtocolError) as ei:
+        reg.apply_mutating("t", "nope", "step", {"n": 1}, seq=0)
+    assert ei.value.code == E_UNKNOWN_SESSION
+
+    # re-opening an existing session is refused (unless it's a dup resend)
+    with pytest.raises(ProtocolError) as ei:
+        reg.apply_mutating("t", "s0", "open", OPEN, seq=2)
+    assert ei.value.code == E_BAD_REQUEST
+    assert reg.apply_mutating("t", "s0", "open", OPEN, seq=0)["dup"]
+
+    # close consumes a seq; later ops are refused, resends still dedupe
+    reg.apply_mutating("t", "s0", "close", {}, seq=2)
+    with pytest.raises(ProtocolError) as ei:
+        reg.apply_mutating("t", "s0", "step", {"n": 1}, seq=3)
+    assert ei.value.code == E_SESSION_CLOSED
+    assert reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)["dup"]
+
+
+def test_refused_ops_consume_no_seq(tmp_path):
+    reg, _ = registry_on(tmp_path)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    for _ in range(2):
+        with pytest.raises(ProtocolError):
+            reg.apply_mutating("t", "s0", "step", {"n": 1}, seq=9)
+    assert reg.entries[("t", "s0")].seq == 1
+
+
+# --------------------------------------------------------------------------- #
+# registry: eviction → rehydration bit-identity                                #
+# --------------------------------------------------------------------------- #
+def test_evict_rehydrate_bit_identical(tmp_path):
+    reg, _ = registry_on(tmp_path)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    reg.apply_mutating("t", "s0", "step_until", {"t": 4000.0}, seq=2)
+
+    reg.evict("t", "s0")
+    ent = reg.entries[("t", "s0")]
+    assert not ent.live and ent.snap_seq == 3 and not ent.dirty
+    assert reg.n_evictions == 1
+
+    # the next mutating op transparently rehydrates
+    reg.apply_mutating("t", "s0", "run", {}, seq=3)
+    assert reg.n_rehydrations == 1
+    got = result_dict(reg.live_session("t", "s0").result())
+    assert got == serial_result(until=4000.0)
+
+
+def test_evict_over_cap_is_lru(tmp_path):
+    clock = FakeClock()
+    reg, _ = registry_on(tmp_path, max_live=2, clock=clock)
+    for i, name in enumerate(["a", "b", "c"]):
+        clock.advance(1.0)
+        reg.apply_mutating("t", name, "open", OPEN, seq=0)
+    assert reg.n_live == 3
+    reg.evict_over_cap()
+    assert reg.n_live == 2
+    assert not reg.entries[("t", "a")].live      # oldest touch went first
+    assert reg.entries[("t", "c")].live
+
+
+def test_evict_idle(tmp_path):
+    clock = FakeClock()
+    reg, _ = registry_on(tmp_path, idle_evict_s=10.0, clock=clock)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    assert reg.evict_idle() == 0                 # just touched
+    clock.advance(11.0)
+    assert reg.evict_idle() == 1
+    assert not reg.entries[("t", "s0")].live
+
+
+# --------------------------------------------------------------------------- #
+# registry: crash recovery                                                     #
+# --------------------------------------------------------------------------- #
+def test_crash_recovery_replays_journal(tmp_path):
+    store = SessionStore(str(tmp_path / "store"))
+    reg = SessionRegistry(store)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    reg.apply_mutating("t", "s0", "step_until", {"t": 4000.0}, seq=2)
+    # crash: no close_all, no persist — only the fsynced journal survives
+    del reg
+
+    reg2 = SessionRegistry(SessionStore(str(tmp_path / "store")))
+    assert reg2.recover() == 1
+    ent = reg2.entries[("t", "s0")]
+    assert ent.seq == 3 and not ent.live
+    # resend of the in-flight op dedupes; the continuation applies fresh
+    assert reg2.apply_mutating("t", "s0", "step_until",
+                               {"t": 4000.0}, seq=2)["dup"]
+    reg2.apply_mutating("t", "s0", "run", {}, seq=3)
+    got = result_dict(reg2.live_session("t", "s0").result())
+    assert got == serial_result(until=4000.0)
+
+
+def test_recovery_from_snapshot_plus_journal_suffix(tmp_path):
+    """Snapshot at seq 2, two more journaled ops, crash: replay starts
+    from the snapshot and applies only the suffix."""
+    store = SessionStore(str(tmp_path / "store"))
+    reg = SessionRegistry(store)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    reg.checkpoint("t", "s0")
+    reg.apply_mutating("t", "s0", "step_until", {"t": 4000.0}, seq=2)
+    reg.apply_mutating(
+        "t", "s0", "inject",
+        {"kind": "fail", "t": 4100.0, "nodes": [0, 1]}, seq=3)
+    del reg
+
+    reg2 = SessionRegistry(SessionStore(str(tmp_path / "store")))
+    assert reg2.recover() == 1
+    reg2.apply_mutating("t", "s0", "run", {}, seq=4)
+    got = result_dict(reg2.live_session("t", "s0").result())
+    assert got == serial_result(
+        until=4000.0, inject={"kind": "fail", "t": 4100.0,
+                              "nodes": [0, 1]})
+
+
+def test_torn_journal_tail_is_dropped(tmp_path, capsys):
+    store = SessionStore(str(tmp_path / "store"))
+    reg = SessionRegistry(store)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    del reg
+    with open(SessionStore(str(tmp_path / "store")).journal_path(
+            "t", "s0"), "a") as f:
+        f.write('{"seq": 2, "op": "step_unt')     # crash mid-append
+
+    reg2 = SessionRegistry(SessionStore(str(tmp_path / "store")))
+    assert reg2.recover() == 1
+    # the torn entry was never applied pre-crash: it does not count
+    assert reg2.entries[("t", "s0")].seq == 2
+    reg2.apply_mutating("t", "s0", "run", {}, seq=2)
+    got = result_dict(reg2.live_session("t", "s0").result())
+    assert got == serial_result()
+
+
+def test_snap_schema_guard(tmp_path):
+    store = SessionStore(str(tmp_path / "store"))
+    reg = SessionRegistry(store)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.checkpoint("t", "s0")
+    path = store.snap_path("t", "s0")
+    payload = json.load(open(path))
+    payload["schema"] = "something/else"
+    json.dump(payload, open(path, "w"))
+    with pytest.raises(ValueError, match="schema"):
+        store.read_snapshot("t", "s0")
+
+
+def test_checkpoint_truncates_journal(tmp_path):
+    store = SessionStore(str(tmp_path / "store"))
+    reg = SessionRegistry(store)
+    reg.apply_mutating("t", "s0", "open", OPEN, seq=0)
+    reg.apply_mutating("t", "s0", "submit", SUBMIT, seq=1)
+    assert len(store.read_journal("t", "s0")) == 2
+    out = reg.checkpoint("t", "s0")
+    assert out["seq"] == 2 and out["fingerprint"]
+    assert store.read_journal("t", "s0") == []
+    assert json.load(open(out["path"]))["seq"] == 2
+
+
+# --------------------------------------------------------------------------- #
+# admission: credit model                                                      #
+# --------------------------------------------------------------------------- #
+def test_credit_formula_terms_and_decay():
+    clock = FakeClock()
+    p = CreditParams(budget=100.0, window_s=10.0)
+    t = TenantState("acme", p, clock)
+    assert t.credit() == 1.0
+
+    # saturate the budget term: credit = 1 − α·1
+    t.charge(ops=200.0)
+    assert t.budget_used() == 1.0
+    assert t.credit() == pytest.approx(1.0 - p.alpha)
+
+    # violations bite with weight β
+    t.violation(10.0)
+    assert t.violations_norm() == 1.0
+    assert t.credit() == pytest.approx(
+        max(p.min_credit, 1.0 - p.alpha - p.beta))
+
+    # both pressures decay exponentially: forgiveness over window_s
+    clock.advance(5 * p.window_s)
+    assert t.budget_used() < 0.02 and t.violations_norm() < 0.02
+    assert t.credit() > 0.98
+
+
+def test_tail_latency_pressure():
+    clock = FakeClock()
+    # huge budget so only the latency term moves the credit
+    p = CreditParams(target_latency_s=0.05, budget=1e9)
+    t = TenantState("slow", p, clock)
+    for _ in range(20):
+        t.charge(ops=0.0, wall=0.5)              # 10× the p99 target
+    assert t.tail_latency_norm() == 1.0
+    assert t.credit() == pytest.approx(1.0 - p.gamma)
+
+
+def test_min_credit_floor():
+    clock = FakeClock()
+    p = CreditParams(budget=1.0, min_credit=0.05)
+    t = TenantState("worst", p, clock)
+    t.charge(ops=100.0)
+    t.violation(100.0)
+    for _ in range(10):
+        t.charge(ops=0.0, wall=10.0)
+    assert t.credit() == p.min_credit
+
+
+def test_admission_queue_full_refuses_and_counts_violation():
+    q = FairQueue(CreditParams(max_pending=2), clock=FakeClock())
+    q.admit("t", "op1")
+    q.admit("t", "op2")
+    with pytest.raises(ProtocolError) as ei:
+        q.admit("t", "op3")
+    assert ei.value.code == E_ADMISSION
+    t = q.tenant("t")
+    assert t.n_rejected == 1 and t.violations > 0
+    assert len(t.pending) == 2                   # refusals take no space
+
+
+def test_admission_over_budget_refuses_without_violation():
+    clock = FakeClock()
+    q = FairQueue(CreditParams(budget=10.0), clock=clock)
+    t = q.tenant("t")
+    t.charge(ops=20.0)
+    with pytest.raises(ProtocolError) as ei:
+        q.admit("t", "op")
+    assert ei.value.code == E_OVER_BUDGET
+    assert t.n_rejected == 1
+    assert t.violations == 0.0                   # throttled, not punished
+    # the budget decays: the tenant is admitted again later
+    clock.advance(100.0)
+    q.admit("t", "op")
+
+
+def test_fair_queue_prefers_light_and_credited_tenants():
+    clock = FakeClock()
+    q = FairQueue(CreditParams(), clock=clock)
+    heavy, fresh = q.tenant("heavy"), q.tenant("fresh")
+    heavy.charge(ops=50.0, events=5000.0, wall=1.0)
+    heavy.pending.append("H")
+    fresh.pending.append("F")
+    picked, item = q.pick()
+    assert picked is fresh and item == "F"
+
+    # equal usage: the tenant with more credit (fewer violations) wins
+    q2 = FairQueue(CreditParams(), clock=clock)
+    a, b = q2.tenant("a"), q2.tenant("b")
+    for t in (a, b):
+        t.charge(ops=10.0)
+        t.pending.append(t.name)
+    b.violation(10.0)
+    picked, _ = q2.pick()
+    assert picked is a
+
+
+# --------------------------------------------------------------------------- #
+# live server: parity, eviction, fairness                                      #
+# --------------------------------------------------------------------------- #
+def _drive(port, tenant, plan, out, errs):
+    """One tenant thread: interleaved stepping across its sessions, then
+    run-to-exhaustion and result collection."""
+    try:
+        with Client("127.0.0.1", port, tenant=tenant) as c:
+            for name, seed in plan:
+                c.open(name, POLICY, nodes=NODES)
+                c.submit(name, workload="lublin", jobs=30, seed=seed,
+                         nodes=NODES)
+            for frac in (2000.0, 6000.0):
+                for name, _ in plan:
+                    c.step_until(name, frac)
+            for name, seed in plan:
+                c.run(name)
+                out[(tenant, name)] = norm_result(c.result(name))
+    except BaseException as exc:  # noqa: BLE001 — surfaced in the test
+        errs.append(exc)
+
+
+def test_concurrent_multi_tenant_parity_vs_serial(tmp_path):
+    out, errs, threads = {}, [], []
+    plans = {"acme": [("s0", 0), ("s1", 1)],
+             "umbrella": [("u0", 2), ("u1", 3)]}
+    with ServerThread(store=str(tmp_path / "store"), max_live=2) as srv:
+        for tenant, plan in plans.items():
+            th = threading.Thread(target=_drive,
+                                  args=(srv.port, tenant, plan, out, errs))
+            th.start()
+            threads.append(th)
+        for th in threads:
+            th.join(timeout=120)
+        assert not errs
+        with Client("127.0.0.1", srv.port) as c:
+            stats = c.stats()
+    # interleaved multi-tenant service == serial single-session runs
+    for tenant, plan in plans.items():
+        for name, seed in plan:
+            assert out[(tenant, name)] == serial_result(seed=seed), \
+                f"{tenant}/{name} diverged from the serial run"
+    # 4 sessions over max_live=2 forces the evict/rehydrate path
+    assert stats["registry"]["evictions"] > 0
+    assert stats["registry"]["rehydrations"] > 0
+    assert stats["registry"]["sessions"] == 4
+
+
+def test_eviction_is_transparent_to_the_client(tmp_path):
+    with ServerThread(store=str(tmp_path / "store"), max_live=1) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            for name, seed in [("a", 0), ("b", 1)]:
+                c.open(name, POLICY, nodes=NODES)
+                c.submit(name, workload="lublin", jobs=30, seed=seed,
+                         nodes=NODES)
+            # ping-pong between the two sessions: every switch evicts one
+            for t in (2000.0, 4000.0, 6000.0):
+                c.step_until("a", t)
+                c.step_until("b", t)
+            results = {n: norm_result(c.result(n))
+                       for n in ("a", "b") if c.run(n)}
+            stats = c.stats()
+    assert results["a"] == serial_result(seed=0)
+    assert results["b"] == serial_result(seed=1)
+    assert stats["registry"]["evictions"] >= 4
+
+
+def test_misbehaving_tenant_loses_credit(tmp_path):
+    with ServerThread(store=None) as srv:
+        with Client("127.0.0.1", srv.port, tenant="good") as good, \
+                Client("127.0.0.1", srv.port, tenant="evil") as evil:
+            good.open("g0", "EASY", nodes=NODES)
+            # the misbehaving tenant spams ops that error out
+            for i in range(25):
+                with pytest.raises(ServeError) as ei:
+                    evil.call("step", "ghost", n=1, seq=i)
+                assert ei.value.code == E_UNKNOWN_SESSION
+            stats = good.stats()["tenants"]
+    assert stats["evil"]["n_errors"] >= 25
+    assert stats["evil"]["violations"] > 0.5
+    assert stats["evil"]["credit"] < stats["good"]["credit"]
+    assert stats["good"]["credit"] > 0.9
+
+
+def test_wire_seq_dedup_and_close_semantics(tmp_path):
+    with ServerThread(store=str(tmp_path / "store")) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=10, nodes=NODES)
+            # explicit resend of an applied seq: acknowledged as dup
+            resp = c.call("submit", "s0", workload="lublin", jobs=10,
+                          nodes=NODES, seq=1)
+            assert resp["dup"] is True
+            # a seq gap is a typed refusal
+            with pytest.raises(ServeError) as ei:
+                c.call("step", "s0", n=1, seq=9)
+            assert ei.value.code == E_SEQ_GAP
+
+            c.run("s0")
+            closed = c.close_session("s0")
+            assert closed["closed"] is True
+            with pytest.raises(ServeError) as ei:
+                c.step("s0")
+            assert ei.value.code == E_SESSION_CLOSED
+            # reads still work: the closed session rehydrates from disk
+            assert norm_result(c.result("s0")) == serial_result(
+                policy="EASY", jobs=10)
+            assert c.sessions() == ["s0"]
+
+
+def test_name_validation_and_unknown_ops(tmp_path):
+    with ServerThread(store=None) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            for bad in ("../evil", "a/b", "", "x" * 65, ".hidden"):
+                with pytest.raises(ServeError) as ei:
+                    c.open(bad, "EASY")
+                assert ei.value.code == E_BAD_REQUEST
+            with pytest.raises(ServeError) as ei:
+                c.call("frobnicate", "s0")
+            assert ei.value.code == E_BAD_REQUEST
+            # tenant names are checked too
+            bad = Client("127.0.0.1", srv.port, tenant="../../etc")
+            with pytest.raises(ServeError) as ei:
+                bad.ping()
+            bad.close()
+            assert ei.value.code == E_BAD_REQUEST
+
+
+def test_hello_stats_and_snapshot_op(tmp_path):
+    with ServerThread(store=str(tmp_path / "store"),
+                      credit=CreditParams(budget=123.0)) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            hello = c.hello()
+            assert hello["limits"]["budget"] == 123.0
+            assert 0 < hello["credit"] <= 1.0
+            c.open("s0", "EASY", nodes=NODES)
+            snap = c.snapshot("s0")
+            assert snap["fingerprint"] and os.path.exists(snap["path"])
+            stats = c.stats()
+            assert stats["registry"]["sessions"] == 1
+            assert stats["backlog"] == 0
+
+
+def test_snapshot_without_store_is_refused():
+    with ServerThread(store=None) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            with pytest.raises(ServeError) as ei:
+                c.snapshot("s0")
+            assert ei.value.code == E_BAD_REQUEST
+
+
+def test_checkpoint_every_bounds_replay(tmp_path):
+    store = str(tmp_path / "store")
+    with ServerThread(store=store, checkpoint_every=2) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=10, nodes=NODES)
+            c.step_until("s0", 2000.0)
+            c.step_until("s0", 3000.0)
+    # auto-checkpoints kept the journal short (≤ checkpoint_every entries)
+    entries = SessionStore(store).read_journal("t", "s0")
+    assert len(entries) < 4
+
+
+# --------------------------------------------------------------------------- #
+# crash recovery: a real server process, SIGKILL mid-workload                  #
+# --------------------------------------------------------------------------- #
+def _spawn_server(store, port_file):
+    proc = subprocess.Popen(
+        [sys.executable, "-m", "repro", "serve", "--store", store,
+         "--port-file", port_file],
+        stdout=subprocess.PIPE, stderr=subprocess.STDOUT,
+        env={**os.environ, "PYTHONPATH": os.pathsep.join(sys.path)})
+    deadline = time.monotonic() + 60
+    while time.monotonic() < deadline:
+        if os.path.exists(port_file):
+            return proc, int(open(port_file).read())
+        if proc.poll() is not None:
+            raise RuntimeError("server died at startup:\n"
+                               + proc.stdout.read().decode())
+        time.sleep(0.05)
+    proc.kill()
+    raise RuntimeError("server did not announce a port within 60s")
+
+
+def test_kill9_recovery_is_bit_identical(tmp_path):
+    store, port_file = str(tmp_path / "store"), str(tmp_path / "port")
+    proc, port = _spawn_server(store, port_file)
+    try:
+        with Client("127.0.0.1", port, tenant="t") as c:
+            c.open("s0", POLICY, nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=30, seed=0, nodes=NODES)
+            c.step_until("s0", 4000.0)
+        os.kill(proc.pid, signal.SIGKILL)        # no cleanup, no persist
+        proc.wait(timeout=30)
+        os.unlink(port_file)
+
+        proc, port = _spawn_server(store, port_file)
+        c = Client("127.0.0.1", port, tenant="t", retry_for=10.0)
+        # re-drive the full script: the applied prefix dedupes, the rest
+        # applies fresh — exactly-once end to end
+        assert c.call("open", "s0", seq=0, **OPEN)["dup"]
+        assert c.call("submit", "s0", seq=1, **SUBMIT)["dup"]
+        assert c.call("step_until", "s0", seq=2, t=4000.0)["dup"]
+        c.call("run", "s0", seq=3)
+        got = norm_result(c.result("s0"))
+        c.close()
+    finally:
+        proc.kill()
+        proc.wait(timeout=30)
+    assert got == serial_result(until=4000.0)
+
+
+# --------------------------------------------------------------------------- #
+# CLI: the client script driver                                                #
+# --------------------------------------------------------------------------- #
+def test_cli_client_script(tmp_path):
+    from repro.__main__ import main as cli_main
+    script = tmp_path / "script.jsonl"
+    script.write_text("\n".join([
+        '# comment lines and blanks are skipped',
+        '',
+        json.dumps({"op": "open", "session": "s0", "policy": "EASY",
+                    "nodes": NODES}),
+        json.dumps({"op": "submit", "session": "s0", "workload": "lublin",
+                    "jobs": 10, "nodes": NODES}),
+        json.dumps({"op": "run", "session": "s0"}),
+        json.dumps({"op": "result", "session": "s0"}),
+    ]) + "\n")
+    out = tmp_path / "out.jsonl"
+    with ServerThread(store=None) as srv:
+        rc = cli_main(["client", "--port", str(srv.port), "--tenant", "t",
+                       "--script", str(script), "--metrics", str(out)])
+    assert rc == 0
+    lines = [json.loads(l) for l in out.read_text().splitlines()]
+    assert [l["kind"] for l in lines] == ["open", "submit", "run", "result"]
+    assert all(l["ok"] for l in lines)
+    assert norm_result(lines[-1]) == serial_result(policy="EASY", jobs=10)
+
+
+def test_cli_client_error_paths(tmp_path, capsys):
+    from repro.__main__ import main as cli_main
+    script = tmp_path / "script.jsonl"
+    script.write_text(json.dumps({"op": "step", "session": "nope"}) + "\n")
+    with ServerThread(store=None) as srv:
+        rc = cli_main(["client", "--port", str(srv.port),
+                       "--script", str(script)])
+        assert rc == 2
+        assert "unknown session" in capsys.readouterr().err
+        # --keep-going turns refusals into error lines, rc 0
+        out = tmp_path / "out.jsonl"
+        rc = cli_main(["client", "--port", str(srv.port),
+                       "--script", str(script), "--keep-going",
+                       "--metrics", str(out)])
+        assert rc == 0
+        line = json.loads(out.read_text())
+        assert line["kind"] == "error"
+        assert line["code"] == E_UNKNOWN_SESSION
+
+
+# --------------------------------------------------------------------------- #
+# atomic writes under concurrent writers                                       #
+# --------------------------------------------------------------------------- #
+def test_atomic_write_two_writer_stress(tmp_path):
+    """Concurrent writers to one path + a live reader: every read parses,
+    every read is one writer's complete payload, no tmp files leak."""
+    path = str(tmp_path / "shared.json")
+    atomic_write_json(path, {"writer": -1, "n": -1})
+    errs, stop = [], threading.Event()
+
+    def writer(wid):
+        try:
+            for n in range(200):
+                atomic_write_json(path, {"writer": wid, "n": n})
+        except BaseException as exc:  # noqa: BLE001
+            errs.append(exc)
+
+    def reader():
+        try:
+            while not stop.is_set():
+                payload = json.load(open(path))
+                assert set(payload) == {"writer", "n"}
+        except BaseException as exc:  # noqa: BLE001
+            errs.append(exc)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+    threads.append(threading.Thread(target=reader))
+    for th in threads:
+        th.start()
+    for th in threads[:-1]:
+        th.join(timeout=60)
+    stop.set()
+    threads[-1].join(timeout=60)
+    assert not errs
+    final = json.load(open(path))
+    assert final["n"] == 199                     # some writer's last write
+    leftovers = [f for f in os.listdir(tmp_path) if ".tmp." in f]
+    assert leftovers == []

@@ -250,6 +250,112 @@ def test_snapshot_refuses_anonymous_policy_without_override():
 
 
 # --------------------------------------------------------------------------- #
+# lifecycle: close, hooks, context manager                                     #
+# --------------------------------------------------------------------------- #
+def test_close_is_idempotent_and_runs_hooks_once():
+    ses = open_session(16, "FCFS")
+    calls = []
+    ses.add_close_hook(lambda s: calls.append(s))
+    assert not ses.closed
+    ses.close()
+    ses.close()                     # idempotent: hooks don't re-run
+    assert ses.closed
+    assert calls == [ses]
+
+
+def test_context_manager_closes_and_refuses_reentry():
+    with open_session(16, "FCFS") as ses:
+        ses.submit(make_trace(W_SMALL))
+        ses.run_to_exhaustion()
+    assert ses.closed
+    with pytest.raises(ValueError, match="closed"):
+        with ses:
+            pass
+
+
+def test_ops_after_close_raise_reads_still_work():
+    ses = open_session(16, "FCFS")
+    ses.submit(make_trace(W_SMALL))
+    ses.run_to_exhaustion()
+    ses.close()
+    for call in (lambda: ses.submit(make_trace(W_SMALL)),
+                 lambda: ses.inject({"kind": "fail", "t": 1.0,
+                                     "nodes": [0]}),
+                 lambda: ses.step_until(1e9),
+                 lambda: ses.step(),
+                 lambda: ses.run_to_exhaustion(),
+                 lambda: ses.set_period(600.0),
+                 lambda: ses.snapshot()):
+        with pytest.raises(ValueError, match="closed"):
+            call()
+    # a holder can still collect metrics from a closed session
+    assert ses.observe()["exhausted"]
+    assert len(ses.result().completions) == 25
+
+
+def test_close_hook_registered_after_close_runs_immediately():
+    ses = open_session(16, "FCFS")
+    ses.close()
+    calls = []
+    ses.add_close_hook(lambda s: calls.append(s))
+    assert calls == [ses]
+
+
+def test_close_hook_errors_propagate_but_every_hook_runs():
+    ses = open_session(16, "FCFS")
+    calls = []
+
+    def bad(_):
+        raise RuntimeError("hook boom")
+
+    ses.add_close_hook(bad)
+    ses.add_close_hook(lambda s: calls.append("ran"))
+    with pytest.raises(RuntimeError, match="hook boom"):
+        ses.close()
+    assert calls == ["ran"]         # the later hook still ran
+    assert ses.closed               # and the session is closed regardless
+
+
+# --------------------------------------------------------------------------- #
+# snapshot schema versioning                                                   #
+# --------------------------------------------------------------------------- #
+def test_snapshot_carries_version_and_round_trips():
+    from repro.sched.session import SNAPSHOT_VERSION
+    specs, events, params = _cell(W_SMALL, "FCFS")
+    ses = _session_for(specs, "FCFS", params, events)
+    ses.step(3)
+    snap = ses.snapshot()
+    assert snap.payload["version"] == SNAPSHOT_VERSION
+    ref = Engine(specs, "FCFS", params, cluster_events=events).run()
+    assert _result_dict(SimSession.restore(snap).run()) == _result_dict(ref)
+    # pre-versioning (v1) snapshots carry no version key and still restore
+    legacy = ses.snapshot()
+    del legacy.payload["version"]
+    assert _result_dict(SimSession.restore(legacy).run()) \
+        == _result_dict(ref)
+
+
+def test_snapshot_version_mismatch_is_a_clear_error():
+    ses = open_session(16, "FCFS")
+    snap = ses.snapshot()
+    snap.payload["version"] = 99
+    with pytest.raises(ValueError, match="version 99 is not supported"):
+        SimSession.restore(snap)
+
+
+def test_snapshot_missing_key_is_a_clear_error():
+    """A truncated/foreign payload used to die with an opaque KeyError
+    deep in restore; now it's a ValueError naming the missing keys."""
+    ses = open_session(16, "FCFS")
+    snap = ses.snapshot()
+    del snap.payload["vt"]
+    del snap.payload["mappings"]
+    with pytest.raises(ValueError,
+                       match=r"missing required keys \['mappings', 'vt'\]"):
+        SimSession.restore(snap)
+
+
+# --------------------------------------------------------------------------- #
 # online ingest: submit / inject                                               #
 # --------------------------------------------------------------------------- #
 def test_open_session_submit_then_run_equals_engine_run():
