@@ -5,6 +5,9 @@ adds the two things a caller should never hand-roll:
 
 * **per-session sequence numbers** — every mutating op is stamped with
   the next ``seq`` for its session, making it idempotent on the wire;
+  the counter resyncs from the ``next_seq`` the server echoes on every
+  mutating response (success, dup or error), so an engine-rejected op —
+  which still consumed its journaled seq — cannot desync the stream;
 * **reconnect-and-resend** — with ``retry_for > 0`` a dropped connection
   (server restart, ``kill -9`` + recover) is retried transparently: the
   in-flight op is re-sent with its original seq, so an op the server
@@ -121,11 +124,20 @@ class Client:
                 if time.monotonic() >= deadline:
                     raise
                 time.sleep(0.2)     # server restarting; resend same seq
+        if mutating and session is not None and "next_seq" in resp:
+            # the server's authoritative next expected seq — present on
+            # success, dup AND error responses.  An op the engine rejected
+            # (op-error) still consumed its seq (it was journaled), so
+            # syncing only on success would leave every later op answered
+            # as a stale dup; resync unconditionally instead
+            self._seq[session] = int(resp["next_seq"])
         if not resp.get("ok", False):
             raise ServeError(resp.get("code", "error"),
                              resp.get("error", "unknown server error"))
-        if mutating and session is not None:
+        if mutating and session is not None and "next_seq" not in resp:
             self._seq[session] = int(req["seq"]) + 1
+        if op == "delete" and session is not None:
+            self._seq.pop(session, None)    # a reused name restarts at 0
         return resp
 
     # -- convenience wrappers -----------------------------------------------
@@ -172,6 +184,11 @@ class Client:
 
     def close_session(self, session: str) -> Dict[str, Any]:
         return self.call("close", session)
+
+    def delete_session(self, session: str) -> Dict[str, Any]:
+        """Forget a closed session server-side, freeing its name and
+        reclaiming its snapshot/journal files."""
+        return self.call("delete", session)
 
     def shutdown_server(self) -> Dict[str, Any]:
         return self.call("shutdown")

@@ -19,9 +19,16 @@ and responses echo the ``id``::
   answered ``{"ok": true, "dup": true}`` without re-applying, which makes
   client retries after a connection loss (or a server ``kill -9`` +
   restart) exactly-once: the journal replay plus seq dedup reproduce the
-  uninterrupted run bit for bit.
+  uninterrupted run bit for bit.  Every mutating response — success,
+  dup or error — also carries ``next_seq``, the session's authoritative
+  next expected seq, so clients resync instead of guessing whether a
+  failed op consumed one (a journaled op that the engine rejected did).
 * **read-only ops** (``observe``/``result``/``snapshot``/``stats``/…) —
   never journaled, no seq.
+* ``delete`` — reclamation: forget a *closed* session (registry entry +
+  snapshot/journal files), freeing its name for reuse.  Not journaled —
+  its effect is removing the journal — and naturally idempotent (a
+  repeat answers ``unknown-session``).
 
 Everything a mutating op does must be a *deterministic* function of its
 journaled ``(op, args)`` — that is what makes crash recovery a replay.

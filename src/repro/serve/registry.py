@@ -270,6 +270,11 @@ class SessionRegistry:
             if ent is not None:
                 if seq is not None and seq < ent.seq:
                     return self._dup(ent, seq)  # idempotent re-open
+                if ent.closed:
+                    raise ProtocolError(
+                        E_SESSION_CLOSED,
+                        f"session {tenant}/{name} is closed "
+                        f"(seq={ent.seq}); delete it to reuse the name")
                 raise ProtocolError(
                     E_BAD_REQUEST,
                     f"session {tenant}/{name} already exists "
@@ -336,6 +341,39 @@ class SessionRegistry:
         fp = self._persist(ent)
         return {"seq": ent.seq, "fingerprint": fp,
                 "path": self.store.snap_path(tenant, name)}
+
+    # -- reclamation --------------------------------------------------------
+    def delete_session(self, tenant: str, name: str) -> Dict[str, Any]:
+        """Forget a *closed* session entirely: drop its registry entry and
+        remove its snapshot/journal files, freeing the name for reuse.
+        The reclamation path for long-lived servers — without it closed
+        entries (and their disk state) accumulate forever."""
+        key = (tenant, name)
+        ent = self.entries.get(key)
+        if ent is None:
+            raise ProtocolError(
+                E_UNKNOWN_SESSION,
+                f"unknown session {tenant}/{name}; nothing to delete")
+        if not ent.closed:
+            raise ProtocolError(
+                E_BAD_REQUEST,
+                f"session {tenant}/{name} is still open; close it "
+                f"before deleting")
+        self._drop(ent)
+        return {"deleted": True, "seq": ent.seq}
+
+    def _drop(self, ent: _Entry) -> None:
+        """Remove an entry and all its durable state (the point of no
+        return: the name is fresh afterwards)."""
+        if ent.journal_fh is not None:
+            ent.journal_fh.close()
+            ent.journal_fh = None
+        if ent.live:
+            ses, ent.session = ent.session, None
+            ses.close()
+        self.entries.pop((ent.tenant, ent.name), None)
+        if self.store.persistent:
+            self.store.delete(ent.tenant, ent.name)
 
     # -- eviction -----------------------------------------------------------
     def evict(self, tenant: str, name: str) -> None:
@@ -451,7 +489,15 @@ class SessionRegistry:
     def _apply_live(self, ent: _Entry, op: str,
                     args: Dict[str, Any]) -> Dict[str, Any]:
         if op == "open":
-            ent.session = build_session(args)
+            try:
+                ent.session = build_session(args)
+            except Exception:
+                # a failed open can never yield a usable session, and its
+                # journaled op would poison every later rehydrate of the
+                # entry — erase it (entry + journal) so the name stays
+                # fresh and a corrected open can apply at seq 0
+                self._drop(ent)
+                raise
             return {"policy": ent.session.policy_name,
                     **ent.session.observe()}
         if op == "close":

@@ -76,11 +76,17 @@ class SchedServer:
         self._stopped = asyncio.Event()
         self._dispatcher: Optional[asyncio.Task] = None
         self._events_seen: Dict[Tuple[str, str], int] = {}
+        self._last_idle_sweep = time.monotonic()
         self.started_at = time.monotonic()
 
     # -- lifecycle ----------------------------------------------------------
     async def start(self) -> None:
         self.n_recovered = self.registry.recover()
+        # rebuild per-tenant session sets so max_sessions keeps counting
+        # recovered (still-open) sessions across restarts
+        for (tenant, name), ent in self.registry.entries.items():
+            if not ent.closed:
+                self.queue.tenant(tenant).sessions.add(name)
         self._server = await asyncio.start_server(
             self._on_connection, self.config.host, self.config.port)
         self.port = self._server.sockets[0].getsockname()[1]
@@ -136,7 +142,7 @@ class SchedServer:
                 await writer.drain()
                 return
             if op not in MUTATING_OPS and op not in (
-                    "observe", "result", "snapshot", "sessions"):
+                    "observe", "result", "snapshot", "sessions", "delete"):
                 raise ProtocolError(E_BAD_REQUEST, f"unknown op {op!r}")
             # admission happens here, on the reader: refused ops never
             # enter the dispatcher queue
@@ -190,6 +196,7 @@ class SchedServer:
                     idle.cancel()
                     done.cancel()
                 self.registry.evict_idle()
+                self._last_idle_sweep = time.monotonic()
                 continue
             tenant_state, pending = picked
             t0 = time.perf_counter()
@@ -206,6 +213,12 @@ class SchedServer:
             except (ConnectionError, OSError):
                 pass                # client went away; the op still counts
             self.registry.evict_over_cap()
+            # idle eviction must also fire under sustained load, not only
+            # when the queue drains — sweep at most once a second
+            now = time.monotonic()
+            if now - self._last_idle_sweep >= 1.0:
+                self.registry.evict_idle()
+                self._last_idle_sweep = now
             # yield so reader tasks can enqueue between ops (fairness is
             # decided by the queue, not by who holds the loop)
             await asyncio.sleep(0)
@@ -218,8 +231,13 @@ class SchedServer:
         if total is None or not isinstance(session, str):
             return 0.0
         key = (tenant, session)
-        prev = self._events_seen.get(key, 0)
+        prev = self._events_seen.get(key)
         self._events_seen[key] = int(total)
+        if prev is None:
+            # first sighting establishes the baseline: a freshly opened
+            # session reports ~0 anyway, and a session recovered after a
+            # restart must not have its lifetime count charged as a delta
+            return 0.0
         return float(max(0, int(total) - prev))
 
     # -- op execution --------------------------------------------------------
@@ -227,45 +245,67 @@ class SchedServer:
         req_id = req.get("id")
         op = req["op"]
         try:
-            if op == "sessions":
-                return {"id": req_id, "ok": True,
-                        "sessions": self.registry.sessions_of(tenant)}
-            name = check_name("session", req.get("session"))
-            if op in MUTATING_OPS:
-                if op == "open":
-                    t = self.queue.tenant(tenant)
-                    if (name not in t.sessions and len(t.sessions)
-                            >= self.queue.params.max_sessions):
-                        raise ProtocolError(
-                            E_BAD_REQUEST,
-                            f"tenant {tenant!r} is at its session cap "
-                            f"({self.queue.params.max_sessions})")
-                payload = self.registry.apply_mutating(
-                    tenant, name, op, op_args(req), seq=req.get("seq"))
-                self.queue.tenant(tenant).sessions.add(name)
-                ce = self.config.checkpoint_every
-                if (ce > 0 and not payload.get("dup")
-                        and self.store.persistent):
-                    ent = self.registry.entries.get((tenant, name))
-                    if (ent is not None and not ent.closed
-                            and ent.seq - ent.snap_seq >= ce):
-                        self.registry.checkpoint(tenant, name)
-                return {"id": req_id, "ok": True, **payload}
-            if op == "observe":
-                ses = self.registry.live_session(tenant, name)
-                return {"id": req_id, "ok": True, **ses.observe()}
-            if op == "result":
-                ses = self.registry.live_session(tenant, name)
-                return {"id": req_id, "ok": True, **result_payload(ses)}
-            if op == "snapshot":
-                payload = self.registry.checkpoint(tenant, name)
-                return {"id": req_id, "ok": True, **payload}
-            raise ProtocolError(E_BAD_REQUEST, f"unknown op {op!r}")
+            resp = self._execute_inner(tenant, req_id, op, req)
         except ProtocolError as exc:
-            return error_response(req_id, exc.code, str(exc))
+            resp = error_response(req_id, exc.code, str(exc))
         except Exception as exc:    # noqa: BLE001 — op failed in the engine
-            return error_response(
+            resp = error_response(
                 req_id, E_OP_ERROR, f"{type(exc).__name__}: {exc}")
+        if op in MUTATING_OPS and isinstance(req.get("session"), str):
+            # every mutating response carries the session's authoritative
+            # next expected seq — an engine-rejected op still consumed its
+            # seq (it was journaled), and the client resyncs from this
+            # instead of guessing which failures consumed one
+            ent = self.registry.entries.get((tenant, req["session"]))
+            if ent is not None:
+                resp.setdefault("next_seq", ent.seq)
+        return resp
+
+    def _execute_inner(self, tenant: str, req_id: Any, op: str,
+                       req: Dict[str, Any]) -> Dict[str, Any]:
+        if op == "sessions":
+            return {"id": req_id, "ok": True,
+                    "sessions": self.registry.sessions_of(tenant)}
+        name = check_name("session", req.get("session"))
+        if op in MUTATING_OPS:
+            t = self.queue.tenant(tenant)
+            if op == "open":
+                if (name not in t.sessions and len(t.sessions)
+                        >= self.queue.params.max_sessions):
+                    raise ProtocolError(
+                        E_BAD_REQUEST,
+                        f"tenant {tenant!r} is at its session cap "
+                        f"({self.queue.params.max_sessions})")
+            payload = self.registry.apply_mutating(
+                tenant, name, op, op_args(req), seq=req.get("seq"))
+            if op == "close":
+                t.sessions.discard(name)
+                self._events_seen.pop((tenant, name), None)
+            else:
+                t.sessions.add(name)
+            ce = self.config.checkpoint_every
+            if (ce > 0 and not payload.get("dup")
+                    and self.store.persistent):
+                ent = self.registry.entries.get((tenant, name))
+                if (ent is not None and not ent.closed
+                        and ent.seq - ent.snap_seq >= ce):
+                    self.registry.checkpoint(tenant, name)
+            return {"id": req_id, "ok": True, **payload}
+        if op == "observe":
+            ses = self.registry.live_session(tenant, name)
+            return {"id": req_id, "ok": True, **ses.observe()}
+        if op == "result":
+            ses = self.registry.live_session(tenant, name)
+            return {"id": req_id, "ok": True, **result_payload(ses)}
+        if op == "snapshot":
+            payload = self.registry.checkpoint(tenant, name)
+            return {"id": req_id, "ok": True, **payload}
+        if op == "delete":
+            payload = self.registry.delete_session(tenant, name)
+            self.queue.tenant(tenant).sessions.discard(name)
+            self._events_seen.pop((tenant, name), None)
+            return {"id": req_id, "ok": True, **payload}
+        raise ProtocolError(E_BAD_REQUEST, f"unknown op {op!r}")
 
 
 async def _amain(config: ServeConfig, announce) -> None:

@@ -31,8 +31,8 @@ from repro import api
 from repro.core.ioutil import atomic_write_json
 from repro.serve.admission import CreditParams, FairQueue, TenantState
 from repro.serve.client import Client, ServeError
-from repro.serve.protocol import (E_ADMISSION, E_BAD_REQUEST, E_OVER_BUDGET,
-                                  E_SEQ_GAP, E_SESSION_CLOSED,
+from repro.serve.protocol import (E_ADMISSION, E_BAD_REQUEST, E_OP_ERROR,
+                                  E_OVER_BUDGET, E_SEQ_GAP, E_SESSION_CLOSED,
                                   E_UNKNOWN_SESSION, ProtocolError)
 from repro.serve.registry import SessionRegistry, SessionStore
 from repro.serve.server import ServeConfig, ServerThread
@@ -525,6 +525,113 @@ def test_checkpoint_every_bounds_replay(tmp_path):
     # auto-checkpoints kept the journal short (≤ checkpoint_every entries)
     entries = SessionStore(store).read_journal("t", "s0")
     assert len(entries) < 4
+
+
+def test_client_resyncs_seq_after_engine_rejected_op(tmp_path):
+    """An op the engine rejects (op-error) was journaled, so it consumed
+    its seq.  The client must resync from the response's ``next_seq`` —
+    otherwise every later op re-sends a stale seq and is swallowed as a
+    dup: silent op loss reported as success."""
+    with ServerThread(store=str(tmp_path / "store")) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=10, nodes=NODES)
+            with pytest.raises(ServeError) as ei:
+                c.step("s0", n=0)       # engine rejects: n_events must be >= 1
+            assert ei.value.code == E_OP_ERROR
+            # the failed op consumed a seq; the next ops must APPLY, not dup
+            resp = c.step("s0", n=1)
+            assert "dup" not in resp and resp["steps"] == 1
+            resp = c.run("s0")
+            assert "dup" not in resp
+            assert norm_result(c.result("s0")) == serial_result(
+                policy="EASY", jobs=10)
+
+
+def test_closed_name_delete_and_reuse(tmp_path):
+    store = str(tmp_path / "store")
+    with ServerThread(store=store) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=5, nodes=NODES)
+            c.run("s0")
+            # deleting a still-open session is refused
+            with pytest.raises(ServeError) as ei:
+                c.delete_session("s0")
+            assert ei.value.code == E_BAD_REQUEST
+            c.close_session("s0")
+            # the event-accounting baseline is dropped with the session
+            assert ("t", "s0") not in srv.server._events_seen
+            # re-opening a closed name gets the accurate refusal
+            with pytest.raises(ServeError) as ei:
+                c.open("s0", "EASY", nodes=NODES)
+            assert ei.value.code == E_SESSION_CLOSED
+            assert "delete" in str(ei.value)
+            paths = SessionStore(store)
+            assert os.path.exists(paths.snap_path("t", "s0"))
+            assert c.delete_session("s0")["deleted"] is True
+            assert not os.path.exists(paths.snap_path("t", "s0"))
+            assert not os.path.exists(paths.journal_path("t", "s0"))
+            with pytest.raises(ServeError) as ei:
+                c.delete_session("s0")
+            assert ei.value.code == E_UNKNOWN_SESSION
+            # the name is free again: a fresh session starting at seq 0
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=10, nodes=NODES)
+            c.run("s0")
+            assert norm_result(c.result("s0")) == serial_result(
+                policy="EASY", jobs=10)
+
+
+def test_failed_open_does_not_poison_the_name(tmp_path):
+    """An ``open`` the engine rejects (bad policy) must not leave a
+    journaled entry behind — it could never rehydrate, so the name would
+    be stuck forever.  The entry is erased and a corrected open applies
+    fresh at seq 0."""
+    with ServerThread(store=str(tmp_path / "store")) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            with pytest.raises(ServeError) as ei:
+                c.open("s0", "NOSUCH-POLICY", nodes=NODES)
+            assert ei.value.code == E_OP_ERROR
+            c.open("s0", "EASY", nodes=NODES)
+            c.submit("s0", workload="lublin", jobs=10, nodes=NODES)
+            c.run("s0")
+            assert norm_result(c.result("s0")) == serial_result(
+                policy="EASY", jobs=10)
+
+
+def test_session_cap_prunes_on_close_and_survives_restart(tmp_path):
+    store = str(tmp_path / "store")
+    with ServerThread(store=store,
+                      credit=CreditParams(max_sessions=1)) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            c.open("s0", "EASY", nodes=NODES)
+            with pytest.raises(ServeError) as ei:
+                c.open("s1", "EASY", nodes=NODES)
+            assert "session cap" in str(ei.value)
+            # the cap counts OPEN sessions: closing s0 frees the slot
+            c.close_session("s0")
+            c.open("s1", "EASY", nodes=NODES)
+    # restart: recovered still-open sessions count against the cap again
+    with ServerThread(store=store,
+                      credit=CreditParams(max_sessions=1)) as srv:
+        with Client("127.0.0.1", srv.port, tenant="t") as c:
+            assert c.stats()["tenants"]["t"]["sessions"] == 1  # s1 only
+            with pytest.raises(ServeError) as ei:
+                c.open("s2", "EASY", nodes=NODES)
+            assert "session cap" in str(ei.value)
+
+
+def test_events_charge_baselines_on_first_sighting():
+    """A session first seen with a big lifetime event count (recovery
+    after restart) establishes a baseline — it is not charged as a fresh
+    delta that would spuriously exhaust the tenant's budget."""
+    from repro.serve.server import SchedServer
+    srv = SchedServer(ServeConfig())
+    req = {"session": "s0"}
+    assert srv._events_delta("t", req, {"events": 5000}) == 0.0
+    assert srv._events_delta("t", req, {"events": 5600}) == 600.0
+    assert srv._events_delta("t", req, {"events": 5500}) == 0.0
 
 
 # --------------------------------------------------------------------------- #
