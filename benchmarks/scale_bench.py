@@ -1,0 +1,230 @@
+"""Million-job scale benchmark → machine-readable BENCH_scale.json.
+
+Measures the three claims of the O(active)-engine work at trace scales the
+materialized path cannot reach:
+
+* **bounded RSS** — a synthetic Standard-Workload-Format log is *generated
+  line by line* (never held in memory), streamed through the ``swf-stream``
+  workload kind into a compacting :class:`SimSession`, and the process
+  RSS ceiling (``ru_maxrss``) plus the engine's peak row capacity are
+  recorded per scale;
+* **throughput** — events/s at each scale, so per-event cost degrading
+  with *total* jobs (rather than *active* jobs) shows up as a falling
+  curve across 10^4 → 10^5 → 10^6;
+* **parity** — at the overlap scale the streamed + compacted run must
+  produce a ``SimResult`` *bit-identical* to the submit-everything-upfront,
+  never-compacted oracle (the same discipline as ``alloc_reference``).
+
+CLI (used by the CI scale-smoke job)::
+
+    PYTHONPATH=src python -m benchmarks.scale_bench --scales 1e4,1e5 \
+        --rss-cap-mb 1500
+
+Exits non-zero on a parity mismatch or a blown RSS cap only — wall time is
+recorded, never gated (throttled-box convention).  ``--full`` adds the
+10^6-job scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import resource
+import sys
+import tempfile
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.api import open_session
+from repro.sched.engine import SimParams
+from repro.workloads.hpc2n import NODE_MEM_GB
+from repro.workloads.registry import WorkloadSpec, make_trace_ir, stream_trace
+
+BENCH_JSON = "BENCH_scale.json"
+POLICY = "FCFS"
+N_NODES = 64
+COMPACT_INTERVAL = 4096
+PARITY_JOBS = 20_000
+
+# synthetic-log shape: mean work per job after §5.3.1 preprocessing is
+# 0.5 * E[procs] * E[run] ~ 0.5 * 16.5 * 3030 ~ 25k cpu-s, so a mean gap of
+# 800 s offers ~0.5 load to the 64-node cluster — stable, which is what
+# keeps the *active* set (and therefore per-event cost) bounded
+MEAN_GAP_S = 800.0
+RUN_RANGE_S = (60.0, 6000.0)
+WINDOW_S = 4 * 86_400.0   # ~430 jobs per streamed chunk
+
+
+def generate_swf(path: str, n_jobs: int, seed: int = 0,
+                 chunk: int = 50_000) -> None:
+    """Write ``n_jobs`` synthetic swf rows to ``path``, ``chunk`` rows of
+    state at a time — generation itself is memory-bounded."""
+    rng = np.random.default_rng(seed)
+    node_kb = NODE_MEM_GB * 1024 * 1024
+    t = 0.0
+    with open(path, "w") as fh:
+        fh.write(f"; synthetic scale-bench log: {n_jobs} jobs, seed {seed}\n")
+        jid = 0
+        while jid < n_jobs:
+            m = min(chunk, n_jobs - jid)
+            gaps = rng.exponential(MEAN_GAP_S, size=m)
+            runs = rng.uniform(*RUN_RANGE_S, size=m)
+            procs = rng.integers(1, 33, size=m)
+            mems = rng.uniform(0.05, 0.45, size=m) * node_kb
+            for g, run, p, mem in zip(gaps, runs, procs, mems):
+                t += float(g)
+                f = ["-1"] * 18
+                f[0] = str(jid + 1)
+                f[1] = f"{t:.1f}"
+                f[3] = f"{run:.1f}"
+                f[4] = str(int(p))
+                f[6] = f"{mem:.0f}"
+                fh.write(" ".join(f) + "\n")
+                jid += 1
+
+
+def _rss_mb() -> float:
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+
+def run_scale(path: str, n_jobs: int, window_s: float = WINDOW_S) -> dict:
+    """Stream ``path`` through a compacting session; record RSS + events/s."""
+    wspec = WorkloadSpec("swf-stream", n_jobs=n_jobs, n_nodes=N_NODES,
+                         params={"path": path, "window": window_s})
+    ses = open_session(SimParams(n_nodes=N_NODES,
+                                 compact_interval=COMPACT_INTERVAL), POLICY)
+    st = ses.engine.state
+    peak = {"capacity": 0, "live": 0}
+
+    def watched():
+        for ch in stream_trace(wspec):
+            peak["capacity"] = max(peak["capacity"], st.capacity)
+            peak["live"] = max(peak["live"], len(st.specs))
+            yield ch
+
+    t0 = time.perf_counter()
+    ses.stream(watched())
+    wall = time.perf_counter() - t0
+    peak["capacity"] = max(peak["capacity"], st.capacity)
+    r = ses.result(light=True)
+    return {
+        "n_jobs": n_jobs,
+        "events": r.events,
+        "wall_s": round(wall, 2),
+        "events_per_sec": round(r.events / max(wall, 1e-9), 1),
+        "ru_maxrss_mb": round(_rss_mb(), 1),
+        "peak_row_capacity": int(peak["capacity"]),
+        "peak_live_rows": int(peak["live"]),
+        "final_live_rows": len(st.specs),
+        "retired_rows": len(st.retired),
+        "grow_count": st.grow_count,
+        "mean_stretch": r.mean_stretch,
+        "makespan": r.makespan,
+    }
+
+
+def run_parity(path: str, n_jobs: int = PARITY_JOBS) -> dict:
+    """Streamed + compacted vs upfront + uncompacted: exact SimResult
+    equality at a scale the materialized path still handles comfortably."""
+    import dataclasses
+
+    w_mat = WorkloadSpec("swf", n_jobs=n_jobs, n_nodes=N_NODES,
+                         params={"path": path})
+    w_str = WorkloadSpec("swf-stream", n_jobs=n_jobs, n_nodes=N_NODES,
+                         params={"path": path, "window": WINDOW_S})
+
+    s_ref = open_session(SimParams(n_nodes=N_NODES), POLICY)
+    s_ref.submit(make_trace_ir(w_mat))
+    r_ref = s_ref.run()
+
+    s_cmp = open_session(SimParams(n_nodes=N_NODES,
+                                   compact_interval=1000), POLICY)
+    s_cmp.stream(stream_trace(w_str))
+    r_cmp = s_cmp.result()
+
+    ok = r_ref == r_cmp
+    diff: List[str] = []
+    if not ok:
+        a, b = dataclasses.asdict(r_ref), dataclasses.asdict(r_cmp)
+        diff = [k for k in a if a[k] != b[k] and k != "sim_wall_s"]
+    return {"n_jobs": n_jobs, "ok": bool(ok), "diverging_fields": diff}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scales", default="1e4,1e5",
+                    help="comma-separated job counts (default 1e4,1e5)")
+    ap.add_argument("--full", action="store_true",
+                    help="append the 10^6-job scale")
+    ap.add_argument("--rss-cap-mb", type=float, default=None,
+                    help="fail if ru_maxrss exceeds this after any scale")
+    ap.add_argument("--swf", default=None, metavar="PATH",
+                    help="use this (submit-sorted) real swf log instead of "
+                         "the synthetic generator")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=BENCH_JSON)
+    args = ap.parse_args()
+
+    scales = sorted({int(float(s)) for s in args.scales.split(",") if s})
+    if args.full:
+        scales.append(1_000_000)
+
+    tmp: Optional[str] = None
+    if args.swf:
+        path = args.swf
+    else:
+        fd, tmp = tempfile.mkstemp(suffix=".swf", prefix="scale_bench_")
+        os.close(fd)
+        path = tmp
+        generate_swf(path, max(scales + [PARITY_JOBS]), seed=args.seed)
+
+    try:
+        results = []
+        for n in scales:
+            row = run_scale(path, n)
+            results.append(row)
+            print(f"  {n:>9,} jobs: {row['events_per_sec']:>8,.0f} ev/s  "
+                  f"rss {row['ru_maxrss_mb']:.0f} MB  "
+                  f"peak capacity {row['peak_row_capacity']:,} rows",
+                  flush=True)
+        parity = run_parity(path)
+        verdict = ("OK" if parity["ok"]
+                   else f"MISMATCH {parity['diverging_fields']}")
+        print(f"  parity @ {parity['n_jobs']:,} jobs: {verdict}")
+    finally:
+        if tmp:
+            os.unlink(tmp)
+
+    payload = {
+        "bench": "scale",
+        "config": {"policy": POLICY, "n_nodes": N_NODES,
+                   "compact_interval": COMPACT_INTERVAL,
+                   "swf": args.swf or "synthetic", "seed": args.seed},
+        "scales": results,
+        "parity": parity,
+        "rss_cap_mb": args.rss_cap_mb,
+        "platform": platform.platform(),
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"  -> {args.out}")
+
+    if not parity["ok"]:
+        print("PARITY MISMATCH: streamed+compacted diverges from the "
+              f"upfront oracle in {parity['diverging_fields']}",
+              file=sys.stderr)
+        return 1
+    if args.rss_cap_mb is not None:
+        worst = max(r["ru_maxrss_mb"] for r in results)
+        if worst > args.rss_cap_mb:
+            print(f"RSS CAP BLOWN: {worst:.0f} MB > "
+                  f"{args.rss_cap_mb:.0f} MB cap", file=sys.stderr)
+            return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

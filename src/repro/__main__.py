@@ -279,9 +279,12 @@ def _cmd_session(args: argparse.Namespace) -> int:
     Script ops (one JSON object per line; blank lines and ``#`` comments
     skipped): ``open`` (when no --policy/--restore was given), ``submit``
     (a registered workload or inline ``specs``, optional ``shift``),
+    ``stream`` (a workload fed chunk-wise via ``stream_trace`` — pair
+    with ``--compact-interval`` for bounded-memory million-job runs),
     ``step_until``/``step``/``run``, ``inject`` (fail/join/period),
-    ``snapshot`` and ``result``.  Every op streams one JSONL metrics line
-    (``kind``: submit/step/inject/snapshot/result) to stdout or
+    ``compact``, ``snapshot`` and ``result`` (``"light": true`` skips the
+    per-job dicts).  Every op streams one JSONL metrics line (``kind``:
+    submit/step/inject/compact/snapshot/result) to stdout or
     ``--metrics``.
     """
     import dataclasses
@@ -312,6 +315,8 @@ def _cmd_session(args: argparse.Namespace) -> int:
             overrides["period"] = args.period
         if args.penalty is not None:
             overrides["penalty"] = args.penalty
+        if args.compact_interval is not None:
+            overrides["compact_interval"] = args.compact_interval
         ses = api.open_session(args.nodes, args.policy, **overrides)
         attach_narrator(ses)
 
@@ -329,7 +334,8 @@ def _cmd_session(args: argparse.Namespace) -> int:
                         raise ValueError("session already open")
                     ses = api.open_session(
                         int(ev.get("nodes", args.nodes)), ev["policy"],
-                        **{k: ev[k] for k in ("period", "penalty")
+                        **{k: ev[k] for k in ("period", "penalty",
+                                              "compact_interval")
                            if k in ev})
                     attach_narrator(ses)
                     emit({"kind": "open", "policy": ses.policy_name,
@@ -343,6 +349,23 @@ def _cmd_session(args: argparse.Namespace) -> int:
                     idx = ses.submit(_session_submit(ses, ev),
                                      shift=ev.get("shift"))
                     emit({"kind": "submit", "n_submitted": len(idx),
+                          **ses.observe()})
+                elif op == "stream":
+                    wspec = api.parse_workload(
+                        ev["workload"],
+                        n_jobs=int(ev.get("jobs", 0)),
+                        n_nodes=int(ev.get("nodes",
+                                           ses.engine.params.n_nodes)),
+                        seed=int(ev.get("seed", 0)),
+                        load=ev.get("load"))
+                    window = ev.get("window")
+                    ses.stream(api.stream_trace(
+                        wspec, None if window is None else float(window)),
+                        run_to_exhaustion=bool(ev.get("run", True)))
+                    emit({"kind": "step", **ses.observe()})
+                elif op == "compact":
+                    n = ses.compact()
+                    emit({"kind": "compact", "evicted": n,
                           **ses.observe()})
                 elif op == "step_until":
                     ses.step_until(float(ev["t"]))
@@ -365,7 +388,7 @@ def _cmd_session(args: argparse.Namespace) -> int:
                     emit({"kind": "snapshot", "path": ev["path"],
                           "fingerprint": snap.fingerprint, "t": snap.time})
                 elif op == "result":
-                    r = ses.result()
+                    r = ses.result(light=bool(ev.get("light", False)))
                     emit({"kind": "result", "partial": not ses.exhausted,
                           **dataclasses.asdict(r)})
                 else:
@@ -565,8 +588,8 @@ def build_parser() -> argparse.ArgumentParser:
         help="drive a streaming SimSession from a JSONL event script")
     p.add_argument("--script", required=True, metavar="PATH",
                    help="JSONL event script ('-' for stdin); ops: open, "
-                        "submit, step_until, step, run, inject, snapshot, "
-                        "result")
+                        "submit, stream, step_until, step, run, inject, "
+                        "compact, snapshot, result")
     p.add_argument("--policy", default=None,
                    help="open the session with this policy (grammar string "
                         "or registered composition name)")
@@ -575,6 +598,11 @@ def build_parser() -> argparse.ArgumentParser:
                    help="periodic-pass period (s)")
     p.add_argument("--penalty", type=float, default=None,
                    help="rescheduling penalty (s)")
+    p.add_argument("--compact-interval", type=int, default=None,
+                   metavar="N",
+                   help="auto-compact retired engine rows every N "
+                        "retirements (0/absent: never); keeps long "
+                        "streaming runs O(active jobs) in memory")
     p.add_argument("--restore", default=None, metavar="PATH",
                    help="resume from a saved session snapshot instead of "
                         "opening a fresh session")

@@ -72,7 +72,8 @@ from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_batched,
                           run_branches, run_grid)
 from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
                                  make_trace_ir, parse_workload,
-                                 register_workload, workload_kind)
+                                 register_workload, stream_trace,
+                                 workload_kind)
 from .workloads.trace import Trace, as_trace
 
 
@@ -103,7 +104,7 @@ __all__ = [
     # workloads (columnar Trace IR + open registry) + scenarios
     "JobSpec", "Trace", "as_trace", "WorkloadSpec", "WORKLOAD_KINDS",
     "make_trace", "make_trace_ir", "parse_workload", "register_workload",
-    "workload_kind", "list_workloads",
+    "workload_kind", "list_workloads", "stream_trace",
     "ClusterEvent", "apply_scenario", "apply_scenario_trace",
     "parse_scenario_chain", "list_scenarios", "scenario_docs",
     "register_scenario",

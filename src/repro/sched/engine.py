@@ -70,6 +70,10 @@ class SimParams:
     stretch_tau: float = 10.0       # bounded-stretch threshold (s)
     max_events: int = 20_000_000    # hard event-loop bound
     on_max_events: str = "raise"    # "raise" | "truncate"
+    # compact COMPLETED/CANCELLED rows out of the SoA state whenever at
+    # least this many are evictable (0 = never; results are bit-identical
+    # either way — see EngineState.compact / RetiredLog)
+    compact_interval: int = 0
 
     def __post_init__(self) -> None:
         if self.max_events < 1:
@@ -77,6 +81,8 @@ class SimParams:
         if self.on_max_events not in ("raise", "truncate"):
             raise ValueError(f"on_max_events must be 'raise' or 'truncate', "
                              f"got {self.on_max_events!r}")
+        if self.compact_interval < 0:
+            raise ValueError("compact_interval must be >= 0")
 
 
 @dataclass
@@ -598,7 +604,7 @@ class Engine:
         if code == S_RUNNING:
             st.pool.remove(js.spec, js.mapping)
             st.inc.remove(js.i, js.mapping)
-        st.status[js.i] = S_CANCELLED
+        st.set_status(js.i, S_CANCELLED)
         js.mapping = None
         js.yld = 0.0
 
@@ -620,7 +626,7 @@ class Engine:
         spec = dc_replace(js.spec, n_tasks=n_tasks)
         st.specs[js.i] = spec
         js.spec = spec
-        st.demand[js.i] = spec.n_tasks * spec.cpu_need
+        st.set_demand(js.i, spec.n_tasks * spec.cpu_need)
 
     # ------------------------------------------------------------------ #
     # cluster (failure / elastic) events                                  #
@@ -675,43 +681,105 @@ class Engine:
 
     # ------------------------------------------------------------------ #
     def _result(self, hit_cap: bool = False, partial: bool = False,
-                sim_wall_s: float = 0.0) -> SimResult:
+                sim_wall_s: float = 0.0, light: bool = False) -> SimResult:
         """Metrics over the completed jobs.  ``partial`` permits uncompleted
         jobs (a mid-run session result); a finished run still treats them as
-        a deadlock unless the event cap truncated it."""
+        a deadlock unless the event cap truncated it.
+
+        Under compaction the evicted rows live in ``st.retired``; the two
+        populations are merged back in global-arrival (``gidx``) order, so
+        every float accumulation below performs the identical operation
+        sequence as the uncompacted single loop — bit-identical results.
+        ``light`` skips materializing the O(jobs) per-job dicts (aggregates
+        only, computed by the same ops) for bounded-RSS scale runs.
+        """
         from .metrics import bounded_stretch
 
         p = self.params
         st = self.state
         completions: Dict[int, float] = {}
         stretches: Dict[int, float] = {}
-        for js in st.views:
-            if int(st.status[js.i]) == S_CANCELLED:
-                continue                # withdrawn: never in the metrics
-            if js.completed_at is None:
-                if hit_cap or partial:
-                    continue            # partial run: report finished jobs
-                raise RuntimeError(
-                    f"job {js.spec.jid} never completed (deadlock?)")
-            completions[js.spec.jid] = js.completed_at
-            t = js.completed_at - js.spec.release
-            # stretch normalizes by the *executed* time — under truth noise
-            # the estimate would mis-scale the paper's central metric
-            stretches[js.spec.jid] = bounded_stretch(
-                t, float(st.proc_truth[js.i]), p.stretch_tau)
+        ret = st.retired
+        if len(ret):
+            order = np.argsort(ret.col("gidx"), kind="stable")
+            r_gidx = ret.col("gidx")[order].tolist()
+            r_jid = ret.col("jid")[order].tolist()
+            r_rel = ret.col("release")[order].tolist()
+            r_done = ret.col("completed_at")[order].tolist()
+            r_pt = ret.col("proc_truth")[order].tolist()
+            r_work = ret.col("work")[order].tolist()
+        else:
+            r_gidx = r_jid = r_rel = r_done = r_pt = r_work = []
+        n_ret = len(r_gidx)
         specs = st.specs
-        first = min(s.release for s in specs) if specs else 0.0
-        last = max(completions.values()) if completions else 0.0
+        status = st.status
+        pt_arr = st.proc_truth
+        cat = st.completed_at
+        live_gidx = st.gidx.tolist()
+        svals: List[float] = []
+        last = -np.inf                  # running max over completion times
+        total_work = 0                  # int start, exactly like sum(genexp)
+        ri = 0
+        for i, s in enumerate(specs):
+            g = live_gidx[i]
+            while ri < n_ret and r_gidx[ri] < g:
+                done = r_done[ri]
+                if done == done:        # NaN marks cancelled (no metrics)
+                    # stretch normalizes by the *executed* time — under
+                    # truth noise the estimate would mis-scale the metric
+                    sv = bounded_stretch(done - r_rel[ri], r_pt[ri],
+                                         p.stretch_tau)
+                    if not light:
+                        completions[r_jid[ri]] = done
+                        stretches[r_jid[ri]] = sv
+                    svals.append(sv)
+                    if done > last:
+                        last = done
+                    total_work = total_work + r_work[ri]
+                ri += 1
+            if int(status[i]) == S_CANCELLED:
+                continue                # withdrawn: never in the metrics
+            c = cat[i]
+            if np.isnan(c):
+                if not (hit_cap or partial):
+                    raise RuntimeError(
+                        f"job {s.jid} never completed (deadlock?)")
+                # partial run: report finished jobs, but the uncompleted
+                # ones still carry executed work (same as the genexp did)
+                total_work = total_work + (
+                    s.n_tasks * float(pt_arr[i]) * s.cpu_need)
+                continue
+            c = float(c)
+            sv = bounded_stretch(c - s.release, float(pt_arr[i]),
+                                 p.stretch_tau)
+            if not light:
+                completions[s.jid] = c
+                stretches[s.jid] = sv
+            svals.append(sv)
+            if c > last:
+                last = c
+            # executed CPU-seconds (truth) — the same multiply order as
+            # JobSpec.total_work so the clairvoyant case is bit-identical
+            # to the historical spec-side sum
+            total_work = total_work + s.n_tasks * float(pt_arr[i]) * s.cpu_need
+        while ri < n_ret:
+            done = r_done[ri]
+            if done == done:
+                sv = bounded_stretch(done - r_rel[ri], r_pt[ri], p.stretch_tau)
+                if not light:
+                    completions[r_jid[ri]] = done
+                    stretches[r_jid[ri]] = sv
+                svals.append(sv)
+                if done > last:
+                    last = done
+                total_work = total_work + r_work[ri]
+            ri += 1
+        first = st.first_release if st.n_total else 0.0
+        last = last if svals else 0.0
         makespan = max(0.0, last - first)
         hours = max(makespan / 3600.0, 1e-9)
-        # executed CPU-seconds (truth), cancelled jobs excluded — the same
-        # multiply order as JobSpec.total_work so the clairvoyant case is
-        # bit-identical to the historical spec-side sum
-        total_work = sum(
-            s.n_tasks * float(st.proc_truth[i]) * s.cpu_need
-            for i, s in enumerate(specs)
-            if int(st.status[i]) != S_CANCELLED) or 1.0
-        svals = list(stretches.values())
+        if not total_work:
+            total_work = 1.0
         if self.policy_spec is not None:
             name = self.policy_spec.name
         else:
@@ -728,8 +796,8 @@ class Engine:
             mean_stretch=float(np.mean(svals)) if svals else 0.0,
             n_pmtn=self.n_pmtn,
             n_mig=self.n_mig,
-            pmtn_per_job=self.n_pmtn / max(1, len(specs)),
-            mig_per_job=self.n_mig / max(1, len(specs)),
+            pmtn_per_job=self.n_pmtn / max(1, st.n_total),
+            mig_per_job=self.n_mig / max(1, st.n_total),
             pmtn_per_hour=self.n_pmtn / hours,
             mig_per_hour=self.n_mig / hours,
             bytes_moved_gb=self.bytes_moved_gb,
@@ -738,7 +806,7 @@ class Engine:
             makespan=makespan,
             events=self._events,
             hit_max_events=hit_cap,
-            n_cancelled=int((st.status == S_CANCELLED).sum()),
+            n_cancelled=int((st.status == S_CANCELLED).sum()) + ret.n_cancelled,
             final_time=st.now,
             sim_wall_s=sim_wall_s,
         )

@@ -61,8 +61,11 @@ SCHEMA = "repro.session/v1"
 #: renamed or re-typed; :meth:`SimSession.restore` refuses versions it does
 #: not know with a clear ``ValueError`` instead of failing key-by-key.
 #: Version 1 = the pre-versioned PR5–PR7 shape (``version`` key absent).
-SNAPSHOT_VERSION = 2
-_SUPPORTED_VERSIONS = (1, 2)
+#: Version 3 adds the compaction keys (``gidx``/``n_total``/
+#: ``first_release``/``retired``); v1/v2 snapshots restore with an empty
+#: retired log and ``gidx = arange(n)`` (their state was never compacted).
+SNAPSHOT_VERSION = 3
+_SUPPORTED_VERSIONS = (1, 2, 3)
 
 #: keys every supported payload version carries — validated up front so a
 #: stale or hand-edited snapshot raises one actionable error, not an
@@ -359,6 +362,10 @@ class SimSession:
         self._hit_cap = False
         self._horizon = st.now
         self._wall = 0.0
+        #: True while a stream() driver still holds future chunks: the tick
+        #: train and narrator stay armed through inter-chunk gaps exactly as
+        #: they would with the whole trace submitted upfront
+        self._stream_pending = False
         self._narrator: Optional[Narrator] = None
         self._closed = False
         self._close_hooks: List[Any] = []
@@ -453,7 +460,8 @@ class SimSession:
                  if self._ci < len(self._cev) else math.inf)
         t_tick = (self._next_tick
                   if (self._periodic
-                      and (st.any_in_system() or self._arrivals))
+                      and (st.any_in_system() or self._arrivals
+                           or self._stream_pending))
                   else math.inf)
         return min(t_arr, st.next_completion_time(), t_tick, t_cev)
 
@@ -462,6 +470,7 @@ class SimSession:
         streaming CLI see between steps)."""
         st = self.engine.state
         status = st.status
+        ret = st.retired
         run = st.running_indices()
         alive = float(st.alive.sum())
         util = float((st.yld[run] * st.demand[run]).sum())
@@ -473,13 +482,16 @@ class SimSession:
             "n_pending": int((status == S_PENDING).sum()),
             "n_running": int(run.size),
             "n_paused": int((status == S_PAUSED).sum()),
-            "n_completed": int((status == S_COMPLETED).sum()),
+            "n_completed": int((status == S_COMPLETED).sum())
+                           + ret.n_completed,
             "queue_depth": int(((status == S_PENDING)
                                 | (status == S_PAUSED)).sum()),
-            "n_cancelled": int((status == S_CANCELLED).sum()),
+            "n_cancelled": int((status == S_CANCELLED).sum())
+                           + ret.n_cancelled,
             # jobs whose executed (truth) time diverges from the estimate
             # policies observe — the non-clairvoyance the narrator injects
-            "n_noisy": int((st.proc_truth != st.proc_time).sum()),
+            "n_noisy": int((st.proc_truth != st.proc_time).sum())
+                       + ret.n_noisy,
             "alive_nodes": int(alive),
             "utilization": util / max(alive, 1e-9),
             "n_pmtn": self.engine.n_pmtn,
@@ -523,7 +535,12 @@ class SimSession:
                 f"but the engine clock is already at {st.now:.6g}; pass "
                 f"shift='now' (or a float offset) to submit live")
         jids = [s.jid for s in specs]
+        # live jids are a set; compacted-away jids live in the retired log
+        # (sorted array + searchsorted), so the dup check stays O(batch)
+        # without an O(jobs-ever) Python set
         dup = self._jids.intersection(jids)
+        if not dup:
+            dup = set(st.retired.contains(jids))
         if dup or len(set(jids)) != len(jids):
             dup = sorted(dup) or "within the batch"
             raise ValueError(f"duplicate job ids {dup}; session job ids "
@@ -682,7 +699,8 @@ class SimSession:
 
     # -- stepping -----------------------------------------------------------
     def _loop(self, until: float = math.inf,
-              max_steps: Optional[int] = None) -> int:
+              max_steps: Optional[int] = None,
+              exclusive: bool = False) -> int:
         """The one event loop behind every stepping entry point.
 
         Processes event timestamps while they are ``<= until`` (boundary
@@ -691,26 +709,35 @@ class SimSession:
         committed iteration — event counting, cap checking, fluid advance,
         hook order — replicates the historical ``Engine.run()`` loop
         exactly.
+
+        ``exclusive`` processes timestamps strictly ``< until`` — the
+        stream() driver's bound: the timestamp at a chunk's first release
+        must be handled in ONE iteration *after* that chunk is submitted,
+        exactly as it would be with the whole trace submitted upfront.  An
+        ``inf`` horizon is then also a boundary peek (more chunks are
+        coming), never exhaustion.
         """
         e = self.engine
         p = e.params
         st = e.state
         pol = e.policy
-        heap = self._arrivals
         cev = self._cev
         periodic = self._periodic
+        compact_every = p.compact_interval
         steps = 0
         t0 = time.perf_counter()
         try:
             while not self._exhausted:
                 if max_steps is not None and steps >= max_steps:
                     break
+                heap = self._arrivals       # compaction rebuilds the list
                 t_arr = heap[0][0] if heap else math.inf
                 t_cev = cev[self._ci].time if self._ci < len(cev) else math.inf
                 t_done = st.next_completion_time()
                 live = st.any_in_system()
+                armed = live or heap or self._stream_pending
                 t_tick = (self._next_tick
-                          if (periodic and (live or heap)) else math.inf)
+                          if (periodic and armed) else math.inf)
                 t_next = min(t_arr, t_done, t_tick, t_cev)
                 # narrator streams fire lazily, never past the next engine
                 # event or the step bound (a fire injects into the pending
@@ -718,10 +745,12 @@ class SimSession:
                 # gated on (live or heap) like the tick so a drained
                 # session still exhausts
                 nar = self._narrator
-                if nar is not None and (live or heap):
+                if nar is not None and armed:
                     while True:
                         t_nar = nar.peek(self)
-                        if not (t_nar <= t_next and t_nar <= until):
+                        if not (t_nar <= t_next
+                                and (t_nar < until if exclusive
+                                     else t_nar <= until)):
                             break
                         nar.fire(self)
                         t_cev = (cev[self._ci].time
@@ -730,6 +759,9 @@ class SimSession:
                     if math.isinf(t_next) and math.isfinite(nar.peek(self)):
                         break           # chaos pending beyond the step
                                         # bound — a peek, not an event
+                if exclusive and (math.isinf(t_next) or t_next >= until):
+                    break               # stream-window boundary peek — the
+                                        # next chunk arrives before t_next
                 if t_next > until and not math.isinf(t_next):
                     break               # boundary peek — not an engine event
                 e._events += 1
@@ -739,10 +771,11 @@ class SimSession:
                         self._hit_cap = True
                         self._exhausted = True
                         break
-                    n_done = int((st.status == S_COMPLETED).sum())
+                    n_done = (int((st.status == S_COMPLETED).sum())
+                              + st.retired.n_completed)
                     raise RuntimeError(
                         f"event budget exceeded: max_events={p.max_events} at "
-                        f"t={st.now:.6g}s with {n_done}/{len(st.specs)} jobs "
+                        f"t={st.now:.6g}s with {n_done}/{st.n_total} jobs "
                         f"completed (policy {pol.__class__.__name__}); raise "
                         f"SimParams.max_events or set on_max_events='truncate' "
                         f"for a partial SimResult")
@@ -774,7 +807,7 @@ class SimSession:
                     _, _, i = heapq.heappop(heap)
                     if int(st.status[i]) != S_NOT_ARRIVED:
                         continue        # cancelled before it ever arrived
-                    st.status[i] = S_PENDING
+                    st.set_status(i, S_PENDING)
                     pol.on_submit(st.views[i])
                     acted = True
                 # 4) periodic tick
@@ -783,6 +816,8 @@ class SimSession:
                     self._next_tick += p.period
                     acted = True
                 pol.finalize(acted)
+                if compact_every and st.n_retired_rows >= compact_every:
+                    self._compact()
         finally:
             self._wall += time.perf_counter() - t0
         return steps
@@ -807,10 +842,19 @@ class SimSession:
         return steps
 
     def run_to_exhaustion(self) -> "SimSession":
-        """Step until no future event exists."""
+        """Step until no future event exists.
+
+        With ``SimParams.compact_interval`` set, a trailing compaction
+        evicts the tail of finished rows that accumulated since the last
+        periodic trigger, so an exhausted compacting session always ends
+        with the engine state holding active rows only (none, if the trace
+        ran to completion).
+        """
         self._require_open("step")
         self._loop()
         self._horizon = max(self._horizon, self.engine.state.now)
+        if self.engine.params.compact_interval and self.engine.state.n_retired_rows:
+            self._compact()
         return self
 
     def run(self) -> SimResult:
@@ -818,15 +862,88 @@ class SimSession:
         self.run_to_exhaustion()
         return self.result()
 
+    # -- streaming ingest ---------------------------------------------------
+    def stream(self, chunks, *, run_to_exhaustion: bool = True
+               ) -> "SimSession":
+        """Feed an iterator of release-windowed :class:`Trace` chunks as
+        true online arrivals, stepping the simulation between windows.
+
+        At most one future window is materialized at any time (the chunk
+        source — ``Trace.iter_chunks`` or a ``swf-stream`` workload — never
+        holds the full log), and with ``SimParams.compact_interval`` set
+        the engine state stays O(active) too.  Chunks must be
+        release-disjoint and non-decreasing (every release in chunk k+1 is
+        ``>=`` every release in chunk k), which any ``iter_chunks`` window
+        partition satisfies.
+
+        Bit-identity: between submits the loop runs with an *exclusive*
+        bound at the next chunk's first release, so that timestamp is
+        processed in one event iteration after its chunk is submitted —
+        the run is indistinguishable from submitting the whole trace
+        upfront, event count included.
+        """
+        self._require_open("stream into")
+        it = iter(chunks)
+        cur: Optional[Trace] = None
+        try:
+            for nxt in it:
+                if not len(nxt):
+                    continue
+                if cur is None:
+                    cur = nxt
+                    continue
+                self._stream_pending = True
+                self.submit(cur)
+                bound = float(nxt.release.min())
+                self._loop(until=bound, exclusive=True)
+                self._horizon = max(self._horizon, self.engine.state.now)
+                cur = nxt
+        finally:
+            self._stream_pending = False
+        if cur is not None:
+            self.submit(cur)
+        if run_to_exhaustion:
+            self.run_to_exhaustion()
+        return self
+
+    # -- compaction ---------------------------------------------------------
+    def compact(self) -> int:
+        """Evict COMPLETED/CANCELLED rows from the engine state now (see
+        ``EngineState.compact``); with ``SimParams.compact_interval`` set
+        the loop does this automatically.  Returns rows evicted."""
+        self._require_open("compact")
+        return self._compact()
+
+    def _compact(self) -> int:
+        st = self.engine.state
+        # rows with a pending arrival-heap entry must survive: a job
+        # cancelled before it ever arrived still produces its (skipped)
+        # arrival event, and dropping it would change the event count
+        protect = [i for (_, _, i) in self._arrivals]
+        n0 = len(st.retired)
+        new_of_old = st.compact(protect=protect)
+        if new_of_old is None:
+            return 0
+        # remap the arrival heap in place: (release, jid) keys are unique
+        # per session, so the index never participates in heap ordering
+        self._arrivals = [(r, j, int(new_of_old[i]))
+                          for (r, j, i) in self._arrivals]
+        evicted = st.retired.col("jid")[n0:]
+        self._jids.difference_update(int(j) for j in evicted)
+        return int(evicted.shape[0])
+
     # -- finalization -------------------------------------------------------
-    def result(self, partial: Optional[bool] = None) -> SimResult:
+    def result(self, partial: Optional[bool] = None,
+               light: bool = False) -> SimResult:
         """Finalize metrics.  Defaults to a *partial* result (covering the
         completed jobs only) while events remain, and to the strict
-        closed-world result once exhausted."""
+        closed-world result once exhausted.  ``light`` skips the O(jobs)
+        per-job completion/stretch dicts (aggregates only, computed by the
+        identical float ops) for bounded-RSS scale runs."""
         if partial is None:
             partial = not self._exhausted
         return self.engine._result(hit_cap=self._hit_cap, partial=partial,
-                                   sim_wall_s=self._wall)
+                                   sim_wall_s=self._wall, light=light)
 
     # -- snapshot / restore / fork ------------------------------------------
     def snapshot(self) -> SessionState:
@@ -882,6 +999,12 @@ class SimSession:
             "hit_cap": self._hit_cap,
             "wall_s": self._wall,
             "policy_state": _snapshot_policy_state(e.policy),
+            # v3: compaction state — global arrival indices of the live
+            # rows, lifetime counters, and the retired-row accumulators
+            "gidx": st.gidx.tolist(),
+            "n_total": st.n_total,
+            "first_release": st.first_release,
+            "retired": st.retired.payload(),
         }
         if self._narrator is not None:
             # optional key: narrator-free snapshots keep the legacy shape
@@ -961,6 +1084,16 @@ class SimSession:
         st.status[:] = pl["status"]
         st.n_pmtn[:] = pl["job_pmtn"]
         st.n_mig[:] = pl["job_mig"]
+        if version >= 3:
+            st.gidx[:] = pl["gidx"]
+            st.n_total = int(pl["n_total"])
+            st.first_release = float(pl["first_release"])
+            from ..core.state import RetiredLog
+            st.retired = RetiredLog.from_payload(pl["retired"])
+        # (v1/v2: the fresh EngineState already has gidx = arange(n),
+        # n_total = n, first_release = min(releases), empty retired log —
+        # those snapshots predate compaction.)
+        st.rebuild_index_sets()         # status was written wholesale
         st.mappings = [None if m is None else [int(x) for x in m]
                        for m in pl["mappings"]]
         st.pool.load[:] = pl["pool_load"]
@@ -988,6 +1121,9 @@ class SimSession:
         ses._exhausted = bool(pl["exhausted"])
         ses._hit_cap = bool(pl["hit_cap"])
         ses._wall = float(pl["wall_s"])
+        # a stream() driver is a live Python iterator, not snapshot state:
+        # restored sessions resume with whatever was already submitted
+        ses._stream_pending = False
         nar_pl = pl.get("narrator")
         ses._narrator = Narrator.from_state(nar_pl) if nar_pl else None
         if (ses._narrator is not None and switched

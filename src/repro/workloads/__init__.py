@@ -3,17 +3,20 @@ the columnar Trace IR, the open registry of declarative seeded generators
 used by sweep cells, and the individual generator modules."""
 from .trace import Trace, as_trace
 from .lublin import lublin_trace, scale_to_load, offered_load
-from .hpc2n import parse_swf, hpc2n_preprocess, hpc2n_like_trace
+from .hpc2n import (parse_swf, iter_swf, iter_swf_windows, hpc2n_preprocess,
+                    hpc2n_like_trace)
 from .jobgen import tpu_job_types, tpu_trace, DEFAULT_TPU_JOB_TYPES
 from .registry import (WorkloadSpec, WorkloadKind, make_trace, make_trace_ir,
                        parse_workload, register_workload, list_workloads,
-                       workload_kind)
+                       stream_trace, workload_kind)
 
 __all__ = [
     "Trace", "as_trace",
     "lublin_trace", "scale_to_load", "offered_load",
-    "parse_swf", "hpc2n_preprocess", "hpc2n_like_trace",
+    "parse_swf", "iter_swf", "iter_swf_windows", "hpc2n_preprocess",
+    "hpc2n_like_trace",
     "tpu_job_types", "tpu_trace", "DEFAULT_TPU_JOB_TYPES",
     "WorkloadSpec", "WorkloadKind", "make_trace", "make_trace_ir",
     "parse_workload", "register_workload", "list_workloads", "workload_kind",
+    "stream_trace",
 ]

@@ -31,7 +31,8 @@ import numpy as np
 
 from ..core.job import JobSpec
 
-__all__ = ["parse_swf", "hpc2n_preprocess", "hpc2n_like_trace", "SwfJob"]
+__all__ = ["parse_swf", "iter_swf", "iter_swf_windows", "hpc2n_preprocess",
+           "hpc2n_like_trace", "SwfJob"]
 
 NODE_MEM_GB = 2.0
 N_NODES = 120
@@ -49,13 +50,13 @@ class SwfJob:
         self.req_mem_kb = req_mem_kb
 
 
-def parse_swf(text_or_path) -> List[SwfJob]:
-    """Parse the Standard Workload Format (fields per swf spec; -1 = n/a)."""
+def iter_swf(text_or_path):
+    """Lazily yield :class:`SwfJob` rows from an swf log (same skip rules
+    as :func:`parse_swf`; never holds more than one line in memory)."""
     if isinstance(text_or_path, str) and "\n" not in text_or_path:
         fh = open(text_or_path)
     else:
         fh = io.StringIO(text_or_path)
-    jobs = []
     with fh:
         for line in fh:
             line = line.strip()
@@ -69,15 +70,26 @@ def parse_swf(text_or_path) -> List[SwfJob]:
             req_mem = float(f[9])
             if run <= 0 or procs <= 0:
                 continue
-            jobs.append(SwfJob(jid, submit, run, procs, used_mem, req_mem))
-    return jobs
+            yield SwfJob(jid, submit, run, procs, used_mem, req_mem)
 
 
-def hpc2n_preprocess(swf_jobs: Sequence[SwfJob]) -> List[JobSpec]:
-    """§5.3.1 transformation of swf rows into DFRS job specs."""
+def parse_swf(text_or_path) -> List[SwfJob]:
+    """Parse the Standard Workload Format (fields per swf spec; -1 = n/a)."""
+    return list(iter_swf(text_or_path))
+
+
+def hpc2n_preprocess(swf_jobs: Sequence[SwfJob],
+                     start_jid: int = 0) -> List[JobSpec]:
+    """§5.3.1 transformation of swf rows into DFRS job specs.
+
+    ``start_jid`` offsets the re-assigned contiguous jids so a chunked
+    caller (:func:`iter_swf_windows`) can continue the numbering of an
+    earlier chunk and reproduce exactly the jids a whole-log pass assigns.
+    """
     specs: List[JobSpec] = []
     node_kb = NODE_MEM_GB * 1024 * 1024
-    for k, j in enumerate(sorted(swf_jobs, key=lambda j: j.submit)):
+    for k, j in enumerate(sorted(swf_jobs, key=lambda j: j.submit),
+                          start=start_jid):
         per_proc = max(j.used_mem_kb, j.req_mem_kb)
         mem_frac = max(0.10, per_proc / node_kb) if per_proc > 0 else 0.10
         mem_frac = min(1.0, mem_frac)
@@ -96,6 +108,60 @@ def hpc2n_preprocess(swf_jobs: Sequence[SwfJob]) -> List[JobSpec]:
             )
         )
     return specs
+
+
+def iter_swf_windows(
+    text_or_path,
+    window_s: float,
+    n_jobs: int = 0,
+) -> "iter":
+    """Stream an swf log as per-release-window ``List[JobSpec]`` chunks.
+
+    Reads the log line by line (never materializing it) and yields the
+    §5.3.1-preprocessed specs of each half-open submit-time window
+    ``[lo + k*window_s, lo + (k+1)*window_s)`` anchored at the first
+    accepted row's submit time; empty windows are skipped.  ``n_jobs``
+    caps the number of rows taken (0 = the whole log), counted *before*
+    any downstream width filter — the same prefix semantics as the
+    materialized ``swf`` workload kind.
+
+    Because jids are re-assigned in submit order, the log must already be
+    sorted by submit time (true of the cleaned Parallel Workloads Archive
+    logs).  An out-of-order row raises — fall back to the materialized
+    ``swf:<path>`` kind to handle unsorted logs.
+
+    Concatenating the chunks reproduces ``hpc2n_preprocess(parse_swf(x))``
+    row for row: ``sorted()`` is a stable identity on each already-sorted
+    chunk, and every per-spec value depends only on its own row and jid.
+    """
+    if not window_s > 0.0:
+        raise ValueError(f"window_s must be > 0, got {window_s}")
+    buf: List[SwfJob] = []
+    taken = 0           # rows accepted so far == jids already assigned
+    lo = None           # first accepted submit time (window anchor)
+    cur = None          # window index of the rows in buf
+    last = -np.inf
+    for row in iter_swf(text_or_path):
+        if row.submit < last:
+            raise ValueError(
+                "swf log is not sorted by submit time (row jid "
+                f"{row.jid}: submit {row.submit} after {last}); streaming "
+                "ingest needs a sorted log — use the materialized "
+                "'swf:<path>' workload kind instead")
+        last = row.submit
+        if lo is None:
+            lo = row.submit
+        k = int((row.submit - lo) // window_s)
+        if buf and k != cur:
+            yield hpc2n_preprocess(buf, start_jid=taken)
+            taken += len(buf)
+            buf = []
+        cur = k
+        buf.append(row)
+        if n_jobs and taken + len(buf) >= n_jobs:
+            break
+    if buf:
+        yield hpc2n_preprocess(buf, start_jid=taken)
 
 
 def hpc2n_like_trace(

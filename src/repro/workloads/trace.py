@@ -236,6 +236,29 @@ class Trace:
             return self
         return self.select(order)
 
+    def iter_chunks(self, window_s: float):
+        """Yield release-windowed sub-traces for streaming ingest.
+
+        Rows are partitioned into half-open windows
+        ``[lo + k*window_s, lo + (k+1)*window_s)`` anchored at the first
+        release; empty windows are skipped.  Chunks come out in release
+        order (each is a contiguous slice of :meth:`sorted_by_release`),
+        so concatenating them reproduces the sorted trace exactly — the
+        contract :meth:`SimSession.stream <repro.sched.session.SimSession.stream>`
+        relies on for bit-identical results.
+        """
+        if not window_s > 0.0:
+            raise ValueError(f"window_s must be > 0, got {window_s}")
+        if not len(self):
+            return
+        t = self.sorted_by_release()
+        lo = float(t.release[0])
+        bucket = np.floor((t.release - lo) / float(window_s)).astype(np.int64)
+        _, starts = np.unique(bucket, return_index=True)
+        bounds = np.append(starts, len(t))
+        for a, b in zip(bounds[:-1], bounds[1:]):
+            yield t.select(np.arange(a, b))
+
     # ------------------------------------------------------------------ #
     # serialization                                                       #
     # ------------------------------------------------------------------ #
