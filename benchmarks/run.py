@@ -18,7 +18,7 @@ import time
 from . import (batched_bench, fig1_load, fig4_period_stretch, hotpath_bench,
                mcb8_runtime, roofline, serve_bench, sweep_bench,
                table2_stretch, table3_costs, table4_underutilization,
-               tpu_cluster)
+               tpu_cluster, tune_bench)
 from .common import FULL, QUICK, Bench
 
 BENCHES = {
@@ -34,6 +34,7 @@ BENCHES = {
     "hotpath": hotpath_bench.run,
     "batched": batched_bench.run,
     "tpu_cluster": tpu_cluster.run,
+    "tune": tune_bench.run,
 }
 
 

@@ -1,0 +1,165 @@
+"""Online-autotuner benchmark → machine-readable BENCH_tune.json.
+
+The headline demo of the fork-race-promote autotuner
+(:mod:`repro.tune`): a chaos scenario — a rack failure mid-run with a
+late rejoin — where **no fixed policy choice is right for the whole
+run**.  ``GreedyP`` is the better calm-phase incumbent but strands the
+killed jobs; ``GreedyPM */per`` digs the cluster out of the failure but
+pays migration overhead from t=0 if run fixed.  The autotuned session
+starts on ``GreedyP``, forks and races the portfolio when the failure
+bites, hot-swaps to the migration policy — and ends with a lower max
+stretch than *every* fixed-policy baseline, none of which saw the
+future either (the tuner races snapshots of the same live state; it has
+no oracle).
+
+Two gates, both **correctness** (never absolute perf — CI runs on a
+throttled 2-core box):
+
+* the tuned session's max stretch must strictly beat the best fixed
+  oracle-free baseline;
+* the tuned run must be bit-deterministic: a second identical run (and
+  its decision log) must match the first exactly — decision records are
+  wall-clock-free by construction.
+
+Wall times are reported for context only.
+"""
+from __future__ import annotations
+
+import json
+import platform
+import time
+
+from repro import api
+
+from .common import Bench, fmt_table
+
+BENCH_JSON = "BENCH_tune.json"
+
+NODES = 32
+JOBS = 150
+SEED = 7
+LOAD = 1.1
+RACK = list(range(8))
+FAIL_T = 2050.0
+JOIN_T = 7000.0
+
+#: the oracle-free portfolio: every member is also a fixed baseline
+PORTFOLIO = ["GreedyP */OPT=MIN", "GreedyPM */per/OPT=MIN/MINVT=600"]
+INCUMBENT = PORTFOLIO[0]
+SPEC = ("every=1500;horizon=4000;rungs=2;margin=0.01;dwell=0;"
+        "policies=" + "|".join(PORTFOLIO))
+TUNER_SEED = 3
+
+
+def _scenario_session(policy: str):
+    """One rack-failure cell: everything but the policy/tuner is shared."""
+    ses = api.open_session(NODES, policy)
+    return ses
+
+
+def _drive(ses) -> None:
+    ses.submit(api.parse_workload("lublin", n_jobs=JOBS, n_nodes=NODES,
+                                  seed=SEED, load=LOAD))
+    ses.inject({"kind": "fail", "t": FAIL_T, "nodes": RACK})
+    ses.inject({"kind": "join", "t": JOIN_T, "nodes": RACK})
+    ses.run_to_exhaustion()
+
+
+def _fixed(policy: str) -> float:
+    ses = _scenario_session(policy)
+    _drive(ses)
+    return ses.result(light=True).max_stretch
+
+
+def _tuned():
+    ses = _scenario_session(INCUMBENT)
+    tuner = api.autotune(ses, SPEC, seed=TUNER_SEED)
+    _drive(ses)
+    return ses, tuner
+
+
+def run(bench: Bench, verbose: bool = True):
+    t_all = time.perf_counter()
+
+    baselines = {}
+    for pol in PORTFOLIO:
+        t0 = time.perf_counter()
+        baselines[pol] = _fixed(pol)
+        if verbose:
+            print(f"  fixed {pol:40s} max stretch "
+                  f"{baselines[pol]:8.2f}  ({time.perf_counter()-t0:.1f}s)")
+
+    t0 = time.perf_counter()
+    ses, tuner = _tuned()
+    tuned_wall = time.perf_counter() - t0
+    tuned = ses.result(light=True).max_stretch
+    swaps = [d for d in tuner.decisions if d["swapped"]]
+
+    # determinism gate: an identical second run must reproduce the max
+    # stretch AND the decision log bit for bit (records carry no wall
+    # clock, so == is exact)
+    ses2, tuner2 = _tuned()
+    tuned2 = ses2.result(light=True).max_stretch
+    deterministic = (tuned2 == tuned and tuner2.decisions == tuner.decisions)
+
+    best_fixed = min(baselines.values())
+    beats_all = tuned < best_fixed
+    wall = time.perf_counter() - t_all
+
+    payload = {
+        "bench": "tune",
+        "scenario": {
+            "workload": f"lublin-j{JOBS}-n{NODES}-s{SEED}@{LOAD}",
+            "nodes": NODES,
+            "rack": RACK,
+            "fail_t": FAIL_T,
+            "join_t": JOIN_T,
+        },
+        "spec": SPEC,
+        "tuner_seed": TUNER_SEED,
+        "incumbent": INCUMBENT,
+        "baselines": {pol: round(v, 6) for pol, v in baselines.items()},
+        "best_fixed": round(best_fixed, 6),
+        "tuned": {
+            "max_stretch": round(tuned, 6),
+            "final_policy": ses.policy_name,
+            "n_decisions": len(tuner.decisions),
+            "n_swaps": len(swaps),
+            "swap_times": [d["t"] for d in swaps],
+        },
+        "improvement_vs_best_fixed": round(1.0 - tuned / best_fixed, 4),
+        "gates": {"beats_all_baselines": beats_all,
+                  "deterministic": deterministic},
+        "decisions": tuner.decisions,
+        "wall_s": round(wall, 3),
+        "tuned_wall_s": round(tuned_wall, 3),
+        "platform": platform.platform(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+
+    if verbose:
+        rows = [[pol, f"{v:.2f}", ""] for pol, v in baselines.items()]
+        rows.append(["autotuned (fork-race-promote)", f"{tuned:.2f}",
+                     f"{len(swaps)} swap(s) -> {ses.policy_name}"])
+        print(fmt_table(
+            ["policy", "max stretch", "notes"], rows,
+            f"Tune bench (rack failure at t={FAIL_T:.0f}, "
+            f"rejoin t={JOIN_T:.0f})"))
+        print(f"  tuned beats best fixed by "
+              f"{100 * payload['improvement_vs_best_fixed']:.1f}% "
+              f"-> {BENCH_JSON}")
+
+    # the CI gates: a tuner that loses to a fixed baseline — or that
+    # cannot reproduce its own decisions — is broken, whatever the speed
+    if not deterministic:
+        raise RuntimeError(
+            f"tuned run is not deterministic: max stretch {tuned} vs "
+            f"{tuned2}, decision logs "
+            f"{'match' if tuner2.decisions == tuner.decisions else 'differ'}")
+    if not beats_all:
+        raise RuntimeError(
+            f"autotuned max stretch {tuned:.2f} does not beat the best "
+            f"fixed oracle-free baseline {best_fixed:.2f} — the "
+            f"fork-race-promote loop is not paying for itself")
+    return payload

@@ -17,6 +17,13 @@ Subcommands (all built on :mod:`repro.api`):
   (online submits, ``step_until``/``step``, live fail/join/period
   injection, snapshots) and stream per-step JSONL metrics out.  With
   ``--restore`` the session resumes from a saved snapshot bit-identically.
+* ``tune``        — an *autotuned* session end to end: attach the
+  fork-race-promote :class:`repro.tune.AutoTuner` (periodically fork the
+  live session, race a policy/period portfolio over a bounded sim-time
+  horizon with successive halving, hot-swap the winner), optionally with
+  a chaos narrator and a scripted rack failure; prints every decision.
+  The ``session`` subcommand grows the same tuner via ``--autotune`` and
+  a manual ``{"op": "tune"}`` trigger.
 * ``trace-smoke`` — materialize every registered workload kind × every
   scenario at a small size and emit the content fingerprints (CI runs it
   in two processes and diffs the output).
@@ -299,16 +306,31 @@ def _cmd_session(args: argparse.Namespace) -> int:
             ses.attach_narrator(api.parse_narrator(args.narrator,
                                                    seed=args.narrator_seed))
 
+    def attach_tuner(ses) -> None:
+        if args.autotune:
+            api.autotune(ses, args.autotune, seed=args.autotune_seed,
+                         log_path=args.decision_log)
+
     ses = None
     if args.restore:
-        # a snapshot carries its narrator (RNG state and all); --narrator
-        # on top of --restore would replace it mid-stream, so refuse
+        # a snapshot carries its narrator and autotuner (RNG state and
+        # all); --narrator/--autotune on top of --restore would replace
+        # them mid-stream, so refuse
         if args.narrator:
             print("--narrator cannot be combined with --restore (the "
                   "snapshot already carries the narrator state)",
                   file=sys.stderr)
             return 2
+        if args.autotune:
+            print("--autotune cannot be combined with --restore (the "
+                  "snapshot already carries the autotuner state)",
+                  file=sys.stderr)
+            return 2
         ses = api.SimSession.restore(args.restore)
+        # the JSONL sink path is process-local (not snapshot state):
+        # --decision-log re-attaches it to a restored tuner
+        if args.decision_log and ses.autotuner is not None:
+            ses.autotuner.log_path = args.decision_log
     elif args.policy:
         overrides = {}
         if args.period is not None:
@@ -319,6 +341,7 @@ def _cmd_session(args: argparse.Namespace) -> int:
             overrides["compact_interval"] = args.compact_interval
         ses = api.open_session(args.nodes, args.policy, **overrides)
         attach_narrator(ses)
+        attach_tuner(ses)
 
     script = sys.stdin if args.script == "-" else open(args.script)
     try:
@@ -338,6 +361,7 @@ def _cmd_session(args: argparse.Namespace) -> int:
                                               "compact_interval")
                            if k in ev})
                     attach_narrator(ses)
+                    attach_tuner(ses)
                     emit({"kind": "open", "policy": ses.policy_name,
                           **ses.observe()})
                     continue
@@ -382,6 +406,17 @@ def _cmd_session(args: argparse.Namespace) -> int:
                 elif op == "period":
                     ses.set_period(float(ev["period"]))
                     emit({"kind": "inject", **ses.observe()})
+                elif op == "tune":
+                    tun = ses.autotuner
+                    if tun is None:
+                        raise ValueError("no autotuner attached (pass "
+                                         "--autotune SPEC)")
+                    swapped = tun.fire(ses, now=True)
+                    d = tun.decisions[-1]
+                    emit({"kind": "tune", "swapped": swapped,
+                          "reason": d["reason"],
+                          "decisions": len(tun.decisions),
+                          "policy": ses.policy_name, **ses.observe()})
                 elif op == "snapshot":
                     snap = ses.snapshot()
                     snap.save(ev["path"])
@@ -401,6 +436,65 @@ def _cmd_session(args: argparse.Namespace) -> int:
             script.close()
         if out is not sys.stdout:
             out.close()
+    return 0
+
+
+def _cmd_tune(args: argparse.Namespace) -> int:
+    """Run one autotuned session end to end: open, attach the
+    fork-race-promote tuner (and optionally a chaos narrator and a
+    scripted rack failure), run to exhaustion, report every tuning
+    decision plus the final metrics."""
+    import dataclasses
+
+    workloads = _workloads_from_args(args)
+    if len(workloads) > 1:
+        print("tune runs one session — pass a single --seeds/--loads "
+              "value", file=sys.stderr)
+        return 2
+    workload = workloads[0]
+    overrides = {}
+    if args.period is not None:
+        overrides["period"] = args.period
+    if args.penalty is not None:
+        overrides["penalty"] = args.penalty
+    try:
+        ses = api.open_session(args.nodes, args.policy, **overrides)
+        if args.narrator:
+            ses.attach_narrator(api.parse_narrator(args.narrator,
+                                                   seed=args.narrator_seed))
+        tuner = api.autotune(ses, args.spec, seed=args.seed,
+                             log_path=args.decision_log)
+        ses.submit(api.make_trace(workload))
+        if args.fail_at is not None:
+            nodes = list(range(min(args.fail_nodes, args.nodes)))
+            ses.inject({"kind": "fail", "t": args.fail_at, "nodes": nodes})
+            if args.join_at is not None:
+                ses.inject({"kind": "join", "t": args.join_at,
+                            "nodes": nodes})
+        ses.run_to_exhaustion()
+    except ValueError as e:
+        print(f"tune: {e}", file=sys.stderr)
+        return 2
+    r = ses.result()
+    if args.json:
+        print(json.dumps({"decisions": tuner.decisions,
+                          "final_policy": ses.policy_name,
+                          "result": dataclasses.asdict(r)}, indent=1))
+        return 0
+    swaps = [d for d in tuner.decisions if d["swapped"]]
+    print(f"tuned session: {workload.name} × {args.policy} "
+          f"(spec: {args.spec})")
+    for d in tuner.decisions:
+        line = (f"  t={d['t']:.0f}  {d['reason']:14s} "
+                f"win={d.get('winner_score', float('nan')):.2f} "
+                f"inc={d.get('incumbent_score', float('nan')):.2f}")
+        if d["swapped"]:
+            line += f"  -> {d['winner']['policy']}"
+        print(line)
+    print(f"{len(tuner.decisions)} decision(s), {len(swaps)} swap(s); "
+          f"final policy: {ses.policy_name}")
+    for key, label, fmt in _METRICS:
+        print(f"  {label:28s} {fmt.format(getattr(r, key))}")
     return 0
 
 
@@ -613,10 +707,53 @@ def build_parser() -> argparse.ArgumentParser:
                         "--restore)")
     p.add_argument("--narrator-seed", type=int, default=0,
                    help="narrator RNG seed (default: 0)")
+    p.add_argument("--autotune", default=None, metavar="SPEC",
+                   help="attach the fork-race-promote autotuner, e.g. "
+                        "'every=5000;policies=GreedyP */OPT=MIN|GreedyPM "
+                        "*/per/OPT=MIN/MINVT=600'; rides along in "
+                        "snapshots (not valid with --restore); the "
+                        "{\"op\": \"tune\"} script op forces a race now")
+    p.add_argument("--autotune-seed", type=int, default=0,
+                   help="autotuner RNG seed (default: 0)")
+    p.add_argument("--decision-log", default=None, metavar="PATH",
+                   help="append one JSONL line per autotune decision here "
+                        "(process-local; also re-attachable on --restore)")
     p.add_argument("--metrics", default=None, metavar="PATH",
                    help="write the JSONL metrics stream here (default: "
                         "stdout)")
     p.set_defaults(fn=_cmd_session)
+
+    p = sub.add_parser(
+        "tune",
+        help="run an autotuned session (fork-race-promote) end to end")
+    p.add_argument("--policy", required=True,
+                   help="starting (incumbent) policy")
+    p.add_argument("--spec", required=True, metavar="SPEC",
+                   help="autotune spec, e.g. 'every=5000;margin=0.02;"
+                        "policies=GreedyP */OPT=MIN|GreedyPM "
+                        "*/per/OPT=MIN/MINVT=600'")
+    add_workload_args(p, seeds_default="0")
+    p.add_argument("--seed", type=int, default=0,
+                   help="autotuner RNG seed (default: 0)")
+    p.add_argument("--period", type=float, default=None,
+                   help="periodic-pass period (s)")
+    p.add_argument("--penalty", type=float, default=None,
+                   help="rescheduling penalty (s)")
+    p.add_argument("--narrator", default=None, metavar="SPEC",
+                   help="attach a seeded chaos narrator")
+    p.add_argument("--narrator-seed", type=int, default=0,
+                   help="narrator RNG seed (default: 0)")
+    p.add_argument("--fail-at", type=float, default=None, metavar="T",
+                   help="inject a rack failure at this sim time")
+    p.add_argument("--fail-nodes", type=int, default=8,
+                   help="nodes in the failing rack (default: 8)")
+    p.add_argument("--join-at", type=float, default=None, metavar="T",
+                   help="rejoin the failed rack at this sim time")
+    p.add_argument("--decision-log", default=None, metavar="PATH",
+                   help="append one JSONL line per tuning decision")
+    p.add_argument("--json", action="store_true",
+                   help="decisions + full SimResult as JSON")
+    p.set_defaults(fn=_cmd_tune)
 
     p = sub.add_parser(
         "serve",

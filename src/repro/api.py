@@ -70,6 +70,8 @@ from .serve import (Client, CreditParams, ServeConfig, ServeError,
 from .serve import run_server as _run_server
 from .sched.sweep import (Cell, RecordCache, SweepResult, grid, run_batched,
                           run_branches, run_grid)
+from .tune import (AutoTuner, Objective, RaceResult, TuneConfig, Variant,
+                   list_objectives, parse_objective, parse_tune, race)
 from .workloads.registry import (WorkloadSpec, list_workloads, make_trace,
                                  make_trace_ir, parse_workload,
                                  register_workload, stream_trace,
@@ -116,6 +118,10 @@ __all__ = [
     # sweep subsystem
     "Cell", "SweepResult", "RecordCache", "grid", "run_grid", "run_batched",
     "run_branches",
+    # online what-if autotuning (fork-race-promote over live sessions)
+    "autotune", "AutoTuner", "TuneConfig", "parse_tune", "race",
+    "RaceResult", "Variant", "Objective", "parse_objective",
+    "list_objectives",
 ]
 
 TraceLike = Union[WorkloadSpec, Trace, Sequence[JobSpec]]
@@ -257,6 +263,30 @@ def serve(
                             checkpoint_every=checkpoint_every,
                             credit=credit),
                 announce=announce)
+
+
+def autotune(
+    session: SimSession,
+    config: Union[str, TuneConfig, None] = None,
+    *,
+    seed: int = 0,
+    log_path: Optional[str] = None,
+) -> AutoTuner:
+    """Put a live session under online what-if autotuning.
+
+    Builds an :class:`AutoTuner` (``config`` is a :class:`TuneConfig`, a
+    ``parse_tune`` spec string like
+    ``"every=5000;policies=GreedyP */OPT=MIN|GreedyPM */per/OPT=MIN/MINVT=600"``,
+    or ``None`` for defaults), attaches it, and returns it.  From then on
+    the stepping loop periodically forks the session, races the portfolio
+    over a bounded horizon with successive halving, and hot-swaps a
+    decisively better variant in (hysteresis + min-dwell).  Decisions
+    accumulate on ``tuner.decisions`` (and ``log_path`` as JSONL); tuner
+    state rides ``session.snapshot()`` bit-exactly.
+    """
+    tuner = AutoTuner(config, seed=seed, log_path=log_path)
+    session.attach_autotuner(tuner)
+    return tuner
 
 
 def list_policies(include_paper_space: bool = False) -> Dict[str, Any]:

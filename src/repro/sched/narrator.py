@@ -331,6 +331,19 @@ class Narrator:
         for s in self.streams:
             s.on_submitted(session, idx)
 
+    def reseed(self, seed: int) -> None:
+        """Re-derive every stream's RNG from a fresh seed and drop the
+        pending firing times (they re-prime lazily at the session clock).
+
+        This is how what-if branches race *oracle-free*: every branch of
+        one race shares the same reseeded chaos (common random numbers,
+        fair comparison) while being decorrelated from the future the live
+        session will actually experience."""
+        self.seed = int(seed)
+        for k, s in enumerate(self.streams):
+            s.seed(self.seed, k)
+            s.next_t = None
+
     # ---- snapshot round-trip -------------------------------------------- #
     def state(self) -> Dict[str, Any]:
         return {"seed": self.seed,

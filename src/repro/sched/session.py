@@ -367,6 +367,8 @@ class SimSession:
         #: they would with the whole trace submitted upfront
         self._stream_pending = False
         self._narrator: Optional[Narrator] = None
+        #: optional repro.tune.AutoTuner driven from the stepping loop
+        self._tuner = None
         self._closed = False
         self._close_hooks: List[Any] = []
         #: ephemeral driver scratchpad (reactive rules keep per-session
@@ -647,12 +649,21 @@ class SimSession:
 
     def set_period(self, period: float) -> None:
         """Change the periodic-pass period live (takes effect from the next
-        tick; no-op for compositions without a periodic component)."""
+        tick; no-op for compositions without a periodic component).
+
+        The engine's ``SimParams`` is *replaced*, never mutated in place:
+        a params object shared with other engines or sessions (the
+        ``from_engine`` path, sweep cell templates) never sees the change,
+        and a snapshot taken at any point — including before the next
+        periodic event fires — carries exactly the period this session is
+        running.
+        """
         self._require_open("change the period of")
         period = float(period)
         if period <= 0:
             raise ValueError("period must be > 0")
-        self.engine.params.period = period
+        self.engine.params = dataclasses.replace(self.engine.params,
+                                                 period=period)
 
     def attach_narrator(self, narrator: Narrator) -> None:
         """Attach a chaos :class:`~repro.sched.narrator.Narrator`: its
@@ -672,6 +683,73 @@ class SimSession:
     @property
     def narrator(self) -> Optional[Narrator]:
         return self._narrator
+
+    def switch_policy(self, policy) -> None:
+        """Hot-swap the scheduling policy in place, mid-run.
+
+        The live engine state — running set, queue, virtual times, pending
+        arrivals, the event counter — is untouched; the new policy rebuilds
+        its private state from it exactly like a what-if fork
+        (``restore(snap, policy=...)``) would, so a live swap and a
+        fork-and-continue from the same event boundary behave identically.
+        This is the promotion primitive behind :mod:`repro.tune`.
+
+        Refused for policies that do not handle cluster events while the
+        session still needs them (an attached chaos narrator, pending
+        injected events, or dead nodes) — batch baselines do not model
+        failures.
+        """
+        self._require_open("switch the policy of")
+        e = self.engine
+        st = e.state
+        spec, pol, ref = resolve_policy_arg(policy)
+        if not pol.handles_cluster_events:
+            if (self._narrator is not None
+                    and self._narrator.needs_cluster_events()):
+                raise ValueError(
+                    f"cannot switch to {policy!r}: it does not handle "
+                    f"cluster events but the attached narrator injects them")
+            if self._ci < len(self._cev):
+                raise ValueError(
+                    f"cannot switch to {policy!r}: it does not handle "
+                    f"cluster events and "
+                    f"{len(self._cev) - self._ci} are still pending")
+            if not bool(st.alive.all()):
+                raise ValueError(
+                    f"cannot switch to {policy!r}: it does not handle "
+                    f"cluster events and the cluster has dead nodes")
+            self._cev = []
+            self._ci = 0
+        pol.validate(st.specs, e.params)
+        e.policy_spec, e.policy, e.policy_ref = spec, pol, ref
+        pol.bind(e)
+        _adopt_policy_state(pol, e)
+        self._periodic = pol.periodic_kind is not None
+        if not self._periodic:
+            self._next_tick = math.inf
+        elif math.isinf(self._next_tick):
+            # the swap introduced a periodic pass mid-run: base its tick
+            # train at the live clock (the fork path does the same)
+            self._next_tick = st.now + e.params.period
+            self._tick_armed = True
+        self._exhausted = False         # the new policy may act again
+
+    def attach_autotuner(self, tuner) -> None:
+        """Attach an :class:`repro.tune.AutoTuner`: it fires lazily from
+        the stepping loop like the narrator — fork, race, maybe promote —
+        and its full state (RNG, schedule, decision log) rides along in
+        snapshots bit-exactly."""
+        self._require_open("attach an autotuner to")
+        if self.engine.policy_ref is None:
+            raise ValueError(
+                "session policy has no rebuildable reference (ad-hoc "
+                "Policy instance); the tuner could not race or restore it")
+        self._tuner = tuner
+        self._exhausted = False         # tuner peeks re-arm the loop
+
+    @property
+    def autotuner(self):
+        return self._tuner
 
     # -- projected state (pending injections applied) -----------------------
     def _projected_alive(self, t: Optional[float] = None) -> np.ndarray:
@@ -759,6 +837,33 @@ class SimSession:
                     if math.isinf(t_next) and math.isfinite(nar.peek(self)):
                         break           # chaos pending beyond the step
                                         # bound — a peek, not an event
+                # the autotuner fires at the same lazy boundary the
+                # narrator does: when its scheduled time is due before the
+                # next engine event AND inside the step bound — so the
+                # fire point (and therefore the race snapshot and the
+                # decision log) is identical no matter how the run is
+                # partitioned into step()/step_until() calls.  A fire is
+                # not an engine event; a promotion invalidates the cached
+                # loop locals, so restart the iteration.
+                tun = self._tuner
+                if tun is not None and armed and not math.isinf(t_next):
+                    swapped = False
+                    while True:
+                        t_tun = tun.peek(self)
+                        if not (t_tun <= t_next
+                                and (t_tun < until if exclusive
+                                     else t_tun <= until)):
+                            break
+                        if tun.fire(self):
+                            swapped = True
+                            break
+                    if swapped:
+                        pol = e.policy
+                        p = e.params
+                        periodic = self._periodic
+                        cev = self._cev
+                        compact_every = p.compact_interval
+                        continue
                 if exclusive and (math.isinf(t_next) or t_next >= until):
                     break               # stream-window boundary peek — the
                                         # next chunk arrives before t_next
@@ -831,13 +936,18 @@ class SimSession:
         self._horizon = max(self._horizon, t, self.engine.state.now)
         return self.now
 
-    def step(self, n_events: int = 1) -> int:
+    def step(self, n_events: int = 1, *, until: float = math.inf) -> int:
         """Process up to ``n_events`` event timestamps; returns how many
-        were actually processed (0 when the run is exhausted)."""
+        were actually processed (0 when the run is exhausted).  ``until``
+        additionally bounds the processed timestamps (inclusive, like
+        :meth:`step_until`) — fewer than ``n_events`` processed with a
+        finite ``until`` means the bound was reached (or the run
+        exhausted), which is what budgeted-horizon branch runs chunk on.
+        """
         self._require_open("step")
         if n_events < 1:
             raise ValueError("n_events must be >= 1")
-        steps = self._loop(max_steps=int(n_events))
+        steps = self._loop(until=float(until), max_steps=int(n_events))
         self._horizon = max(self._horizon, self.engine.state.now)
         return steps
 
@@ -1009,6 +1119,9 @@ class SimSession:
         if self._narrator is not None:
             # optional key: narrator-free snapshots keep the legacy shape
             payload["narrator"] = self._narrator.state()
+        if self._tuner is not None:
+            # optional key: tuner RNG + schedule + decision log ride along
+            payload["autotune"] = self._tuner.state()
         return SessionState(payload)
 
     @classmethod
@@ -1132,6 +1245,14 @@ class SimSession:
             # fork onto a batch baseline: the cluster script is dropped, so
             # the chaos streams that feed it go too (noise-only survives)
             ses._narrator = None
+        tun_pl = pl.get("autotune")
+        if tun_pl and not switched:
+            from ..tune.controller import AutoTuner
+            ses._tuner = AutoTuner.from_state(tun_pl)
+        else:
+            # policy-switching forks are what-if branches: they race under
+            # the tuner, they never recursively run one
+            ses._tuner = None
         ses._closed = False
         ses._close_hooks = []
         ses.scratch = {}

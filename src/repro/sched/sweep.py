@@ -23,6 +23,7 @@ once per worker, not once per cell.
 from __future__ import annotations
 
 import json
+import math
 import multiprocessing as mp
 import os
 import sys
@@ -235,10 +236,26 @@ def _run_cell(task: Tuple[int, Cell, bool],
 # --------------------------------------------------------------------------- #
 # supervised execution: timeouts, bounded retries, quarantine                  #
 # --------------------------------------------------------------------------- #
-def _quarantine_record(idx: int, cell: Cell, error: str,
+def _quarantine_record(idx: int, cell: Any, error: str,
                        attempts: int) -> Dict[str, Any]:
-    """A record standing in for a cell that could not be simulated: same
-    identity fields as a real record, ``quarantined=True``, no metrics."""
+    """A record standing in for a cell (or what-if branch) that could not
+    be simulated: same identity fields as a real record,
+    ``quarantined=True``, no metrics."""
+    if isinstance(cell, _Branch):
+        return {
+            "cell": idx,
+            "branch": idx,
+            "policy": cell.policy,
+            "period": cell.period,
+            "branch_policy": cell.snap.policy,
+            "branch_time": cell.snap.time,
+            "branch_fingerprint": cell.snap.fingerprint,
+            "horizon_s": cell.horizon_s,
+            "branch_seed": cell.branch_seed,
+            "quarantined": True,
+            "error": error,
+            "attempts": attempts,
+        }
     return {
         "cell": idx,
         "workload": cell.workload.name,
@@ -262,7 +279,7 @@ def _supervised_worker(conn) -> None:
             if task is None:
                 break
             try:
-                rec = _run_cell(task)
+                rec = _run_task(task)
             except BaseException as exc:  # noqa: BLE001 — reported; driver decides
                 conn.send(("err", f"{type(exc).__name__}: {exc}"))
             else:
@@ -386,23 +403,161 @@ def _run_supervised(
 # --------------------------------------------------------------------------- #
 # what-if branching: policy comparison from an identical live state            #
 # --------------------------------------------------------------------------- #
+@dataclass(frozen=True)
+class _Branch:
+    """One what-if branch task: a snapshot forked under one policy/period
+    variant, optionally horizon-bounded, early-stopped, and chaos-reseeded.
+    Picklable (travels through the supervised worker pipes)."""
+
+    snap: Any                       # SessionState
+    policy: str
+    same: bool                      # continue the snapshot's own policy
+    period: Optional[float] = None
+    horizon_s: Optional[float] = None
+    early_stop: Optional[Dict[str, float]] = None
+    branch_seed: Optional[int] = None
+
+
+def _run_task(task: Tuple, alloc_backend: Optional[object] = None
+              ) -> Dict[str, Any]:
+    """Worker-side dispatch: grid cells and what-if branches share the
+    supervised driver and the batched-backend lanes."""
+    if isinstance(task[1], _Branch):
+        return _run_branch(task, alloc_backend=alloc_backend)
+    return _run_cell(task, alloc_backend=alloc_backend)
+
+
+#: early-stop progress check cadence (events between partial-metric looks).
+#: Fixed, never caller-partitioned: the check points — and therefore the
+#: stopped-at state — are deterministic for a given branch.
+_EARLY_STOP_CHUNK = 256
+
+
+def _run_branch(task: Tuple[int, "_Branch", Any],
+                alloc_backend: Optional[object] = None) -> Dict[str, Any]:
+    idx, br, _ = task
+    from .session import SimSession
+
+    t1 = time.perf_counter()
+    ses = SimSession.restore(br.snap, policy=None if br.same else br.policy)
+    ses._tuner = None           # branches race under a tuner, never run one
+    period_changed = False
+    if br.period is not None and br.period != ses.engine.params.period:
+        ses.set_period(br.period)
+        period_changed = True
+    if br.branch_seed is not None and ses.narrator is not None:
+        ses.narrator.reseed(br.branch_seed)
+    if alloc_backend is not None:
+        ses.engine.alloc_backend = alloc_backend
+    target = (math.inf if br.horizon_s is None
+              else br.snap.time + float(br.horizon_s))
+    stopped = False
+    thresh = (br.early_stop or {}).get("max_stretch_above")
+    if thresh is not None:
+        # chunked stepping with deterministic look points: completed-job
+        # max stretch is monotone in sim time, so crossing the threshold
+        # is final — stop paying for a branch that already lost
+        while True:
+            n = ses.step(_EARLY_STOP_CHUNK, until=target)
+            if ses.result(partial=True, light=True).max_stretch > thresh:
+                stopped = True
+                break
+            if n < _EARLY_STOP_CHUNK:
+                break
+    elif math.isinf(target):
+        ses.run_to_exhaustion()
+    else:
+        ses.step_until(target)
+    r = ses.result()
+    wall = time.perf_counter() - t1
+    return {
+        "cell": idx,
+        "branch": idx,
+        "policy": br.policy,
+        "period": ses.engine.params.period,
+        "branch_policy": br.snap.policy,
+        "branch_time": br.snap.time,
+        "branch_fingerprint": br.snap.fingerprint,
+        "exact_continuation": (br.same and not period_changed
+                               and br.branch_seed is None),
+        "horizon_s": br.horizon_s,
+        "branch_seed": br.branch_seed,
+        "early_stopped": stopped,
+        "partial": not ses.exhausted,
+        "max_stretch": r.max_stretch,
+        "mean_stretch": r.mean_stretch,
+        "makespan": r.makespan,
+        "underutilization": r.underutilization,
+        "n_pmtn": r.n_pmtn,
+        "n_mig": r.n_mig,
+        "pmtn_per_job": r.pmtn_per_job,
+        "mig_per_job": r.mig_per_job,
+        "bytes_moved_gb": r.bytes_moved_gb,
+        "bandwidth_gbps": r.bandwidth_gbps,
+        "events": r.events,
+        "n_events": r.n_events,
+        "hit_max_events": r.hit_max_events,
+        "final_time": r.final_time,
+        "sim_wall_s": r.sim_wall_s,
+        "wall_s": wall,
+    }
+
+
 def run_branches(
     snapshot,
-    policies: Sequence[str],
+    policies: Sequence[Any],
     json_path: Optional[str] = None,
+    *,
+    horizon_s: Optional[float] = None,
+    early_stop: Optional[Dict[str, float]] = None,
+    branch_seed: Optional[int] = None,
+    timeout_s: Optional[float] = None,
+    retries: int = 0,
+    quarantine: bool = False,
+    backend: Optional[str] = None,
+    n_workers: int = 1,
 ) -> SweepResult:
-    """Fork one mid-run session snapshot under several policies.
+    """Fork one mid-run session snapshot under several policy variants.
 
     ``snapshot`` is a :class:`repro.sched.session.SessionState` (or a path
-    / JSON dict of one).  Every policy resumes from the *identical* live
+    / JSON dict of one).  Every variant resumes from the *identical* live
     cluster state — same running set, same queue, same virtual times, same
-    pending arrivals — and runs to exhaustion; the records compare what
-    each policy does with the exact same mid-run situation, a scenario
-    axis no closed-world batch run can produce.  The snapshot's own policy
-    continues bit-identically; other policies adopt the live state (see
-    ``SimSession.restore``).
+    pending arrivals — the scenario axis no closed-world batch run can
+    produce.  The snapshot's own policy continues bit-identically
+    (``exact_continuation``); other policies adopt the live state (see
+    ``SimSession.restore``).  An attached autotuner never follows into a
+    branch (branches race under tuners, they don't run them).
+
+    ``policies`` entries are policy strings, or ``{"policy": ...,
+    "period": ...}`` dicts to race period variants of one policy.
+
+    Tuner-race options (all default to the legacy full-run behavior):
+
+    * ``horizon_s`` — budgeted horizon: each branch runs only to
+      ``snapshot.time + horizon_s`` and reports *partial* metrics
+      (``partial=True`` on unfinished branches).
+    * ``early_stop`` — ``{"max_stretch_above": x}`` declaratively stops a
+      branch at a deterministic check point once its completed-job max
+      stretch exceeds ``x`` (monotone, so the branch has already lost);
+      the record carries ``early_stopped=True``.
+    * ``branch_seed`` — reseed every branch's chaos narrator with this
+      common seed: branches race under *common random numbers* while being
+      decorrelated from the live session's actual future (oracle-free).
+    * ``timeout_s``/``retries`` — the supervised driver from
+      :func:`run_grid`: each branch gets a wall-clock budget and bounded
+      reseeded retries on fresh worker processes; exhausted branches come
+      back as quarantine records.  Wall-clock supervision is inherently
+      nondeterministic — leave it off where bit-identical replay matters.
+    * ``quarantine`` — in the default serial in-process mode, turn a
+      crashing branch into a quarantine record instead of propagating
+      (the supervised and batched paths always isolate failures).
+    * ``backend="jax"``/``"pallas"`` — race all branches through one
+      lockstep batched allocation device (see :func:`run_batched`).
+
+    Records gain ``horizon_s``, ``branch_seed``, ``early_stopped``,
+    ``partial`` and ``period`` next to the PR-5 branch fields.
     """
-    from .session import SessionState, SimSession
+    from .session import SessionState
 
     if isinstance(snapshot, str):
         snapshot = SessionState.load(snapshot)
@@ -410,44 +565,92 @@ def run_branches(
         snapshot = SessionState.from_json_dict(snapshot)
     origin = (_canonical_policy(snapshot.policy)
               if snapshot.policy is not None else None)
-    t0 = time.perf_counter()
-    records: List[Dict[str, Any]] = []
-    for i, policy in enumerate(policies):
+    branches: List[_Branch] = []
+    for entry in policies:
+        if isinstance(entry, dict):
+            policy = entry["policy"]
+            period = entry.get("period")
+            period = None if period is None else float(period)
+        else:
+            policy, period = entry, None
         same = origin is not None and _canonical_policy(policy) == origin
-        t1 = time.perf_counter()
-        ses = SimSession.restore(snapshot, policy=None if same else policy)
-        r = ses.run()
-        wall = time.perf_counter() - t1
-        records.append({
-            "cell": i,
-            "branch": i,
-            "policy": policy,
-            "branch_policy": snapshot.policy,
-            "branch_time": snapshot.time,
-            "branch_fingerprint": snapshot.fingerprint,
-            "exact_continuation": same,
-            "max_stretch": r.max_stretch,
-            "mean_stretch": r.mean_stretch,
-            "makespan": r.makespan,
-            "underutilization": r.underutilization,
-            "n_pmtn": r.n_pmtn,
-            "n_mig": r.n_mig,
-            "pmtn_per_job": r.pmtn_per_job,
-            "mig_per_job": r.mig_per_job,
-            "bytes_moved_gb": r.bytes_moved_gb,
-            "bandwidth_gbps": r.bandwidth_gbps,
-            "events": r.events,
-            "n_events": r.n_events,
-            "hit_max_events": r.hit_max_events,
-            "final_time": r.final_time,
-            "sim_wall_s": r.sim_wall_s,
-            "wall_s": wall,
-        })
+        branches.append(_Branch(
+            snap=snapshot, policy=policy, same=same, period=period,
+            horizon_s=horizon_s, early_stop=early_stop,
+            branch_seed=branch_seed))
+    tasks = [(i, br, None) for i, br in enumerate(branches)]
+    supervised = timeout_s is not None or retries > 0
+    t0 = time.perf_counter()
+    if backend not in (None, "numpy"):
+        if backend not in ("jax", "pallas"):
+            raise ValueError(f"unknown branch backend {backend!r}")
+        records = _run_branches_batched(
+            tasks, matvec="jnp" if backend == "jax" else "pallas",
+            quarantine=quarantine or supervised)
+    elif supervised:
+        records = _run_supervised(tasks, n_workers, timeout_s, retries)
+    else:
+        records = []
+        for t in tasks:
+            try:
+                records.append(_run_task(t))
+            except Exception as exc:  # noqa: BLE001 — quarantined below
+                if not quarantine:
+                    raise
+                records.append(_quarantine_record(
+                    t[0], t[1], f"{type(exc).__name__}: {exc}", attempts=1))
+    records.sort(key=lambda r: r["cell"])
     res = SweepResult(records=records, wall_s=time.perf_counter() - t0,
                       n_workers=1)
     if json_path is not None:
         res.save_json(json_path)
     return res
+
+
+def _run_branches_batched(tasks: Sequence[Tuple], matvec: str,
+                          quarantine: bool) -> List[Dict[str, Any]]:
+    """Race every branch through one lockstep batched allocation device
+    (same lane structure as :func:`run_batched`; restore pins branches to
+    the numpy backend, so each lane re-attaches its dispatcher lane)."""
+    from ..core import alloc_jax
+
+    n = len(tasks)
+    if n == 0:
+        return []
+    dispatcher = alloc_jax.LockstepDispatcher(
+        n, alloc_jax.BatchedAllocator(matvec=matvec))
+    records: List[Optional[Dict[str, Any]]] = [None] * n
+    errors: List[Optional[BaseException]] = [None] * n
+
+    def _lane_main(i: int) -> None:
+        try:
+            records[i] = _run_task(tasks[i],
+                                   alloc_backend=dispatcher.lane(i))
+        except BaseException as exc:  # noqa: BLE001 — re-raised by driver
+            errors[i] = exc
+        finally:
+            dispatcher.finish_lane(i)
+
+    threads = [threading.Thread(target=_lane_main, args=(i,), daemon=True)
+               for i in range(n)]
+    for t in threads:
+        t.start()
+    dispatcher.serve()
+    for t in threads:
+        t.join()
+    first = next((e for e in errors if e is not None), None)
+    if first is not None and not quarantine:
+        raise first
+    out: List[Dict[str, Any]] = []
+    for i, (rec, err) in enumerate(zip(records, errors)):
+        if rec is None:
+            msg = (f"{type(err).__name__}: {err}" if err is not None
+                   else "lane produced no record")
+            out.append(_quarantine_record(i, tasks[i][1], msg, attempts=1))
+        else:
+            rec["backend"] = "jax"
+            out.append(rec)
+    return out
 
 
 # --------------------------------------------------------------------------- #

@@ -50,7 +50,7 @@ SCHEMA = "repro.serve/v1"
 #: ops that advance session state; journaled with a per-session ``seq``
 MUTATING_OPS = frozenset({
     "open", "submit", "step_until", "step", "run", "inject", "period",
-    "close",
+    "tune", "close",
 })
 #: ops that only read (or persist a checkpoint of) existing state
 READ_OPS = frozenset({"observe", "result", "snapshot"})
@@ -123,6 +123,13 @@ def build_session(args: Dict[str, Any]) -> SimSession:
         from ..sched.narrator import parse_narrator
         ses.attach_narrator(
             parse_narrator(spec, seed=int(args.get("narrator_seed", 0))))
+    tune_spec = args.get("autotune")
+    if tune_spec:
+        # seeded and wall-clock-free, so an autotuned session replays
+        # bit-identically from its journal like any other
+        from ..tune.controller import AutoTuner
+        ses.attach_autotuner(
+            AutoTuner(tune_spec, seed=int(args.get("autotune_seed", 0))))
     return ses
 
 
@@ -170,6 +177,17 @@ def apply_op(ses: SimSession, op: str, args: Dict[str, Any]) -> Dict[str, Any]:
     if op == "period":
         ses.set_period(float(args["period"]))
         return ses.observe()
+    if op == "tune":
+        tun = ses.autotuner
+        if tun is None:
+            raise ProtocolError(
+                E_OP_ERROR, "no autotuner attached (open the session "
+                "with an 'autotune' spec)")
+        swapped = tun.fire(ses, now=True)
+        d = tun.decisions[-1]
+        return {"swapped": swapped, "reason": d["reason"],
+                "decisions": len(tun.decisions),
+                "policy": ses.policy_name, **ses.observe()}
     raise ProtocolError(E_BAD_REQUEST, f"unknown mutating op {op!r}")
 
 

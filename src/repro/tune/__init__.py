@@ -1,0 +1,29 @@
+"""Online what-if autotuning: fork-race-promote policy search.
+
+The paper's premise is that *online* scheduling decisions beat static
+batch policies; this package applies the same idea to the scheduler's own
+configuration.  An :class:`AutoTuner` periodically forks the live
+:class:`~repro.sched.session.SimSession` (via ``snapshot()``), races a
+portfolio of policy/period variants over a bounded sim-time horizon with
+successive halving (:mod:`~repro.tune.race`), scores the survivors with a
+pluggable objective (:mod:`~repro.tune.score`), and hot-swaps the winner
+into the running session (:meth:`SimSession.switch_policy`) — but only on
+a decisive margin after a minimum dwell, so the live policy never
+flip-flops.  Tuner RNG, schedule and decision log ride session snapshots
+bit-exactly; see ARCHITECTURE.md "Autotuning layer".
+"""
+from .controller import AutoTuner, TuneConfig, parse_tune
+from .race import RaceResult, Variant, race
+from .score import Objective, list_objectives, parse_objective
+
+__all__ = [
+    "AutoTuner",
+    "TuneConfig",
+    "parse_tune",
+    "RaceResult",
+    "Variant",
+    "race",
+    "Objective",
+    "list_objectives",
+    "parse_objective",
+]

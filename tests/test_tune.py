@@ -1,0 +1,471 @@
+"""The online what-if autotuner: fork-race-promote over live sessions.
+
+* spec/objective grammars (``parse_tune``, ``parse_objective``) and the
+  scoring contract (missing/non-finite metrics lose);
+* the session hot-swap surface: ``switch_policy`` equivalence to a
+  fork-and-switch, its refusals, and the ``set_period`` aliasing fix;
+* ``run_branches`` horizon/early-stop/branch-seed extensions and
+  quarantined crashing branches;
+* successive-halving races: champion/challenger selection, incumbent tie
+  preference, a crashing variant losing (not killing) the race;
+* determinism: the decision log is invariant to step partitioning, to
+  snapshot/restore (same and fresh process), and an incumbent-pinned
+  tuner reproduces the untuned ``SimResult`` bit for bit;
+* end-to-end wiring: ``api.autotune``, the session CLI ``--autotune`` /
+  ``tune`` op, the ``tune`` subcommand, and the serve-layer ``tune`` op.
+"""
+import json
+import math
+import os
+import subprocess
+import sys
+
+import pytest
+
+from conftest import result_dict
+from repro import api
+from repro.__main__ import main as cli_main
+from repro.sched.sweep import run_branches
+from repro.tune import (AutoTuner, TuneConfig, Variant, parse_objective,
+                        parse_tune, race)
+
+GREEDY_P = "GreedyP */OPT=MIN"
+GREEDY_PM = "GreedyPM */per/OPT=MIN/MINVT=600"
+NODES = 32
+RACK = list(range(8))
+
+
+def _rack_failure_session(policy=GREEDY_P, jobs=80, seed=7, load=1.1,
+                          fail_t=2050.0, join_t=6000.0, narrator=None,
+                          narrator_seed=9):
+    """The chaos cell every e2e test runs: a rack failure with a late
+    rejoin, where the migration policy digs out better than GreedyP."""
+    ses = api.open_session(NODES, policy)
+    if narrator:
+        ses.attach_narrator(api.parse_narrator(narrator, seed=narrator_seed))
+    ses.submit(api.parse_workload("lublin", n_jobs=jobs, n_nodes=NODES,
+                                  seed=seed, load=load))
+    ses.inject({"kind": "fail", "t": fail_t, "nodes": RACK})
+    ses.inject({"kind": "join", "t": join_t, "nodes": RACK})
+    return ses
+
+
+SPEC = ("every=1500;horizon=4000;rungs=2;margin=0.01;dwell=0;"
+        f"policies={GREEDY_P}|{GREEDY_PM}")
+
+
+# --------------------------------------------------------------------------- #
+# grammars                                                                     #
+# --------------------------------------------------------------------------- #
+def test_parse_tune_grammar():
+    cfg = parse_tune("every=5000;horizon=2500;rungs=3;margin=0.1;"
+                     f"dwell=9000;objective=mean_stretch;"
+                     f"policies={GREEDY_P}|{GREEDY_PM};periods=600,1200")
+    assert cfg.every == 5000.0 and cfg.horizon == 2500.0
+    assert cfg.rungs == 3 and cfg.margin == 0.1 and cfg.dwell == 9000.0
+    assert cfg.policies == (GREEDY_P, GREEDY_PM)
+    assert cfg.periods == (600.0, 1200.0)
+    # derived defaults
+    d = parse_tune("every=1000")
+    assert d.base_horizon == 500.0 and d.min_dwell == 2000.0
+
+
+@pytest.mark.parametrize("bad", [
+    "every=0", "rungs=0;every=10", "margin=1.5;every=10",
+    "nonsense=1", "every", "objective=not_a_metric",
+])
+def test_parse_tune_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_tune(bad)
+
+
+def test_parse_objective_names_blends_and_errors():
+    assert parse_objective("max_stretch").prunable_by_max_stretch
+    blend = parse_objective("0.7*max_stretch+0.3*mean_stretch")
+    assert blend.terms == ((0.7, "max_stretch"), (0.3, "mean_stretch"))
+    assert not blend.prunable_by_max_stretch
+    assert blend.score({"max_stretch": 10.0, "mean_stretch": 2.0}) \
+        == pytest.approx(7.6)
+    # quarantined / metric-less records lose
+    assert blend.score({"max_stretch": 10.0}) == math.inf
+    assert blend.score({"max_stretch": 10.0, "mean_stretch": float("nan")}) \
+        == math.inf
+    with pytest.raises(ValueError, match="unknown objective metric"):
+        parse_objective("wall_s")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_objective("2**max_stretch")
+
+
+# --------------------------------------------------------------------------- #
+# the hot-swap surface                                                         #
+# --------------------------------------------------------------------------- #
+def test_set_period_does_not_mutate_shared_params():
+    from repro.sched.engine import Engine, SimParams
+
+    params = SimParams(n_nodes=16, period=600.0)
+    specs = api.make_trace(api.parse_workload("lublin", n_jobs=10,
+                                              n_nodes=16, seed=0))
+    ses = api.SimSession.from_engine(Engine(specs, "FCFS", params))
+    ses.set_period(150.0)
+    assert ses.engine.params.period == 150.0
+    assert params.period == 600.0          # the caller's template survives
+
+
+def test_set_period_survives_snapshot_roundtrip():
+    ses = _rack_failure_session(GREEDY_PM)
+    ses.step_until(1000.0)
+    ses.set_period(333.0)
+    restored = api.SimSession.restore(ses.snapshot())
+    assert restored.engine.params.period == 333.0
+    ses.run_to_exhaustion()
+    restored.run_to_exhaustion()
+    assert result_dict(restored.result()) == result_dict(ses.result())
+
+
+def test_switch_policy_equals_fork_switch():
+    ses = _rack_failure_session()
+    ses.step_until(2500.0)
+    forked = api.SimSession.restore(ses.snapshot(), policy=GREEDY_PM)
+    ses.switch_policy(GREEDY_PM)
+    assert ses.policy_name == GREEDY_PM
+    ses.run_to_exhaustion()
+    forked.run_to_exhaustion()
+    assert result_dict(ses.result()) == result_dict(forked.result())
+
+
+def test_switch_policy_refusals():
+    # pending future cluster events: a batch policy cannot absorb them
+    ses = _rack_failure_session()
+    ses.step_until(100.0)
+    with pytest.raises(ValueError):
+        ses.switch_policy("EASY")
+    # dead nodes: same refusal once the failure has struck
+    ses.step_until(6500.0)
+    ses2 = _rack_failure_session(join_t=40000.0)
+    ses2.step_until(3000.0)
+    with pytest.raises(ValueError):
+        ses2.switch_policy("EASY")
+    # a DFRS policy that handles cluster events swaps in fine either way
+    ses2.switch_policy(GREEDY_PM)
+    assert ses2.policy_name == GREEDY_PM
+
+
+# --------------------------------------------------------------------------- #
+# run_branches: horizons, early stop, quarantine                               #
+# --------------------------------------------------------------------------- #
+def test_run_branches_horizon_and_seed_fields():
+    ses = _rack_failure_session()
+    ses.step_until(2500.0)
+    snap = ses.snapshot()
+    res = run_branches(snap, [GREEDY_P, {"policy": GREEDY_PM,
+                                         "period": 300.0}],
+                       horizon_s=1000.0, branch_seed=42)
+    assert len(res.records) == 2
+    for rec in res.records:
+        assert rec["horizon_s"] == 1000.0
+        assert rec["branch_seed"] == 42
+        assert rec["partial"] is True
+        assert rec["final_time"] <= snap.time + 1000.0 + 1e-9
+    # a reseeded branch is no longer the exact live continuation, and a
+    # period override marks the record
+    assert not res.records[0]["exact_continuation"]
+    assert res.records[1]["period"] == 300.0
+
+
+def test_run_branches_unbounded_same_policy_is_exact_continuation():
+    ses = api.open_session(NODES, GREEDY_P)
+    ses.submit(api.parse_workload("lublin", n_jobs=40, n_nodes=NODES,
+                                  seed=3, load=1.0))
+    ses.step_until(1500.0)
+    snap = ses.snapshot()
+    res = run_branches(snap, [GREEDY_P])
+    rec = res.records[0]
+    assert rec["exact_continuation"] and not rec["partial"]
+    ses.run_to_exhaustion()
+    assert rec["max_stretch"] == ses.result(light=True).max_stretch
+
+
+def test_run_branches_early_stop_and_quarantine():
+    ses = _rack_failure_session()
+    ses.step_until(2500.0)
+    snap = ses.snapshot()
+    res = run_branches(snap, [GREEDY_P, "NotAPolicy/NOPE"],
+                       horizon_s=3000.0,
+                       early_stop={"max_stretch_above": 0.5},
+                       quarantine=True)
+    ok, bad = res.records
+    # every completed job has stretch >= 1, so the first look point trips
+    assert ok["early_stopped"] and ok["partial"]
+    assert bad["quarantined"] and "NotAPolicy" in bad["policy"]
+    assert "error" in bad and bad["horizon_s"] == 3000.0
+    # without quarantine the crash propagates
+    with pytest.raises(ValueError):
+        run_branches(snap, ["NotAPolicy/NOPE"])
+
+
+# --------------------------------------------------------------------------- #
+# races                                                                        #
+# --------------------------------------------------------------------------- #
+def test_race_crashing_variant_loses_and_winner_promotes():
+    ses = _rack_failure_session(join_t=7000.0, jobs=150)
+    ses.step_until(6000.0)
+    rr = race(ses.snapshot(),
+              [Variant("NotAPolicy/NOPE"), Variant(GREEDY_PM)],
+              Variant(GREEDY_P, 600.0),
+              base_horizon=2000.0, rungs=2, branch_seed=1)
+    assert rr.winner.policy == GREEDY_PM and rr.promoted
+    assert rr.winner_score < rr.incumbent_score
+    # the crasher scored inf on rung 0 and was eliminated there
+    r0 = rr.rungs[0]
+    bad = r0["variants"].index("NotAPolicy/NOPE")
+    assert r0["scores"][bad] == math.inf
+    assert "NotAPolicy/NOPE" in r0["eliminated"]
+    assert len(rr.rungs) == 2
+
+
+def test_race_empty_portfolio_and_tie_prefers_incumbent():
+    ses = _rack_failure_session()
+    ses.step_until(1000.0)
+    snap = ses.snapshot()
+    rr = race(snap, [], Variant(GREEDY_P, 600.0),
+              base_horizon=500.0, rungs=1)
+    assert not rr.promoted and rr.winner.key() == Variant(
+        GREEDY_P, 600.0).key()
+    # an identically-scoring duplicate (same policy, explicit period)
+    # never displaces the incumbent
+    rr = race(snap, [Variant(GREEDY_P)], Variant(GREEDY_P, 600.0),
+              base_horizon=500.0, rungs=1)
+    assert rr.winner.key() == Variant(GREEDY_P, 600.0).key()
+    assert rr.winner_score == rr.incumbent_score
+
+
+# --------------------------------------------------------------------------- #
+# determinism                                                                  #
+# --------------------------------------------------------------------------- #
+CHAOS = "breakdown(mtbf=8000,repair=1500)"
+CHAOS_SPEC = ("every=3000;rungs=2;margin=0.02;dwell=6000;"
+              f"policies={GREEDY_P}|{GREEDY_PM}")
+
+
+def _chaos_tuned(step=None, snapshot_at=None):
+    """One chaos-narrated, autotuned run; optionally step-partitioned
+    and/or round-tripped through a snapshot mid-run."""
+    ses = api.open_session(NODES, GREEDY_P)
+    ses.attach_narrator(api.parse_narrator(CHAOS, seed=9))
+    tuner = api.autotune(ses, CHAOS_SPEC, seed=7)
+    ses.submit(api.parse_workload("lublin", n_jobs=60, n_nodes=NODES,
+                                  seed=3, load=1.0))
+    if snapshot_at is not None:
+        ses.step_until(snapshot_at)
+        ses = api.SimSession.restore(ses.snapshot())
+        tuner = ses.autotuner
+        assert tuner is not None
+    if step is None:
+        ses.run_to_exhaustion()
+    else:
+        while ses.step(step):
+            pass
+    return result_dict(ses.result()), tuner.decisions
+
+
+def test_decision_log_is_partition_invariant_under_chaos():
+    ref, dec_ref = _chaos_tuned()
+    assert dec_ref                          # the tuner actually fired
+    for step in (1, 7):
+        r, dec = _chaos_tuned(step=step)
+        assert r == ref and dec == dec_ref
+
+
+def test_decision_log_survives_snapshot_restore():
+    ref, dec_ref = _chaos_tuned()
+    r, dec = _chaos_tuned(snapshot_at=5000.0)
+    assert r == ref and dec == dec_ref
+
+
+def test_tuner_restore_in_fresh_process(tmp_path):
+    ref, dec_ref = _chaos_tuned()
+    ses = api.open_session(NODES, GREEDY_P)
+    ses.attach_narrator(api.parse_narrator(CHAOS, seed=9))
+    api.autotune(ses, CHAOS_SPEC, seed=7)
+    ses.submit(api.parse_workload("lublin", n_jobs=60, n_nodes=NODES,
+                                  seed=3, load=1.0))
+    ses.step_until(5000.0)
+    path = str(tmp_path / "snap.json")
+    ses.snapshot().save(path)
+    prog = (
+        "import dataclasses, json, sys\n"
+        "from repro.sched.session import SimSession\n"
+        "ses = SimSession.restore(sys.argv[1])\n"
+        "ses.run_to_exhaustion()\n"
+        "d = dataclasses.asdict(ses.result())\n"
+        "d.pop('sim_wall_s')\n"
+        "print(json.dumps({'result': d, "
+        "'decisions': ses.autotuner.decisions}))\n"
+    )
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", prog, path],
+                         capture_output=True, text=True, check=True, env=env)
+    fresh = json.loads(out.stdout)
+    assert fresh["result"] == json.loads(json.dumps(ref))
+    assert fresh["decisions"] == json.loads(json.dumps(dec_ref))
+
+
+def test_incumbent_pinned_tuner_is_bit_identical_to_untuned():
+    """A tuner whose portfolio is only the incumbent can never swap — the
+    live trajectory must be byte-for-byte the untuned run's, including
+    across a snapshot/restore round trip."""
+    def cell(tuned, snapshot_at=None):
+        ses = _rack_failure_session(jobs=150, join_t=7000.0)
+        if tuned:
+            api.autotune(ses, "every=2000;rungs=2", seed=0)
+        if snapshot_at is not None:
+            ses.step_until(snapshot_at)
+            ses = api.SimSession.restore(ses.snapshot())
+        ses.run_to_exhaustion()
+        return ses, result_dict(ses.result())
+
+    _, ref = cell(tuned=False)
+    ses, r = cell(tuned=True)
+    assert r == ref
+    assert ses.autotuner.decisions
+    assert all(d["reason"] == "incumbent-best"
+               for d in ses.autotuner.decisions)
+    _, r2 = cell(tuned=True, snapshot_at=3000.0)
+    assert r2 == ref
+
+
+def test_live_promotion_beats_incumbent_fixed_run():
+    """The bench scenario in miniature: the tuner swaps to the migration
+    policy after the rack failure and ends with a strictly lower max
+    stretch than the fixed incumbent."""
+    fixed = _rack_failure_session(join_t=7000.0, jobs=150)
+    fixed.run_to_exhaustion()
+    ses = _rack_failure_session(join_t=7000.0, jobs=150)
+    tuner = api.autotune(ses, SPEC, seed=3)
+    ses.run_to_exhaustion()
+    assert any(d["swapped"] for d in tuner.decisions)
+    assert ses.policy_name == GREEDY_PM
+    assert (ses.result(light=True).max_stretch
+            < fixed.result(light=True).max_stretch)
+    # decision records are wall-clock-free (bit-identical replays)
+    for d in tuner.decisions:
+        assert not any("wall" in k for k in d)
+
+
+# --------------------------------------------------------------------------- #
+# wiring: api facade, CLI, serve                                               #
+# --------------------------------------------------------------------------- #
+def test_autotune_facade_requires_named_policy():
+    from repro.sched.engine import Engine, SimParams
+
+    ses = _rack_failure_session()
+    tuner = api.autotune(ses, "every=2000", seed=1)
+    assert ses.autotuner is tuner and tuner.seed == 1
+    # an ad-hoc composed Policy instance has no rebuildable reference —
+    # the tuner could neither race nor restore it
+    from repro.sched.components import (FCFSStart, OptMin, QueueSubmit,
+                                        ReclaimNodes, compose)
+    pol = compose("ad-hoc", QueueSubmit(), ReclaimNodes(), FCFSStart(),
+                  OptMin())
+    specs = api.make_trace(api.parse_workload("lublin", n_jobs=5,
+                                              n_nodes=8, seed=0))
+    anon = api.SimSession.from_engine(
+        Engine(specs, pol, SimParams(n_nodes=8)))
+    with pytest.raises(ValueError, match="rebuildable"):
+        api.autotune(anon, "every=2000")
+
+
+def _write_script(path, lines):
+    with open(path, "w") as f:
+        for ln in lines:
+            f.write((ln if isinstance(ln, str) else json.dumps(ln)) + "\n")
+
+
+def test_cli_session_autotune_and_tune_op(tmp_path, capsys):
+    log = tmp_path / "decisions.jsonl"
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [
+        {"op": "submit", "workload": "lublin", "jobs": 80, "seed": 7,
+         "load": 1.1},
+        {"op": "inject", "kind": "fail", "t": 2050, "nodes": RACK},
+        {"op": "inject", "kind": "join", "t": 6000, "nodes": RACK},
+        {"op": "step_until", "t": 2500},
+        {"op": "tune"},
+        {"op": "run"},
+        {"op": "result", "light": True},
+    ])
+    assert cli_main(["session", "--script", str(script),
+                     "--policy", GREEDY_P, "--nodes", str(NODES),
+                     "--autotune", "every=4000;horizon=2000;rungs=2;"
+                     f"margin=0.01;dwell=0;policies={GREEDY_PM}",
+                     "--decision-log", str(log)]) == 0
+    lines = [json.loads(l) for l in capsys.readouterr().out.splitlines()]
+    tune_line = next(l for l in lines if l["kind"] == "tune")
+    assert tune_line["swapped"] is True
+    assert tune_line["policy"] == GREEDY_PM
+    logged = [json.loads(l) for l in log.read_text().splitlines()]
+    assert logged and logged[0]["swapped"] is True
+
+
+def test_cli_autotune_with_restore_refused(tmp_path, capsys):
+    ses = _rack_failure_session()
+    ses.step_until(1000.0)
+    snap_path = str(tmp_path / "snap.json")
+    ses.snapshot().save(snap_path)
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [{"op": "run"}])
+    assert cli_main(["session", "--script", str(script),
+                     "--restore", snap_path,
+                     "--autotune", "every=100"]) == 2
+    assert "--autotune cannot be combined" in capsys.readouterr().err
+
+
+def test_cli_tune_op_without_tuner_fails(tmp_path, capsys):
+    script = tmp_path / "script.jsonl"
+    _write_script(script, [{"op": "tune"}])
+    assert cli_main(["session", "--script", str(script),
+                     "--policy", "FCFS", "--nodes", "16"]) == 2
+    assert "no autotuner attached" in capsys.readouterr().err
+
+
+def test_cli_tune_subcommand(capsys):
+    assert cli_main([
+        "tune", "--policy", GREEDY_P, "--spec",
+        f"every=1500;horizon=4000;rungs=2;margin=0.01;dwell=0;"
+        f"policies={GREEDY_PM}",
+        "--workload", "lublin", "--jobs", "120", "--nodes", str(NODES),
+        "--loads", "1.1", "--seeds", "7",
+        "--fail-at", "2050", "--fail-nodes", "8", "--join-at", "7000",
+    ]) == 0
+    out = capsys.readouterr().out
+    assert "decision(s)" in out and "final policy" in out
+
+
+def test_serve_open_with_autotune_and_tune_op(tmp_path):
+    from repro.serve.protocol import MUTATING_OPS, ProtocolError
+    from repro.serve.registry import SessionRegistry, SessionStore
+
+    assert "tune" in MUTATING_OPS
+    reg = SessionRegistry(SessionStore(str(tmp_path / "store")))
+    reg.apply_mutating("t", "s0", "open", {
+        "policy": GREEDY_P, "nodes": NODES,
+        "autotune": "every=4000;horizon=2000;rungs=2;margin=0.01;"
+                    f"dwell=0;policies={GREEDY_PM}"}, seq=0)
+    reg.apply_mutating("t", "s0", "submit", {
+        "workload": "lublin", "jobs": 80, "seed": 7, "load": 1.1,
+        "nodes": NODES}, seq=1)
+    reg.apply_mutating("t", "s0", "inject",
+                       {"kind": "fail", "t": 2050, "nodes": RACK}, seq=2)
+    reg.apply_mutating("t", "s0", "inject",
+                       {"kind": "join", "t": 6000, "nodes": RACK}, seq=3)
+    reg.apply_mutating("t", "s0", "step_until", {"t": 2500}, seq=4)
+    resp = reg.apply_mutating("t", "s0", "tune", {}, seq=5)
+    assert resp["swapped"] is True and resp["policy"] == GREEDY_PM
+    # a session opened without a tuner refuses the op deterministically
+    reg.apply_mutating("t", "plain", "open",
+                       {"policy": "FCFS", "nodes": 16}, seq=0)
+    with pytest.raises(ProtocolError, match="no autotuner"):
+        reg.apply_mutating("t", "plain", "tune", {}, seq=1)
